@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: fused STORM kernels vs pure-jnp oracle.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU throughput); the jnp reference path is the meaningful
+CPU number and the ratio documents interpret-mode overhead. Rows:
+name,us_per_call,derived (derived = Melem/s for the ref path).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+SHAPES = [
+    (4096, 16, 512, 4),    # paper-scale d (UCI): n, d, R, p
+    (4096, 128, 2048, 4),  # probe-scale d
+    (1024, 1024, 4096, 4), # d_model-scale probes
+]
+
+
+def _time(fn: Callable[[], jax.Array], iters: int = 5) -> float:
+    fn().block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(print_fn=print) -> List[str]:
+    rows = []
+    for (n, d, r, p) in SHAPES:
+        kx, kw = jax.random.split(jax.random.PRNGKey(n + d))
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (p, d, r))
+        mask = jnp.ones((n,), jnp.float32)
+
+        hash_ref = jax.jit(lambda: ref.srp_hash(x, w))
+        us = _time(hash_ref)
+        rate = n * r / us  # codes per us == Melem/s
+        rows.append(f"kern/srp_hash/ref/n{n}_d{d}_R{r},{us:.0f},{rate:.1f}")
+
+        hist_ref = jax.jit(lambda: ref.hash_histogram(x, w, mask))
+        us = _time(hist_ref)
+        rows.append(f"kern/hash_histogram/ref/n{n}_d{d}_R{r},{us:.0f},"
+                    f"{n * r / us:.1f}")
+
+        q = jax.random.normal(jax.random.PRNGKey(3), (16, d))
+        counts = jnp.ones((r, 1 << p), jnp.int32)
+        query_ref = jax.jit(lambda: ref.sketch_query(q, w, counts))
+        us = _time(query_ref)
+        rows.append(f"kern/sketch_query/ref/m16_d{d}_R{r},{us:.0f},"
+                    f"{16 * r / us:.2f}")
+    for row in rows:
+        print_fn(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper Fig. 4: sketch memory vs linear-regression MSE, STORM vs baselines.
+
+Four methods x three UCI-matched datasets x a ladder of memory budgets.
+STORM rows use int16 counters (the smallest standard dtype, as the paper
+does for its baselines). Output rows: ``name,us_per_call,derived`` where
+``derived`` = train-set MSE and ``us_per_call`` = fit wall time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, dfo, regression
+from repro.data import datasets
+
+SEEDS = 3
+
+
+def _budgets(d: int):
+    """Memory ladder incl. the sampling interpolation threshold (m ~ d+1) —
+    the double-descent peak the paper's Fig. 4 centres on."""
+    dd_peak = 4 * (d + 1) * (d + 1)  # m = d+1 float32 rows
+    return tuple(sorted({dd_peak, 1 << 10, 1 << 12, 1 << 14, 1 << 16}))
+
+
+def _storm_config(budget_bytes: int) -> regression.StormRegressorConfig:
+    rows = max(8, budget_bytes // (16 * 2))  # B=16 buckets, int16
+    return regression.StormRegressorConfig(
+        rows=rows,
+        count_dtype="int16",
+        l2=0.02,  # paper §6: the sketch "naturally accommodates regularization"
+        dfo=dfo.DFOConfig(steps=250, num_queries=8, sigma=0.5,
+                          sigma_decay=0.995, learning_rate=2.0, decay=0.995,
+                          average_tail=0.5),
+    )
+
+
+def run(print_fn=print) -> List[str]:
+    rows_out = []
+    for spec in datasets.UCI_MATCHED:
+        x, y, _ = datasets.make_uci_matched(jax.random.PRNGKey(hash(spec.name) % 997), spec)
+        var_y = float(jnp.var(y))
+        ols_mse = float(baselines.ols(x, y).mse(x, y))
+        rows_out.append(f"fig4/{spec.name}/ols,0,{ols_mse:.5f}")
+        rows_out.append(f"fig4/{spec.name}/var_y,0,{var_y:.5f}")
+        for budget in _budgets(spec.d):
+            m = max(spec.d + 2, budget // ((spec.d + 1) * 4))  # float32 rows
+            mses = {"storm": [], "uniform": [], "leverage": [], "cw": []}
+            t0 = time.perf_counter()
+            for s in range(SEEDS):
+                key = jax.random.PRNGKey(1000 * s + budget % 997)
+                k1, k2, k3, k4 = jax.random.split(key, 4)
+                fit = regression.fit(k1, x, y, _storm_config(budget))
+                mses["storm"].append(float(fit.mse(x, y)))
+                mses["uniform"].append(
+                    float(baselines.uniform_sampling(k2, x, y, m).mse(x, y)))
+                mses["leverage"].append(
+                    float(baselines.leverage_sampling(k3, x, y, m).mse(x, y)))
+                mses["cw"].append(
+                    float(baselines.clarkson_woodruff(k4, x, y, m).mse(x, y)))
+            dt_us = (time.perf_counter() - t0) / (4 * SEEDS) * 1e6
+            for name, vals in mses.items():
+                mean = sum(vals) / len(vals)
+                rows_out.append(
+                    f"fig4/{spec.name}/{name}@{budget}B,{dt_us:.0f},{mean:.5f}"
+                )
+    for r in rows_out:
+        print_fn(r)
+    return rows_out
+
+
+if __name__ == "__main__":
+    run()

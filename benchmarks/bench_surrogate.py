@@ -1,0 +1,40 @@
+"""Paper Fig. 3: PRP surrogate landscape — convexity values and slope-vs-p.
+
+(a) surrogate loss at sample inner products for p in {1,2,4,8,16};
+(b) |slope| at <a,b> = 0.1 — the paper's argument that p=4 is the sharpest.
+Rows: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import losses
+
+POWERS = (1, 2, 4, 8, 16)
+
+
+def run(print_fn=print) -> List[str]:
+    rows = []
+    t0 = time.perf_counter()
+    for p in POWERS:
+        for t in (0.0, 0.25, 0.5, 0.75):
+            val = float(losses.prp_surrogate(jnp.asarray(t), p))
+            rows.append(f"fig3a/p{p}/t{t},0,{val:.6f}")
+    slopes = {}
+    for p in POWERS:
+        slopes[p] = float(losses.surrogate_slope_at(0.1, p))
+        rows.append(f"fig3b/slope@0.1/p{p},0,{slopes[p]:.6f}")
+    argmax = max(slopes, key=slopes.get)
+    dt_us = (time.perf_counter() - t0) * 1e6 / (len(POWERS) * 5)
+    rows.append(f"fig3b/sharpest_p,{dt_us:.0f},{argmax}")
+    for r in rows:
+        print_fn(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

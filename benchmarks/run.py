@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure + substrate benches.
+
+Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
+``python -m benchmarks.run [fig3] [fig4] [fig5] [kernels] [distributed]``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_classification, bench_distributed,
+                            bench_kernels, bench_regression, bench_surrogate)
+
+    suites = {
+        "fig3": bench_surrogate.run,
+        "fig4": bench_regression.run,
+        "fig5": bench_classification.run,
+        "kernels": bench_kernels.run,
+        "distributed": bench_distributed.run,
+    }
+    selected = [a for a in sys.argv[1:] if a in suites] or list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name in selected:
+        suites[name]()
+    print(f"# total_seconds,{time.perf_counter() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end LM training driver: data pipeline -> model -> fault-tolerant
+loop with checkpointing, on any --arch from the registry (reduced or full).
+
+Default trains a ~100M-parameter dense model for a few hundred steps on a
+synthetic token stream (deterministic per step — restart-replay exact):
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --smoke          # CI-sized
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-7b --smoke-config
+
+Resume after interruption with the same command (auto-resumes from the
+newest intact checkpoint in --ckpt-dir).
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+from repro.train import trainer
+
+
+def model_100m() -> ModelConfig:
+    """~100M-param llama-style dense config (12L x 768)."""
+    return ModelConfig(
+        name="dense-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32768, attn_chunk=256, xent_chunk=256,
+    )
+
+
+def synthetic_stream(cfg: ModelConfig, batch: int, seq: int):
+    """Deterministic Zipf-ish Markov token stream, seeded by step."""
+
+    def data_for_step(step: int):
+        k = jax.random.fold_in(jax.random.PRNGKey(1234), step)
+        k1, k2 = jax.random.split(k)
+        # low-entropy structure so the loss visibly falls
+        base = jax.random.randint(k1, (batch, seq // 8), 0, 256)
+        toks = jnp.repeat(base, 8, axis=1)
+        noise = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)
+        keep = jax.random.uniform(k2, (batch, seq)) < 0.9
+        toks = jnp.where(keep, toks, noise)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    return data_for_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dense-100m",
+                    choices=("dense-100m",) + registry.ARCH_IDS)
+    ap.add_argument("--smoke-config", action="store_true",
+                    help="use the reduced config for --arch")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + 20 steps (CI)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = registry.get_config("qwen2-7b", smoke=True)
+        args.steps, args.batch, args.seq = 20, 4, 64
+    elif args.arch == "dense-100m":
+        cfg = model_100m()
+    else:
+        cfg = registry.get_config(args.arch, smoke=args.smoke_config)
+
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps} "
+          f"batch={args.batch} seq={args.seq}")
+
+    tcfg = ts.TrainConfig(
+        optimizer=opt_lib.AdamWConfig(
+            learning_rate=args.lr, warmup_steps=max(10, args.steps // 20),
+            total_steps=args.steps,
+        )
+    )
+    loop = trainer.LoopConfig(
+        total_steps=args.steps,
+        ckpt_every=max(10, args.steps // 5),
+        ckpt_dir=args.ckpt_dir,
+        log_every=10,
+    )
+    data = synthetic_stream(cfg, args.batch, args.seq)
+
+    report = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop, data)
+    first = sum(report.losses[:5]) / max(len(report.losses[:5]), 1)
+    print(f"resumed_from={report.resumed_from} steps_run={report.steps_run}")
+    print(f"loss: first5={first:.4f} final={report.final_loss:.4f}")
+    print(f"stragglers={report.straggler_steps} restores={report.restores}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""STORM reproduction: sketched ERM core + multi-pod JAX LM framework."""
+
+__version__ = "1.0.0"

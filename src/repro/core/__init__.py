@@ -1,0 +1,13 @@
+"""STORM core: the paper's contribution as composable JAX modules."""
+
+from repro.core import (  # noqa: F401
+    baselines,
+    classification,
+    dfo,
+    distributed,
+    losses,
+    lsh,
+    privacy,
+    regression,
+    sketch,
+)

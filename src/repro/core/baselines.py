@@ -1,0 +1,92 @@
+"""Compressed-regression baselines from the paper's experimental section.
+
+* uniform random sampling (keep ``m`` rows, solve OLS),
+* leverage-score sampling (sample ``m`` rows ∝ leverage, reweight, solve),
+* Clarkson–Woodruff count-sketch-and-solve (``S X theta ≈ S y`` with a
+  CountSketch ``S``),
+* the exact OLS oracle.
+
+Each returns a fitted ``(theta, intercept)`` plus its *memory footprint in
+bytes* so the mem-vs-MSE benchmark (paper Fig. 4) compares like for like.
+All baselines store float32, the smallest standard dtype, per the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LinearFit(NamedTuple):
+    theta: Array
+    intercept: Array
+    memory_bytes: int
+
+    def predict(self, x: Array) -> Array:
+        return x @ self.theta + self.intercept
+
+    def mse(self, x: Array, y: Array) -> Array:
+        return jnp.mean((self.predict(x) - y) ** 2)
+
+
+def _with_bias(x: Array) -> Array:
+    return jnp.concatenate([x, jnp.ones((x.shape[0], 1), x.dtype)], axis=-1)
+
+
+def _solve(xb: Array, y: Array, memory_bytes: int, ridge: float = 1e-6) -> LinearFit:
+    d = xb.shape[-1]
+    gram = xb.T @ xb + ridge * jnp.eye(d, dtype=xb.dtype)
+    coef = jnp.linalg.solve(gram, xb.T @ y)
+    return LinearFit(theta=coef[:-1], intercept=coef[-1], memory_bytes=memory_bytes)
+
+
+def ols(x: Array, y: Array) -> LinearFit:
+    """Exact least squares on the full dataset (the oracle)."""
+    xb = _with_bias(x)
+    return _solve(xb, y, memory_bytes=xb.size * 4 + y.size * 4)
+
+
+def uniform_sampling(key: Array, x: Array, y: Array, m: int) -> LinearFit:
+    """Keep ``m`` uniformly sampled rows; memory = m (d+1) float32."""
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, shape=(m,), replace=n < m)
+    xb = _with_bias(x[idx])
+    return _solve(xb, y[idx], memory_bytes=m * (x.shape[-1] + 1) * 4)
+
+
+def leverage_scores(x: Array) -> Array:
+    """Exact statistical leverage ``h_i = ||U_i||^2`` via thin QR."""
+    q, _ = jnp.linalg.qr(_with_bias(x))
+    return jnp.sum(q * q, axis=-1)
+
+
+def leverage_sampling(key: Array, x: Array, y: Array, m: int) -> LinearFit:
+    """Sample ``m`` rows with prob ∝ leverage, reweight by 1/sqrt(m p_i)."""
+    scores = leverage_scores(x)
+    p = scores / jnp.sum(scores)
+    idx = jax.random.choice(key, x.shape[0], shape=(m,), p=p, replace=True)
+    w = 1.0 / jnp.sqrt(m * p[idx] + 1e-12)
+    xb = _with_bias(x[idx]) * w[:, None]
+    yb = y[idx] * w
+    return _solve(xb, yb, memory_bytes=m * (x.shape[-1] + 1) * 4)
+
+
+def clarkson_woodruff(key: Array, x: Array, y: Array, m: int) -> LinearFit:
+    """CountSketch-and-solve: ``min_theta ||S(X theta - y)||`` (CW'09).
+
+    ``S`` maps each row to one of ``m`` buckets with a random sign; ``S X`` is
+    a segment-sum — one streaming pass, mergeable, O(m d) memory.
+    """
+    n = x.shape[0]
+    k_row, k_sign = jax.random.split(key)
+    rows = jax.random.randint(k_row, (n,), 0, m)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=x.dtype)
+    xb = _with_bias(x) * signs[:, None]
+    yb = y * signs
+    sx = jax.ops.segment_sum(xb, rows, num_segments=m)
+    sy = jax.ops.segment_sum(yb, rows, num_segments=m)
+    return _solve(sx, sy, memory_bytes=m * (x.shape[-1] + 2) * 4)

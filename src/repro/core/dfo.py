@@ -1,0 +1,160 @@
+"""Derivative-free optimization over sketch queries (paper Algorithm 2).
+
+The sketch gives black-box access to the surrogate empirical risk; gradients
+are estimated by antithetic sphere sampling (Nesterov–Spokoiny):
+
+    g_hat = (d / (2 k sigma)) * sum_j [L(theta + sigma v_j) - L(theta - sigma v_j)] v_j
+
+with ``v_j`` uniform on the unit sphere. The paper queries ~10 points per
+step; we batch all ``2k`` queries into one hashed gather so a DFO step is a
+single fused call (DESIGN.md §3).
+
+The regression driver constrains the last coordinate of ``theta_tilde`` to
+``-1`` after every step (Algorithm 2's projection).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+LossFn = Callable[[Array], Array]  # (q, dim) or (dim,) -> (q,) or scalar
+
+
+class DFOResult(NamedTuple):
+    theta: Array
+    losses: Array  # (steps,) loss trace at the iterate
+
+
+@dataclasses.dataclass(frozen=True)
+class DFOConfig:
+    steps: int = 200
+    num_queries: int = 8          # k in the paper (σ-sphere points per step)
+    sigma: float = 0.5            # sphere radius (paper: 0.5)
+    sigma_decay: float = 1.0      # geometric σ schedule (smoothing-bias anneal)
+    learning_rate: float = 1.0
+    decay: float = 0.999          # geometric lr decay — stabilizes count noise
+    antithetic: bool = True
+    average_tail: float = 0.5     # Polyak-average this final fraction of iterates
+
+
+def _sphere(key: Array, k: int, dim: int) -> Array:
+    v = jax.random.normal(key, (k, dim))
+    return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def minimize(
+    loss_fn: LossFn,
+    theta0: Array,
+    key: Array,
+    config: DFOConfig,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> DFOResult:
+    """Minimize a black-box loss with batched sphere-sampling gradients.
+
+    Args:
+      loss_fn: maps a batch of parameter vectors ``(q, dim)`` to losses
+        ``(q,)`` — typically a batched sketch query.
+      theta0: ``(dim,)`` initial iterate.
+      key: PRNG key.
+      config: DFO hyperparameters.
+      project: optional projection applied after each update (e.g. pin the
+        homogeneous coordinate to -1).
+
+    Returns:
+      ``DFOResult`` with the final iterate and the per-step loss trace.
+    """
+    dim = theta0.shape[-1]
+    proj = project if project is not None else (lambda t: t)
+
+    def step(carry, key_t):
+        theta, lr, sigma = carry
+        v = _sphere(key_t, config.num_queries, dim)
+        if config.antithetic:
+            pts = jnp.concatenate([theta + sigma * v, theta - sigma * v], axis=0)
+            vals = loss_fn(pts)
+            diff = vals[: config.num_queries] - vals[config.num_queries :]
+            grad = (dim / (2.0 * config.num_queries * sigma)) * (diff @ v)
+        else:
+            pts = theta + sigma * v
+            vals = loss_fn(pts)
+            base = loss_fn(theta[None, :])[0]
+            grad = (dim / (config.num_queries * sigma)) * ((vals - base) @ v)
+        theta = proj(theta - lr * grad)
+        loss_here = loss_fn(theta[None, :])[0]
+        carry = (theta, lr * config.decay, sigma * config.sigma_decay)
+        return carry, (loss_here, theta)
+
+    keys = jax.random.split(key, config.steps)
+    init = (proj(theta0), config.learning_rate, config.sigma)
+    (theta, _, _), (losses, iterates) = jax.lax.scan(step, init, keys)
+
+    if config.average_tail > 0.0:
+        # Polyak averaging over the noisy tail — variance ↓ without bias for a
+        # convex basin; re-projected in case the average leaves the constraint.
+        tail = max(1, int(config.steps * config.average_tail))
+        theta = proj(jnp.mean(iterates[-tail:], axis=0))
+    return DFOResult(theta=theta, losses=losses)
+
+
+def quadratic_refine(
+    loss_fn: LossFn,
+    theta: Array,
+    key: Array,
+    radius: float = 0.3,
+    num_samples: Optional[int] = None,
+    ridge: float = 1e-6,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> Array:
+    """Model-based DFO polish (Conn–Scheinberg–Vicente, the paper's ref [13]).
+
+    Fits a full quadratic model of the black-box loss from samples in a trust
+    region around ``theta`` and jumps to the model minimizer (clipped to the
+    region). One shot of this snaps a sphere-sampling iterate much closer to
+    the basin floor than further noisy first-order steps, because the fit
+    averages O(d^2) queries.
+    """
+    dim = theta.shape[-1]
+    proj = project if project is not None else (lambda t: t)
+    n_feat = 1 + dim + dim * (dim + 1) // 2
+    m = num_samples if num_samples is not None else 3 * n_feat
+
+    pts = theta + radius * jax.random.normal(key, (m, dim)) / jnp.sqrt(dim)
+    vals = loss_fn(pts)
+
+    delta = pts - theta
+    iu = jnp.triu_indices(dim)
+    quad = (delta[:, :, None] * delta[:, None, :])[:, iu[0], iu[1]]
+    feats = jnp.concatenate([jnp.ones((m, 1)), delta, quad], axis=-1)
+    gram = feats.T @ feats + ridge * jnp.eye(n_feat)
+    coef = jnp.linalg.solve(gram, feats.T @ vals)
+
+    g = coef[1 : 1 + dim]
+    h_flat = coef[1 + dim :]
+    # Model: val = c + g.delta + 0.5 delta^T H delta. The fitted coefficient of
+    # delta_i^2 is H_ii/2 and of delta_i delta_j (i<j) is H_ij, so H = U + U^T
+    # for the upper-triangular coefficient matrix U.
+    u = jnp.zeros((dim, dim)).at[iu].set(h_flat)
+    h = u + u.T
+    # Regularized Newton step on the model; clip to the trust region.
+    evals = jnp.linalg.eigvalsh(h)
+    lam = jnp.maximum(1e-4, 1e-3 - jnp.min(evals))
+    step = -jnp.linalg.solve(h + lam * jnp.eye(dim), g)
+    nrm = jnp.linalg.norm(step)
+    step = step * jnp.minimum(1.0, radius / (nrm + 1e-12))
+    cand = proj(theta + step)
+    better = loss_fn(cand[None, :])[0] <= loss_fn(theta[None, :])[0]
+    return jnp.where(better, cand, theta)
+
+
+def pin_last_coordinate(value: float = -1.0) -> Callable[[Array], Array]:
+    """Projection pinning ``theta_tilde[-1]`` (Algorithm 2's constraint)."""
+
+    def proj(t: Array) -> Array:
+        return t.at[-1].set(value)
+
+    return proj

@@ -1,0 +1,73 @@
+"""Analytic surrogate losses (the functions the sketch estimates).
+
+These are the closed-form expectations of the sketch queries — used as
+oracles in tests, for the p-sweep benchmark (paper Fig. 3), and for the
+"exact surrogate" ablation where we optimize the analytic loss instead of the
+sketch estimate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _f(inner: Array) -> Array:
+    """``f(a, b) = 1 - acos(<a, b>) / pi`` on the clipped inner product."""
+    return 1.0 - jnp.arccos(jnp.clip(inner, -1.0, 1.0)) / jnp.pi
+
+
+def prp_surrogate(inner: Array, planes: int) -> Array:
+    """PRP regression surrogate of Theorem 2 (per-example).
+
+    ``g = 0.5 f(<a,b>)^p + 0.5 f(-<a,b>)^p`` — convex, minimized exactly where
+    ``<a, b> = 0`` (p >= 2), i.e. at the least-squares solution.
+    """
+    return 0.5 * _f(inner) ** planes + 0.5 * _f(-inner) ** planes
+
+
+def prp_empirical_risk(theta: Array, x: Array, y: Array, planes: int) -> Array:
+    """Mean PRP surrogate over a dataset, querying with ``[theta, -1]``.
+
+    Matches the sketch estimator: both data ``[x, y]`` and query ``[theta,-1]``
+    are mapped onto the unit sphere exactly as the hashes do (data pre-scaled
+    by the caller; query normalized here).
+    """
+    tt = jnp.concatenate([theta, -jnp.ones((1,), theta.dtype)])
+    tt = tt / jnp.maximum(jnp.linalg.norm(tt), 1e-12)
+    z = jnp.concatenate([x, y[:, None]], axis=-1)
+    inner = z @ tt
+    return jnp.mean(prp_surrogate(inner, planes))
+
+
+def classification_surrogate(margin: Array, planes: int) -> Array:
+    """Theorem 3 margin loss ``phi(t) = 2^p (1 - acos(-t)/pi)^p``, ``t = y<theta,x>``."""
+    return (2.0 ** planes) * _f(-margin) ** planes
+
+
+def classification_empirical_risk(
+    theta: Array, x: Array, y: Array, planes: int
+) -> Array:
+    """Mean classification surrogate; ``y in {-1, +1}``; data pre-scaled."""
+    th = theta / jnp.maximum(jnp.linalg.norm(theta), 1e-12)
+    margin = y * (x @ th)
+    return jnp.mean(classification_surrogate(margin, planes))
+
+
+# --- reference losses (for baselines / validation) -------------------------
+
+
+def l2_empirical_risk(theta: Array, x: Array, y: Array) -> Array:
+    return jnp.mean((x @ theta - y) ** 2)
+
+
+def hinge_empirical_risk(theta: Array, x: Array, y: Array) -> Array:
+    return jnp.mean(jnp.maximum(0.0, 1.0 - y * (x @ theta)))
+
+
+def surrogate_slope_at(inner: float, planes: int) -> Array:
+    """|dg/d<a,b>| at a given inner product — reproduces paper Fig. 3(b)."""
+    g = lambda t: prp_surrogate(t, planes)
+    return jnp.abs(jax.grad(g)(jnp.asarray(inner)))

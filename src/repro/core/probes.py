@@ -1,0 +1,133 @@
+"""STORM linear probes on LM hidden states (DESIGN.md §4, integration #2).
+
+This is the paper's regression running at `d_model` scale inside the LM
+framework: pooled hidden states from a frozen model are streamed into a PRP
+sketch together with scalar targets, the states are discarded, and a linear
+value-head is recovered from the counters alone. Each data-parallel shard
+sketches locally; the merge is the usual integer psum.
+
+At d_model = 4096 the hashing matmul is the hot loop — exactly what the
+Pallas kernels accelerate on TPU (`kernels/ops.build_sketch`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfo, lsh, regression, sketch as sketch_lib
+from repro.models import model
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    rows: int = 2048
+    planes: int = 4
+    pool: str = "mean"            # mean | last
+    batch: int = 256
+    regressor: regression.StormRegressorConfig = dataclasses.field(
+        default_factory=lambda: regression.StormRegressorConfig(rows=2048)
+    )
+
+
+class ProbeState(NamedTuple):
+    """Everything an edge worker retains after seeing its stream."""
+
+    sketch: sketch_lib.Sketch
+    params: lsh.LSHParams
+    x_mean: Array
+    x_scale: Array
+    y_mean: Array
+    y_scale: Array
+    scale: Array                  # unit-ball scale factor
+
+
+def pool_hidden(hidden: Array, pool: str) -> Array:
+    """(B, S, d) -> (B, d)."""
+    if pool == "mean":
+        return hidden.mean(axis=1)
+    if pool == "last":
+        return hidden[:, -1, :]
+    raise ValueError(pool)
+
+
+def extract_features(
+    params: Any, cfg: ModelConfig, batch: Dict[str, Array], pool: str
+) -> Array:
+    """Frozen-model features for a token batch."""
+    hidden, _ = model.forward(params, cfg, batch)
+    return pool_hidden(hidden.astype(jnp.float32), pool)
+
+
+def sketch_features(
+    key: Array,
+    feats: Array,          # (N, d_model) pooled features
+    targets: Array,        # (N,) scalar regression targets
+    config: Optional[ProbeConfig] = None,
+) -> ProbeState:
+    """One-pass PRP sketch of (features, target) pairs; data discardable after."""
+    config = config or ProbeConfig()
+    xm, xs = feats.mean(0), feats.std(0) + 1e-8
+    ym, ys = targets.mean(), targets.std() + 1e-8
+    z = jnp.concatenate(
+        [(feats - xm) / xs, ((targets - ym) / ys)[:, None]], axis=-1
+    )
+    zs, c = lsh.scale_to_unit_ball(z)
+    params = lsh.init_srp(key, config.rows, config.planes, z.shape[1] + 2)
+    sk = sketch_lib.sketch_dataset(params, zs, batch=config.batch, paired=True)
+    return ProbeState(sketch=sk, params=params, x_mean=xm, x_scale=xs,
+                      y_mean=ym, y_scale=ys, scale=c)
+
+
+def merge_probe_states(states) -> ProbeState:
+    """Merge shard-local probe sketches (statistics from the first shard;
+    production code would psum moments too — counters merge exactly)."""
+    base = states[0]
+    merged = base.sketch
+    for s in states[1:]:
+        merged = sketch_lib.merge(merged, s.sketch)
+    return base._replace(sketch=merged)
+
+
+class FittedProbe(NamedTuple):
+    theta: Array
+    intercept: Array
+
+    def predict(self, feats: Array) -> Array:
+        return feats @ self.theta + self.intercept
+
+    def mse(self, feats: Array, targets: Array) -> Array:
+        return jnp.mean((self.predict(feats) - targets) ** 2)
+
+
+def fit_probe(
+    key: Array, state: ProbeState, d_model: int,
+    dfo_config: Optional[dfo.DFOConfig] = None,
+) -> FittedProbe:
+    """Recover the linear value-head from counters only (Algorithm 2)."""
+    cfg_d = dfo_config or dfo.DFOConfig(
+        steps=300, num_queries=8, sigma=0.5, sigma_decay=0.995,
+        learning_rate=2.0, decay=0.995, average_tail=0.5,
+    )
+
+    def loss_fn(thetas: Array) -> Array:
+        return sketch_lib.query_theta(state.sketch, state.params, thetas,
+                                      paired=True)
+
+    proj = dfo.pin_last_coordinate(-1.0)
+    jloss = jax.jit(loss_fn)
+    result = dfo.minimize(jloss, jnp.zeros((d_model + 1,)), key, cfg_d,
+                          project=proj)
+    # sketch-validated fallback to theta=0 (see regression.fit)
+    both = jnp.stack([result.theta, proj(jnp.zeros((d_model + 1,)))])
+    theta_tilde = both[jnp.argmin(jloss(both))]
+    theta_std = theta_tilde[:d_model]
+    theta = state.y_scale * theta_std / state.x_scale
+    intercept = state.y_mean - jnp.dot(state.x_mean, theta)
+    return FittedProbe(theta=theta, intercept=intercept)

@@ -1,0 +1,165 @@
+"""End-to-end STORM linear regression (paper §4.1 + Algorithm 2).
+
+Pipeline: standardize -> scale ``[x, y]`` into the unit ball -> one-pass PRP
+sketch -> derivative-free minimization of the sketch-estimated surrogate ->
+un-standardize ``theta``.
+
+The sketch is built through ``repro.kernels.ops`` so the same driver runs the
+pure-jnp path on CPU and the fused Pallas path on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfo, lsh, sketch as sketch_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StormRegressorConfig:
+    rows: int = 2048              # R repetitions (paper: R=100 for 2D synthetics)
+    planes: int = 4               # p — paper finds p=4 the sharpest surrogate
+    batch: int = 512              # streaming insert batch
+    standardize: bool = True
+    norm_slack: float = 1.05      # unit-ball scaling slack (quantile-based)
+    count_dtype: str = "int32"
+    orthogonal: bool = False      # structured-orthogonal SRP (variance ↓, beyond-paper)
+    l2: float = 0.0               # optional ridge on the DFO objective (paper §6)
+    refine_steps: int = 1         # model-based quadratic polish passes (ref [13])
+    refine_radius: float = 0.3
+    dfo: dfo.DFOConfig = dataclasses.field(
+        default_factory=lambda: dfo.DFOConfig(
+            steps=400, num_queries=8, sigma=0.5, sigma_decay=0.995,
+            learning_rate=2.0, decay=0.995, average_tail=0.5,
+        )
+    )
+
+
+class FittedRegressor(NamedTuple):
+    theta: Array          # (d,) weights in the original feature space
+    intercept: Array      # scalar
+    theta_std: Array      # (d,) weights in standardized space (diagnostics)
+    sketch: sketch_lib.Sketch
+    params: lsh.LSHParams
+    losses: Array         # DFO loss trace
+    x_mean: Array
+    x_scale: Array
+    y_mean: Array
+    y_scale: Array
+
+    def predict(self, x: Array) -> Array:
+        return x @ self.theta + self.intercept
+
+    def mse(self, x: Array, y: Array) -> Array:
+        return jnp.mean((self.predict(x) - y) ** 2)
+
+
+def _standardize(x: Array, y: Array, enabled: bool):
+    if enabled:
+        xm, xs = jnp.mean(x, 0), jnp.std(x, 0) + 1e-8
+        ym, ys = jnp.mean(y), jnp.std(y) + 1e-8
+    else:
+        xm = jnp.zeros(x.shape[-1], x.dtype)
+        xs = jnp.ones(x.shape[-1], x.dtype)
+        ym = jnp.zeros((), y.dtype)
+        ys = jnp.ones((), y.dtype)
+    return (x - xm) / xs, (y - ym) / ys, xm, xs, ym, ys
+
+
+scale_to_unit_ball = lsh.scale_to_unit_ball  # canonical home: repro.core.lsh
+
+
+def fit(
+    key: Array,
+    x: Array,
+    y: Array,
+    config: Optional[StormRegressorConfig] = None,
+    prebuilt: Optional[tuple[sketch_lib.Sketch, lsh.LSHParams, Array]] = None,
+) -> FittedRegressor:
+    """Fit linear regression from a STORM sketch only.
+
+    Args:
+      key: PRNG key (hash functions + DFO sampling).
+      x: ``(n, d)`` features.
+      y: ``(n,)`` targets.
+      config: hyperparameters.
+      prebuilt: optionally a ``(sketch, params, scale)`` triple built elsewhere
+        (e.g. merged from distributed shards) — then ``x, y`` are used only for
+        standardization statistics and are never re-read.
+    """
+    config = config or StormRegressorConfig()
+    k_hash, k_dfo = jax.random.split(key)
+    d = x.shape[-1]
+
+    xs_, ys_, xm, xsc, ym, ysc = _standardize(x, y, config.standardize)
+    z = jnp.concatenate([xs_, ys_[:, None]], axis=-1)
+
+    if prebuilt is None:
+        z_scaled, _ = scale_to_unit_ball(z, config.norm_slack)
+        params = lsh.init_srp(
+            k_hash, config.rows, config.planes, d + 3, orthogonal=config.orthogonal
+        )
+        sk = sketch_lib.sketch_dataset(
+            params,
+            z_scaled,
+            batch=config.batch,
+            paired=True,
+            dtype=jnp.dtype(config.count_dtype),
+        )
+    else:
+        sk, params, _ = prebuilt
+
+    def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
+        est = sketch_lib.query_theta(sk, params, thetas, paired=True)
+        if config.l2 > 0.0:
+            est = est + config.l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
+        return est
+
+    loss_fn = jax.jit(loss_fn)
+    proj = dfo.pin_last_coordinate(-1.0)
+    theta0 = jnp.zeros((d + 1,), jnp.float32)
+    result = dfo.minimize(loss_fn, theta0, k_dfo, config.dfo, project=proj)
+    theta_tilde = result.theta
+    for i in range(config.refine_steps):
+        theta_tilde = dfo.quadratic_refine(
+            loss_fn,
+            theta_tilde,
+            jax.random.fold_in(k_dfo, i + 1),
+            radius=config.refine_radius / (2.0 ** i),
+            project=proj,
+        )
+    # Guard: at tiny sketches the frozen hash noise can drive the iterate to
+    # a worse-than-zero model; keep theta=0 (predict-the-mean) if the sketch
+    # itself prefers it.
+    both = jnp.stack([theta_tilde, proj(theta0)])
+    keep = jnp.argmin(loss_fn(both))
+    theta_tilde = both[keep]
+    theta_std = theta_tilde[:d]
+
+    # Un-standardize: y' = x' @ th  with x' = (x - xm)/xs, y' = (y - ym)/ys.
+    theta = ysc * theta_std / xsc
+    intercept = ym - jnp.dot(xm, theta)
+    return FittedRegressor(
+        theta=theta,
+        intercept=intercept,
+        theta_std=theta_std,
+        sketch=sk,
+        params=params,
+        losses=result.losses,
+        x_mean=xm,
+        x_scale=xsc,
+        y_mean=ym,
+        y_scale=ysc,
+    )
+
+
+def sketch_memory_bytes(config: StormRegressorConfig) -> int:
+    """Size of the persistent state the edge device ships (counters only)."""
+    itemsize = jnp.dtype(config.count_dtype).itemsize
+    return config.rows * (1 << config.planes) * itemsize

@@ -1,0 +1,194 @@
+"""The STORM sketch: an ``R x B`` array of integer counters.
+
+Insert: for each of the ``R`` rows, increment the bucket selected by that
+row's LSH function. Query with parameter codes: average the counts at
+``[r, code_r]`` over rows and divide by the number of inserts — an unbiased
+estimate of the mean collision probability ``(1/n) sum_i k(theta, x_i)``
+(RACE estimator).
+
+PRP inserts touch *two* buckets per row (codes of ``+z`` and ``-z``), so the
+PRP query divides by ``2n`` to estimate the mean surrogate loss
+``g = (k_+ + k_-) / 2`` of Theorem 2.
+
+The sketch is a pytree of two integer arrays, so merging is ``jnp.add`` and a
+distributed merge is ``jax.lax.psum`` (see ``core/distributed.py``).
+
+The pure-JAX update path here uses scatter-add; on TPU the fused Pallas
+kernel (``repro.kernels.storm_sketch``) replaces hash+scatter with a
+matmul + one-hot histogram held in VMEM (DESIGN.md §3). ``ops.py`` dispatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Sketch:
+    """STORM sketch state.
+
+    Attributes:
+      counts: ``(R, B)`` integer counters.
+      n: scalar int32 — number of *logical* inserts (a PRP insert counts 1).
+    """
+
+    counts: Array
+    n: Array
+
+    @property
+    def rows(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def buckets(self) -> int:
+        return self.counts.shape[1]
+
+    def memory_bytes(self) -> int:
+        return self.counts.size * self.counts.dtype.itemsize + 4
+
+
+def init_sketch(rows: int, buckets: int, dtype: jnp.dtype = jnp.int32) -> Sketch:
+    return Sketch(
+        counts=jnp.zeros((rows, buckets), dtype=dtype),
+        n=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _row_ids(codes: Array) -> Array:
+    # codes: (batch, R) -> row indices broadcast to the same shape.
+    return jnp.broadcast_to(jnp.arange(codes.shape[-1], dtype=jnp.int32), codes.shape)
+
+
+def update(sketch: Sketch, codes: Array) -> Sketch:
+    """Insert a batch of pre-hashed points.
+
+    Args:
+      sketch: current sketch.
+      codes: ``(batch, R)`` int32 bucket codes.
+    """
+    counts = sketch.counts.at[_row_ids(codes), codes].add(
+        jnp.ones((), dtype=sketch.counts.dtype)
+    )
+    return Sketch(counts=counts, n=sketch.n + jnp.int32(codes.shape[0]))
+
+
+def prp_update(sketch: Sketch, codes_pos: Array, codes_neg: Array) -> Sketch:
+    """Paired insert: one logical point increments two buckets per row."""
+    ones = jnp.ones((), dtype=sketch.counts.dtype)
+    counts = sketch.counts.at[_row_ids(codes_pos), codes_pos].add(ones)
+    counts = counts.at[_row_ids(codes_neg), codes_neg].add(ones)
+    return Sketch(counts=counts, n=sketch.n + jnp.int32(codes_pos.shape[0]))
+
+
+def insert(sketch: Sketch, params: lsh.LSHParams, x: Array) -> Sketch:
+    """Hash-and-insert raw (already scaled) points ``x: (batch, dim)``."""
+    return update(sketch, lsh.srp_codes(params, x))
+
+
+def prp_insert(sketch: Sketch, params: lsh.LSHParams, z: Array) -> Sketch:
+    """PRP hash-and-insert of pre-scaled concatenated examples ``[x, y]``."""
+    cpos, cneg = lsh.prp_codes(params, z)
+    return prp_update(sketch, cpos, cneg)
+
+
+def merge(a: Sketch, b: Sketch) -> Sketch:
+    """Mergeable-summary property: sketch of the union is the elementwise sum."""
+    return Sketch(counts=a.counts + b.counts, n=a.n + b.n)
+
+
+def query(sketch: Sketch, codes: Array, paired: bool = False) -> Array:
+    """RACE estimate of the mean collision probability at the query codes.
+
+    Args:
+      sketch: the sketch.
+      codes: ``(..., R)`` query codes.
+      paired: True for PRP sketches (two increments per insert -> divide by 2n).
+
+    Returns:
+      ``(...,)`` float32 estimates in ``[0, buckets]`` (≈ ``[0, 1]`` for large n).
+    """
+    gathered = sketch.counts[_row_ids(codes), codes].astype(jnp.float32)
+    mean_count = jnp.mean(gathered, axis=-1)
+    denom = jnp.maximum(sketch.n.astype(jnp.float32), 1.0)
+    if paired:
+        denom = 2.0 * denom
+    return mean_count / denom
+
+
+def query_theta(
+    sketch: Sketch, params: lsh.LSHParams, theta_tilde: Array, paired: bool = True
+) -> Array:
+    """Estimate the surrogate empirical risk at ``theta_tilde = [theta, -1]``."""
+    return query(sketch, lsh.query_codes(params, theta_tilde), paired=paired)
+
+
+# ---------------------------------------------------------------------------
+# Streaming convenience: fold a stream of batches into the sketch with scan.
+# ---------------------------------------------------------------------------
+
+
+def sketch_dataset(
+    params: lsh.LSHParams,
+    z: Array,
+    rows: Optional[int] = None,
+    buckets: Optional[int] = None,
+    batch: int = 1024,
+    paired: bool = True,
+    dtype: jnp.dtype = jnp.int32,
+    vary_axes: tuple = (),
+) -> Sketch:
+    """One-pass sketch of a full (pre-scaled) dataset ``z: (n, dim)``.
+
+    Pads ``n`` up to a batch multiple and scans, emulating the streaming
+    setting; padding rows are hashed but masked out of the counts.
+
+    ``vary_axes``: mesh axis names to mark the scan carry as varying over —
+    required when called inside ``shard_map`` (JAX vma tracking).
+    """
+    rows = rows if rows is not None else params.rows
+    buckets = buckets if buckets is not None else params.buckets
+    n, dim = z.shape
+    n_pad = (-n) % batch
+    zp = jnp.concatenate([z, jnp.zeros((n_pad, dim), z.dtype)], axis=0)
+    mask = jnp.concatenate(
+        [jnp.ones((n,), dtype), jnp.zeros((n_pad,), dtype)], axis=0
+    )
+    zp = zp.reshape(-1, batch, dim)
+    maskp = mask.reshape(-1, batch)
+
+    row_offset = (jnp.arange(rows, dtype=jnp.int32) * buckets)[None, :]
+
+    def flat_add(counts: Array, codes: Array, mb: Array) -> Array:
+        # flat 1-D scatter: ~17% faster than 2-D fancy indexing on CPU
+        # (EXPERIMENTS.md §Perf hillclimb A) and identical counts.
+        flat = counts.reshape(-1)
+        idx = (row_offset + codes).reshape(-1)
+        upd = jnp.broadcast_to(mb[:, None], codes.shape).reshape(-1)
+        return flat.at[idx].add(upd).reshape(rows, buckets)
+
+    def step(s: Sketch, xs) -> Tuple[Sketch, None]:
+        zb, mb = xs
+        mb = mb.astype(s.counts.dtype)
+        if paired:
+            cpos, cneg = lsh.prp_codes(params, zb)
+            counts = flat_add(s.counts, cpos, mb)
+            counts = flat_add(counts, cneg, mb)
+        else:
+            codes = lsh.srp_codes(params, zb)
+            counts = flat_add(s.counts, codes, mb)
+        return Sketch(counts=counts, n=s.n + jnp.sum(mb).astype(jnp.int32)), None
+
+    init = init_sketch(rows, buckets, dtype)
+    if vary_axes:
+        init = jax.tree.map(lambda t: jax.lax.pvary(t, tuple(vary_axes)), init)
+    out, _ = jax.lax.scan(step, init, (zp, maskp))
+    return out

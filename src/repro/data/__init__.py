@@ -1,0 +1,1 @@
+from repro.data import datasets  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the STORM hot loops (hash, insert, query).
+
+``ops`` is the public entry point; ``ref`` holds the pure-jnp oracles.
+"""
+
+from repro.kernels import ref  # noqa: F401

@@ -1,0 +1,110 @@
+"""jit'd wrappers over the STORM Pallas kernels with backend dispatch.
+
+On TPU the fused kernels run compiled; everywhere else (this CPU container,
+unit tests) they run under ``interpret=True`` or fall back to the pure-jnp
+reference — all three paths are numerically identical (integer counts), which
+the kernel tests assert.
+
+The weight layout here is the kernels' plane-major ``(p, d, R)``;
+``from_lsh_params`` converts from the core library's ``(R, p, d)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.kernels import ref
+from repro.kernels import sketch_query as query_kernel
+from repro.kernels import srp_hash as hash_kernel
+from repro.kernels import storm_sketch as histogram_kernel
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def from_lsh_params(params: lsh.LSHParams) -> Array:
+    """Core-layout projections ``(R, p, d)`` -> kernel layout ``(p, d, R)``."""
+    return jnp.transpose(params.projections, (1, 2, 0))
+
+
+def srp_hash(x: Array, w: Array, mode: str = "auto") -> Array:
+    """Bucket codes ``(n, R)``; ``mode`` in {auto, kernel, interpret, ref}."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and x.shape[-1] < 64):
+        return ref.srp_hash(x, w)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return hash_kernel.srp_hash(x, w, interpret=interpret)
+
+
+def hash_histogram(
+    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+) -> Array:
+    """Fused insert: ``(R, B)`` histogram of codes over the masked batch."""
+    if mask is None:
+        mask = jnp.ones((x.shape[0],), jnp.float32)
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and x.shape[-1] < 64):
+        return ref.hash_histogram(x, w, mask)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return histogram_kernel.hash_histogram(x, w, mask, interpret=interpret)
+
+
+def sketch_query(q: Array, w: Array, counts: Array, mode: str = "auto") -> Array:
+    """Batched RACE query: ``(m,)`` mean counts at the query codes."""
+    if (
+        mode == "ref"
+        or q.shape[0] > 128
+        or (mode == "auto" and not _on_tpu() and q.shape[-1] < 64)
+    ):
+        return ref.sketch_query(q, w, counts)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return query_kernel.sketch_query(q, w, counts, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# High-level fused entry points mirroring repro.core.sketch
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("paired", "mode"))
+def build_sketch(
+    params: lsh.LSHParams,
+    z: Array,
+    mask: Optional[Array] = None,
+    paired: bool = True,
+    mode: str = "auto",
+) -> sketch_lib.Sketch:
+    """One-shot fused sketch of pre-scaled data ``z`` (PRP when paired)."""
+    w = from_lsh_params(params)
+    if mask is None:
+        mask = jnp.ones((z.shape[0],), jnp.float32)
+    if paired:
+        counts = hash_histogram(lsh.augment_data(z), w, mask, mode=mode)
+        counts += hash_histogram(lsh.augment_data(-z), w, mask, mode=mode)
+    else:
+        counts = hash_histogram(z, w, mask, mode=mode)
+    n = jnp.sum(mask).astype(jnp.int32)
+    return sketch_lib.Sketch(counts=counts, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("paired", "mode"))
+def query_theta(
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    theta_tilde: Array,
+    paired: bool = True,
+    mode: str = "auto",
+) -> Array:
+    """Fused surrogate-risk estimate at a batch of parameters ``(m, d)``."""
+    w = from_lsh_params(params)
+    q = lsh.augment_query(lsh.normalize_query(theta_tilde))
+    mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)
+    denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * (2.0 if paired else 1.0)
+    est = mean_count / denom
+    return est[0] if theta_tilde.ndim == 1 else est

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the STORM Pallas kernels.
+
+Every kernel in this package is validated against these references with
+``np.testing.assert_allclose`` across shape/dtype sweeps (see
+``tests/test_kernels_*.py``). The references define the *semantics*; the
+kernels define the *schedule*.
+
+Weight layout convention (shared by kernels and refs): ``w: (p, d, R)`` —
+plane-major so the kernel runs ``p`` MXU matmuls of ``(bn, bd) @ (bd, br)``
+per tile instead of strided slicing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def srp_hash(x: Array, w: Array) -> Array:
+    """Signed-random-projection bucket codes.
+
+    Args:
+      x: ``(n, d)`` points.
+      w: ``(p, d, R)`` hyperplane normals (plane-major layout).
+
+    Returns:
+      ``(n, R)`` int32 codes in ``[0, 2**p)``.
+    """
+    p = w.shape[0]
+    codes = jnp.zeros((x.shape[0], w.shape[2]), jnp.int32)
+    for j in range(p):
+        proj = x.astype(jnp.float32) @ w[j].astype(jnp.float32)
+        codes = codes + ((proj > 0).astype(jnp.int32) << j)
+    return codes
+
+
+def hash_histogram(x: Array, w: Array, mask: Array) -> Array:
+    """Fused hash + histogram: counts[r, b] = #{i : mask_i and code(x_i)_r == b}.
+
+    Args:
+      x: ``(n, d)`` points.
+      w: ``(p, d, R)`` hyperplane normals.
+      mask: ``(n,)`` {0,1} validity mask (stream padding).
+
+    Returns:
+      ``(R, 2**p)`` int32 counts.
+    """
+    p = w.shape[0]
+    codes = srp_hash(x, w)  # (n, R)
+    buckets = 1 << p
+    onehot = (codes[:, :, None] == jnp.arange(buckets, dtype=jnp.int32)).astype(
+        jnp.int32
+    )
+    return jnp.einsum("nrb,n->rb", onehot, mask.astype(jnp.int32)).astype(jnp.int32)
+
+
+def sketch_query(q: Array, w: Array, counts: Array) -> Array:
+    """Batched RACE gather: mean over rows of counts at the query codes.
+
+    Args:
+      q: ``(m, d)`` query vectors (already normalized/augmented).
+      w: ``(p, d, R)`` hyperplane normals.
+      counts: ``(R, 2**p)`` sketch counters.
+
+    Returns:
+      ``(m,)`` float32 — mean count over the R rows (caller normalizes by n).
+    """
+    codes = srp_hash(q, w)  # (m, R)
+    rows = jnp.arange(counts.shape[0], dtype=jnp.int32)
+    gathered = counts[rows[None, :], codes].astype(jnp.float32)  # (m, R)
+    return jnp.mean(gathered, axis=-1)

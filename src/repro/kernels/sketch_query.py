@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: batched STORM sketch query (hash + gather + row-mean).
+
+The DFO optimizer issues ~2k sphere queries per step; this kernel fuses the
+query-side hashing with the counter gather so a whole DFO step is one call.
+TPU has no fast gather either — the gather is a one-hot contraction against
+the (br, B) counter tile held in VMEM.
+
+Schedule:
+  grid = (R/br, d/bd); queries (m <= block_m) live in a single block.
+  - scratch ``acc (p, bm, br)`` accumulates projections over ``k``;
+  - at the last ``k`` step, codes are packed and the partial sum
+    ``sum_r counts[r, code]`` for this row tile is added to the output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _query_kernel(q_ref, w_ref, c_ref, o_ref, acc_ref, *, planes: int, k_steps: int):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (bm, bd)
+    for j in range(planes):
+        acc_ref[j, :, :] += jnp.dot(
+            q, w_ref[j, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        buckets = c_ref.shape[-1]
+        codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bm, br)
+        for j in range(planes):
+            codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes[:, :, None] == iota).astype(jnp.float32)  # (bm, br, B)
+        counts = c_ref[...].astype(jnp.float32)  # (br, B)
+        o_ref[...] += jnp.einsum("mrb,rb->m", onehot, counts)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_r", "block_d", "interpret")
+)
+def sketch_query(
+    q: Array,
+    w: Array,
+    counts: Array,
+    *,
+    block_m: int = 128,
+    block_r: int = 512,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Batched RACE query. See ``ref.sketch_query`` for semantics.
+
+    Args:
+      q: ``(m, d)`` normalized/augmented query vectors.
+      w: ``(p, d, R)`` hyperplane normals.
+      counts: ``(R, 2**p)`` counters.
+
+    Returns:
+      ``(m,)`` float32 mean count over rows.
+    """
+    m, d = q.shape
+    p, dw, r = w.shape
+    assert d == dw and counts.shape == (r, 1 << p)
+
+    bm = min(block_m, max(8, m))
+    br = min(block_r, r)
+    bd = min(block_d, d)
+    m_pad, r_pad, d_pad = (-m) % bm, (-r) % br, (-d) % bd
+    qp = jnp.pad(q, ((0, m_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    # Padded rows must contribute 0: zero counters for padded R rows.
+    cp = jnp.pad(counts, ((0, r_pad), (0, 0)))
+    grid = ((r + r_pad) // br, (d + d_pad) // bd)
+    m_tiles = (m + m_pad) // bm
+
+    assert m_tiles == 1, "queries are batched into a single tile by design"
+    out = pl.pallas_call(
+        functools.partial(_query_kernel, planes=p, k_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, k: (0, k)),
+            pl.BlockSpec((p, bd, br), lambda i, k: (0, k, i)),
+            pl.BlockSpec((br, 1 << p), lambda i, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, bm, br), jnp.float32)],
+        interpret=interpret,
+    )(qp, wp, cp)
+    return out[:m, 0] / r

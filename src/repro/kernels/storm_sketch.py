@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused SRP hash + histogram (the STORM insert hot loop).
+
+A GPU implementation scatter-increments the ``R x B`` counter array with
+atomics. TPUs have no fast scatter, so the insert is re-thought for the MXU/
+VPU (DESIGN.md §3): stream data tiles HBM->VMEM, run the ``p`` projection
+matmuls, sign+pack to codes, expand to a one-hot cube and reduce over the
+batch tile into a VMEM-resident ``(br, B)`` accumulator. Codes and one-hots
+never touch HBM; each data element is read exactly once.
+
+Schedule:
+  grid = (R/br, n/bn, d/bd); ``k`` (features) fastest, then ``n``.
+  - scratch ``acc (p, bn, br)`` accumulates projections over ``k``;
+  - on the last ``k`` step the epilogue packs codes and adds the masked
+    one-hot histogram of the tile into the output block;
+  - the output block (br, B) is revisited across the whole (n, k) subgrid
+    and initialized once at the first step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _hash_histogram_kernel(
+    x_ref, w_ref, m_ref, o_ref, acc_ref, *, planes: int, k_steps: int
+):
+    n_i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n_i == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd)
+    for j in range(planes):
+        acc_ref[j, :, :] += jnp.dot(
+            x, w_ref[j, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        buckets = o_ref.shape[-1]
+        codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
+        for j in range(planes):
+            codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+        masked = onehot * m_ref[...].astype(jnp.float32)[:, None, None]
+        o_ref[...] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+)
+def hash_histogram(
+    x: Array,
+    w: Array,
+    mask: Array,
+    *,
+    block_n: int = 128,
+    block_r: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Fused hash+histogram. See ``ref.hash_histogram`` for semantics.
+
+    Args:
+      x: ``(n, d)`` pre-scaled (and, for asymmetric LSH, pre-augmented) points.
+      w: ``(p, d, R)`` hyperplane normals.
+      mask: ``(n,)`` validity mask in {0, 1} (stream padding).
+
+    Returns:
+      ``(R, 2**p)`` int32 counts.
+    """
+    n, d = x.shape
+    p, dw, r = w.shape
+    assert d == dw, (d, dw)
+    buckets = 1 << p
+
+    bn = min(block_n, max(8, n))
+    br = min(block_r, r)
+    bd = min(block_d, d)
+    n_pad, r_pad, d_pad = (-n) % bn, (-r) % br, (-d) % bd
+    xp = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    mp = jnp.pad(mask.astype(jnp.float32), (0, n_pad))  # pad rows masked out
+    grid = ((r + r_pad) // br, (n + n_pad) // bn, (d + d_pad) // bd)
+
+    out = pl.pallas_call(
+        functools.partial(_hash_histogram_kernel, planes=p, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((p, bd, br), lambda i, j, k: (0, k, i)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br, buckets), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, mp)
+    return out[:r]

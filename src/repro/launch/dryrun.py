@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract memory/cost/roofline inputs — no array allocation.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+Results are appended to the JSON incrementally, so a crashed sweep resumes
+where it left off. Every cell records compiled.memory_analysis() (proves the
+program fits 16 GB/chip) and the trip-count-aware HLO roofline inputs
+(launch/hlo_analysis.py).
+
+NOTE: the XLA_FLAGS line above must execute before ANY jax import — jax locks
+the device count at first init. Do not set it globally (smoke tests and
+benches must see one device).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.sharding import specs
+from repro.sharding.constraints import activation_rules
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def input_specs(cfg: ModelConfig, shape: registry.ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.step == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.embeddings_provided:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if "cross_attn" in cfg.cycle:
+            batch["cross_states"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_tokens, cfg.d_model), jnp.bfloat16
+            )
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    if shape.step == "prefill":
+        batch = {}
+        if cfg.embeddings_provided:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if "cross_attn" in cfg.cycle:
+            batch["cross_states"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a seq_len cache
+    inputs: Dict[str, Any] = {}
+    if cfg.embeddings_provided:
+        inputs["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs["tokens"] = jax.ShapeDtypeStruct((b,), i32)
+    return inputs
+
+
+def _eval_shape_tree(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+# Sequences per device per microbatch for train_4k (global batch 256).
+# microbatches = global_batch / (dp_extent * this); the 405B runs 1 seq per
+# device per accumulation step.
+TRAIN_MICRO_SEQS = {
+    "llama3-405b": 1, "qwen3-32b": 2, "mixtral-8x22b": 2,
+    "phi3.5-moe-42b-a6.6b": 4, "qwen2-7b": 4, "llama-3.2-vision-11b": 4,
+    "musicgen-medium": 8, "xlstm-1.3b": 8, "zamba2-2.7b": 4, "gemma3-1b": 8,
+}
+
+# Optimizer dtype policy per arch: the 405B drops f32 master copies and
+# accumulates grads in bf16 — the difference between (2+2+2) and (2+4+4+4)
+# bytes/param of optimizer state (EXPERIMENTS.md §Dry-run memory table).
+OPT_OVERRIDES = {
+    "llama3-405b": dict(master_dtype="bfloat16", grad_dtype="bfloat16"),
+    "mixtral-8x22b": dict(master_dtype="bfloat16", grad_dtype="bfloat16"),
+}
+
+
+def _best_remat_group(num_cycles: int) -> Optional[int]:
+    """Divisor g of L minimizing the saved-residual count (g + L/g)."""
+    best, best_cost = None, None
+    for g in range(2, num_cycles + 1):
+        if num_cycles % g:
+            continue
+        cost = g + num_cycles // g
+        if best_cost is None or cost < best_cost:
+            best, best_cost = g, cost
+    if best is None or best_cost >= num_cycles:
+        return None
+    return best
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: Optional[str] = None
+    memory: Optional[Dict[str, float]] = None
+    cost: Optional[Dict[str, float]] = None
+    roofline_inputs: Optional[Dict[str, float]] = None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: Optional[str] = None,
+             overrides: Optional[Dict[str, Any]] = None) -> CellResult:
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = registry.SHAPES[shape_name]
+    cfg = registry.get_config(arch)
+    micro_seqs_override = None
+    if overrides:
+        overrides = dict(overrides)
+        micro_seqs_override = overrides.pop("micro_seqs", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        key = jax.random.PRNGKey(0)
+
+        params_shape = _eval_shape_tree(lambda k: model.init_params(k, cfg), key)
+        pspecs = specs.param_specs(params_shape, cfg, mesh)
+        p_shard = specs.named(mesh, pspecs)
+        rules = specs.activation_hint_rules(cfg, mesh)
+
+        if shape.step == "train":
+            if cfg.remat_group is None and not (overrides and
+                                                "remat_group" in overrides):
+                cfg = dataclasses.replace(
+                    cfg, remat_group=_best_remat_group(cfg.num_cycles)
+                )
+            dp_extent = 1
+            for ax in ("pod", "data"):
+                if ax in mesh.axis_names:
+                    dp_extent *= mesh.shape[ax]
+            seqs = micro_seqs_override or TRAIN_MICRO_SEQS.get(arch, 8)
+            micro = max(1, shape.global_batch // (dp_extent * seqs))
+            tcfg = ts.TrainConfig(
+                optimizer=opt_lib.AdamWConfig(
+                    moment_dtype="bfloat16", **OPT_OVERRIDES.get(arch, {})
+                ),
+                microbatches=micro,
+            )
+            state_shape = _eval_shape_tree(lambda k: ts.init_state(k, cfg, tcfg), key)
+            ospecs = specs.opt_state_specs(state_shape.opt, pspecs)
+            state_specs = ts.TrainStateT(params=pspecs, opt=ospecs,
+                                         step=jax.sharding.PartitionSpec())
+            batch = input_specs(cfg, shape)
+            bspecs = specs.batch_specs(batch, mesh)
+
+            def step_fn(state, b):
+                return ts.train_step(state, b, cfg, tcfg)
+
+            with jax.set_mesh(mesh):
+                metrics_shape = _eval_shape_tree(step_fn, state_shape, batch)[1]
+            metric_specs = jax.tree.map(
+                lambda _: jax.sharding.PartitionSpec(), metrics_shape
+            )
+            with mesh, jax.set_mesh(mesh), activation_rules(rules):
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(specs.named(mesh, state_specs),
+                                  specs.named(mesh, bspecs)),
+                    out_shardings=(specs.named(mesh, state_specs),
+                                   specs.named(mesh, metric_specs)),
+                    donate_argnums=(0,),
+                ).lower(state_shape, batch)
+                compiled = lowered.compile()
+
+        elif shape.step == "prefill":
+            batch = input_specs(cfg, shape)
+            bspecs = specs.batch_specs(batch, mesh)
+
+            def prefill_fn(params, b):
+                return model.prefill(params, cfg, b, cache_len=shape.seq_len)
+
+            with jax.set_mesh(mesh):
+                out_shape = _eval_shape_tree(prefill_fn, params_shape, batch)
+            state_out_specs = specs.decode_state_specs(
+                out_shape[0], cfg, mesh, shape.global_batch
+            )
+            logits_specs = specs.batch_specs(out_shape[1], mesh)
+            with mesh, jax.set_mesh(mesh), activation_rules(rules):
+                lowered = jax.jit(
+                    prefill_fn,
+                    in_shardings=(p_shard, specs.named(mesh, bspecs)),
+                    out_shardings=(specs.named(mesh, state_out_specs),
+                                   specs.named(mesh, logits_specs)),
+                ).lower(params_shape, batch)
+                compiled = lowered.compile()
+
+        else:  # decode
+            inputs = input_specs(cfg, shape)
+            state_shape = _eval_shape_tree(
+                lambda: model.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+            )
+            sspecs = specs.decode_state_specs(state_shape, cfg, mesh,
+                                              shape.global_batch)
+            ispecs = specs.batch_specs(inputs, mesh)
+            # fleet-aligned decode: scalar position (engine path covers the
+            # per-lane vector case; see attention.decode_attention)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_spec = specs.batch_specs(pos, mesh)
+
+            def serve_fn(params, state, inp, pos):
+                return model.decode_step(params, cfg, state, inp, pos)
+
+            with jax.set_mesh(mesh):
+                logits_shape = _eval_shape_tree(
+                    serve_fn, params_shape, state_shape, inputs, pos
+                )[0]
+            logits_specs = specs.batch_specs(logits_shape, mesh)
+            with mesh, jax.set_mesh(mesh), activation_rules(rules):
+                lowered = jax.jit(
+                    serve_fn,
+                    in_shardings=(p_shard, specs.named(mesh, sspecs),
+                                  specs.named(mesh, ispecs),
+                                  specs.named(mesh, pos_spec)),
+                    out_shardings=(specs.named(mesh, logits_specs),
+                                   specs.named(mesh, sspecs)),
+                    donate_argnums=(1,),
+                ).lower(params_shape, state_shape, inputs, pos)
+                compiled = lowered.compile()
+
+        mem = compiled.memory_analysis()
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        # XLA-CPU FloatNormalization upcasts every bf16 temp to f32 (no
+        # native bf16 on this dry-run backend) — loop-carried caches and
+        # activations double. Args/outputs keep their declared dtypes, so a
+        # TPU-native estimate halves only the temp component (verified
+        # against the StableHLO, which is bf16 throughout; EXPERIMENTS.md
+        # §Dry-run).
+        bf16 = cfg.compute_dtype == "bfloat16"
+        tpu_temp = mem.temp_size_in_bytes * (0.5 if bf16 else 1.0)
+        memory = {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "alias_gib": mem.alias_size_in_bytes / 2**30,
+            "peak_est_gib": peak / 2**30,
+            "tpu_peak_est_gib": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + tpu_temp - mem.alias_size_in_bytes
+            ) / 2**30,
+        }
+        cost = dict(compiled.cost_analysis() or {})
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed")}
+        text = compiled.as_text()
+        roof = hlo_analysis.analyze_text(text)
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            with open(os.path.join(
+                    hlo_dir, f"{arch}_{shape_name}_{mesh_name}.hlo"), "w") as f:
+                f.write(text)
+        return CellResult(arch, shape_name, mesh_name, True,
+                          time.time() - t0, memory=memory, cost=cost,
+                          roofline_inputs=roof)
+    except Exception as e:  # record the failure, keep sweeping
+        return CellResult(arch, shape_name, mesh_name, False,
+                          time.time() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                                f"{traceback.format_exc()[-2000:]}")
+
+
+def _load(out: str) -> Dict[str, Any]:
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    return {}
+
+
+def _store(out: str, results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(registry.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = _load(args.out)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s) for a, s, _ in registry.cells(include_skipped=True)]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        reason = registry.skip_reason(arch, shape)
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            cell_key = f"{arch}|{shape}|{mesh_name}"
+            if reason:
+                results[cell_key] = {"arch": arch, "shape": shape,
+                                     "mesh": mesh_name, "ok": None,
+                                     "skipped": reason}
+                _store(args.out, results)
+                continue
+            prior = results.get(cell_key)
+            if prior and prior.get("ok") and not args.force:
+                print(f"[skip-cached] {cell_key}", flush=True)
+                continue
+            print(f"[run] {cell_key}", flush=True)
+            res = run_cell(arch, shape, multi, hlo_dir=args.hlo_dir)
+            results[cell_key] = dataclasses.asdict(res)
+            _store(args.out, results)
+            status = "OK" if res.ok else f"FAIL: {(res.error or '')[:200]}"
+            extra = ""
+            if res.ok:
+                extra = (f" peak={res.memory['peak_est_gib']:.2f}GiB"
+                         f" flops={res.roofline_inputs['flops']:.3e}"
+                         f" coll={res.roofline_inputs['collective_bytes']:.3e}B")
+            print(f"  -> {status} ({res.seconds:.0f}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

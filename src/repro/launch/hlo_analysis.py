@@ -1,0 +1,253 @@
+"""Trip-count-aware roofline accounting from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body exactly once, which
+underestimates scan-over-layers models by ``num_layers`` x. This module
+re-derives the three roofline inputs directly from the per-device HLO:
+
+  * **flops** — every ``dot`` contributes ``2 * prod(out_shape) * K`` (K from
+    the lhs contracting dims); bodies of ``while`` loops are multiplied by
+    the loop trip count (parsed from the loop-condition constant).
+  * **hbm bytes** — post-optimization fusions are the actual kernel launches;
+    each real op contributes operand + output bytes (tuple plumbing ops are
+    free). This models HBM traffic the way the TPU roofline does.
+  * **collective bytes** — per collective kind, ``max(in, out)`` bytes, trip
+    aware. These feed the ICI term.
+
+All numbers are per-device (the SPMD program is per-device); multiply by
+chip count for cluster totals — the roofline ratio is invariant either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_FREE_OPS = frozenset({
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+})
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        # tuple types >4 elements carry /*index=N*/ comments whose '=' breaks
+        # the op regex — strip all inline comments first.
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            current = Computation(hdr.group(1))
+            comps[current.name] = current
+            if line.lstrip().startswith("ENTRY"):
+                entry = current.name
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(m.group(1), m.group(2).strip(),
+                                  m.group(3), m.group(4)))
+    return comps, entry
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        # symbol table: value name -> type string (per computation)
+        self.types: Dict[str, Dict[str, str]] = {
+            cname: {op.name: op.type_str for op in comp.ops}
+            for cname, comp in self.comps.items()
+        }
+        self._memo: Dict[str, Dict[str, float]] = {}
+
+    # -- helpers -------------------------------------------------------------
+
+    def _operand_names(self, op: Op) -> List[str]:
+        # operands are at the start of `rest`, up to the closing paren depth 0
+        depth, out, cur = 0, [], ""
+        for ch in op.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    out.append(cur)
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                out.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        names = []
+        for frag in out:
+            for m in re.finditer(r"%([\w\.\-]+)", frag):
+                names.append(m.group(1))
+        return names
+
+    def _attr(self, op: Op, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", op.rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for op in comp.ops:
+            for m in re.finditer(r"constant\((\d+)\)", op.opcode + "(" + op.rest):
+                val = int(m.group(1))
+                if 1 < val <= 10_000_000:
+                    best = max(best, val)
+        return best
+
+    def _dot_flops(self, op: Op, comp: Computation) -> float:
+        out_dims = _shape_dims(op.type_str) or ()
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        names = self._operand_names(op)
+        lhs_type = self.types[comp.name].get(names[0], "") if names else ""
+        lhs_dims = _shape_dims(lhs_type) or ()
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        k = 1
+        if m and lhs_dims:
+            for idx in m.group(1).split(","):
+                if idx:
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * out_n * k
+
+    # -- main recursion --------------------------------------------------------
+
+    def analyze(self, comp_name: Optional[str] = None) -> Dict[str, float]:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        totals: Dict[str, float] = {
+            "flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
+        }
+        for kind in _COLLECTIVES:
+            totals[f"coll:{kind}"] = 0.0
+        if comp is None:
+            self._memo[comp_name] = totals
+            return totals
+
+        for op in comp.ops:
+            opc = op.opcode
+            if opc in _FREE_OPS:
+                continue
+            if opc == "while":
+                cond = self._attr(op, "condition")
+                body = self._attr(op, "body")
+                trips = self._trip_count(cond) if cond else 1
+                sub = self.analyze(body) if body else {}
+                for k, v in sub.items():
+                    totals[k] = totals.get(k, 0.0) + trips * v
+                continue
+            if opc == "conditional":
+                for m in re.finditer(r"%([\w\.\-]+)", op.rest):
+                    if m.group(1) in self.comps:
+                        sub = self.analyze(m.group(1))
+                        for k, v in sub.items():
+                            totals[k] = totals.get(k, 0.0) + v
+                continue
+            # real op: bytes = operands + output (tuple plumbing excluded)
+            out_bytes = _shape_bytes(op.type_str)
+            in_bytes = sum(
+                _shape_bytes(self.types[comp.name].get(n, ""))
+                for n in self._operand_names(op)
+            )
+            totals["hbm_bytes"] += out_bytes + in_bytes
+
+            base = opc.replace("-start", "")
+            if base in _COLLECTIVES:
+                traffic = float(max(out_bytes, in_bytes))
+                totals["collective_bytes"] += traffic
+                totals[f"coll:{base}"] += traffic
+            elif opc == "dot":
+                totals["flops"] += self._dot_flops(op, comp)
+            elif opc == "fusion":
+                called = self._attr(op, "calls")
+                if called:
+                    sub = self.analyze(called)
+                    totals["flops"] += sub["flops"]
+                    # fused internals are VMEM-resident: no extra HBM bytes,
+                    # but nested collectives (rare) still count
+                    totals["collective_bytes"] += sub["collective_bytes"]
+                    for kind in _COLLECTIVES:
+                        totals[f"coll:{kind}"] += sub[f"coll:{kind}"]
+            elif opc in ("call", "async-start"):
+                called = self._attr(op, "to_apply") or self._attr(op, "called_computation")
+                if called:
+                    sub = self.analyze(called)
+                    for k, v in sub.items():
+                        totals[k] = totals.get(k, 0.0) + v
+
+        self._memo[comp_name] = totals
+        return totals
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    return Analyzer(text).analyze()

@@ -1,0 +1,23 @@
+"""Production mesh factory (function, not module constant — importing this
+module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; two pods add a leading 'pod' axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(devices=None):
+    """Whatever devices exist, as a (data,) mesh — for tests/examples."""
+    import numpy as np
+
+    devices = devices if devices is not None else jax.devices()
+    return jax.sharding.Mesh(np.array(devices), ("data",))

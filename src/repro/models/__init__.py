@@ -1,0 +1,1 @@
+from repro.models import attention, config, layers, model, moe, ssm  # noqa: F401

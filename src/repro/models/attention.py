@@ -1,0 +1,344 @@
+"""Attention: GQA with RoPE, qk-norm, QKV-bias, sliding-window / local:global
+masking, cross-attention, and memory-bounded chunked ("flash-style") softmax.
+
+TPU adaptation notes (DESIGN.md §3/§5):
+  * Training/prefill use an outer scan over query chunks with an inner online-
+    softmax scan over key/value chunks — the (S, S) score matrix never
+    materializes, activation memory is O(S * chunk). For windowed layers the
+    key/value stream is dynamically sliced to the window span, so SWA/local
+    layers do O(S * window) work, not O(S^2).
+  * Each query-chunk step is wrapped in ``jax.checkpoint`` so the backward
+    pass recomputes scores per chunk instead of stashing them.
+  * Decode (single token vs a KV cache) is a plain masked einsum — the cache
+    dominates memory, and its sharding is decided in ``sharding/specs.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -1e30
+
+
+def init_attention(
+    key: Array,
+    d: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool,
+    qk_norm: bool,
+    dtype,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, num_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wo": (
+            jax.random.normal(ko, (num_heads * head_dim, d))
+            * ((num_heads * head_dim) ** -0.5)
+        ).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = layers.init_rms_norm(head_dim, dtype)
+        p["k_norm"] = layers.init_rms_norm(head_dim, dtype)
+    return p
+
+
+def _project_qkv(
+    params: Params,
+    x: Array,
+    positions: Array,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    compute_dtype,
+) -> Tuple[Array, Array, Array]:
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KH,hd), RoPE'd and normed."""
+    b, s, _ = x.shape
+    xc = x.astype(compute_dtype)
+    q = xc @ params["wq"].astype(compute_dtype)
+    k = xc @ params["wk"].astype(compute_dtype)
+    v = xc @ params["wv"].astype(compute_dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if "q_norm" in params:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    if rope_theta > 0:
+        q = layers.rope(q, positions, rope_theta)
+        k = layers.rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _online_softmax_scan(
+    q: Array,           # (B, c, KH, G, D) — one query chunk
+    kv: Array,          # (2, B, T, KH, D) — sliced key/value stream
+    q_pos: Array,       # (c,) absolute query positions
+    k_pos0: Array,      # scalar — absolute position of kv[.., 0, ..]
+    *,
+    chunk: int,
+    causal: bool,
+    window: Optional[int],
+    valid_len: Optional[Array],
+) -> Array:
+    """Numerically-stable streaming softmax over kv chunks. Returns (B,c,KH,G,D)."""
+    k_full, v_full = kv[0], kv[1]
+    b, t, kh, d = k_full.shape
+    g = q.shape[3]
+    c = q.shape[1]
+    n_kv = t // chunk
+    scale = d ** -0.5
+
+    kb = k_full.reshape(b, n_kv, chunk, kh, d).swapaxes(0, 1)
+    vb = v_full.reshape(b, n_kv, chunk, kh, d).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kt, vt, t_idx = inp
+        k_pos = k_pos0 + t_idx * chunk + jnp.arange(chunk)
+        s_ = jnp.einsum(
+            "bqhgd,bthd->bhgqt", q, kt, preferred_element_type=jnp.float32
+        ) * scale
+        mask = jnp.ones((c, chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if valid_len is not None:
+            mask &= (k_pos[None, :] < valid_len) & (k_pos[None, :] >= 0)
+        s_ = jnp.where(mask[None, None, None, :, :], s_, NEG_INF)
+        m_new = jnp.maximum(m, s_.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s_ - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqt,bthd->bhgqd", p.astype(vt.dtype), vt,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, c), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, c, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb, vb, jnp.arange(n_kv))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,c,KH,G,D)
+
+
+def chunked_attention(
+    q: Array,            # (B, S, H, D)
+    k: Array,            # (B, T, KH, D)
+    v: Array,            # (B, T, KH, D)
+    *,
+    chunk: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> Array:
+    """Memory-bounded attention; scan over q chunks, stream over kv chunks.
+
+    For windowed attention the kv stream is dynamically sliced to the window
+    span per q chunk (static slice size), so compute is O(S * window).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    c = min(chunk, s)
+    s_pad = (-s) % c
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0))) if s_pad else q
+    n_q = qp.shape[1] // c
+
+    ck = min(chunk, t)
+    t_pad = (-t) % ck
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    kv = jnp.stack([k, v])  # (2, B, Tp, KH, D)
+    t_total = kv.shape[2]
+
+    # Windowed layers only ever look at the last `span` positions before the
+    # query chunk — slice them out (static size) instead of streaming all of T.
+    if window is not None:
+        span = min(t_total, ((window + c - 1) // ck + 1) * ck)
+    else:
+        span = t_total
+
+    qb = qp.reshape(b, n_q, c, kh, g, d).swapaxes(0, 1)  # (n_q, B, c, KH, G, D)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def per_q_chunk(qi: Array, i: Array) -> Array:
+        q_pos = q_offset + i * c + jnp.arange(c)
+        if window is not None:
+            start = jnp.clip(q_offset + (i + 1) * c - span, 0, t_total - span)
+        else:
+            start = jnp.zeros((), jnp.int32)
+        kv_slice = jax.lax.dynamic_slice_in_dim(kv, start, span, axis=2)
+        return _online_softmax_scan(
+            qi, kv_slice, q_pos, start,
+            chunk=ck, causal=causal, window=window,
+            valid_len=jnp.asarray(t, jnp.int32),
+        )
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args), (qb, jnp.arange(n_q)))
+    out = out.swapaxes(0, 1).reshape(b, n_q * c, h, d)
+    return out[:, :s]
+
+
+def apply_attention(
+    params: Params,
+    x: Array,
+    positions: Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int],
+    chunk: int,
+    compute_dtype,
+) -> Array:
+    """Full self-attention over a sequence (training / prefill)."""
+    q, k, v = _project_qkv(
+        params, x, positions, num_heads, num_kv_heads, head_dim, rope_theta,
+        compute_dtype,
+    )
+    out = chunked_attention(q, k, v, chunk=chunk, causal=True, window=window)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, num_heads * head_dim)
+    return out @ params["wo"].astype(compute_dtype)
+
+
+class KVCache(NamedTuple):
+    """Decode cache in (B, KH, T, D) layout — the attention einsums consume
+    it without a per-step transpose (a transpose inside the layer loop made
+    XLA keep a second f32 copy of the entire cache on the CPU backend, and
+    costs a real relayout pass on TPU)."""
+
+    k: Array     # (B, KH, T, D)
+    v: Array     # (B, KH, T, D)
+
+
+def decode_attention(
+    params: Params,
+    x: Array,            # (B, 1, d)
+    cache: KVCache,
+    pos: Array,          # (B,) int32 — per-sequence index of the incoming token
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int],
+    compute_dtype,
+) -> Tuple[Array, KVCache]:
+    """One-token decode against a (possibly rolling) KV cache.
+
+    ``pos`` is per-sequence (continuous batching: lanes run at different
+    offsets). For windowed layers the cache is a ring buffer of size
+    ``window``: the new entry lands at ``pos % window`` and relative positions
+    are reconstructed from absolute ones, so memory stays O(window) at
+    500k-token contexts.
+    """
+    b = x.shape[0]
+    t = cache.k.shape[2]
+    per_lane = jnp.ndim(pos) > 0  # continuous-batching engine: per-lane offsets
+    positions = jnp.broadcast_to(pos, (b,))[:, None]
+    q, k_new, v_new = _project_qkv(
+        params, x, positions, num_heads, num_kv_heads, head_dim, rope_theta,
+        compute_dtype,
+    )
+    is_ring = window is not None and t <= window  # static layout decision
+    kn = k_new[:, 0].astype(cache.k.dtype)[:, :, None, :]  # (B, KH, 1, D)
+    vn = v_new[:, 0].astype(cache.v.dtype)[:, :, None, :]
+    if per_lane:
+        # masked write — avoids a scatter whose lowering transposes the cache
+        slot = jnp.clip(pos % t if is_ring else pos, 0, t - 1)       # (B,)
+        write = (jnp.arange(t)[None, :] == slot[:, None])            # (B, T)
+        wm = write[:, None, :, None]
+        ck = jnp.where(wm, kn, cache.k)
+        cv = jnp.where(wm, vn, cache.v)
+    else:
+        # fleet-aligned decode (dry-run serve_step): one dynamic-update-slice
+        slot = jnp.clip(pos % t if is_ring else pos, 0, t - 1)       # scalar
+        zero = jnp.zeros((), slot.dtype)
+        ck = jax.lax.dynamic_update_slice(cache.k, kn, (zero, zero, slot, zero))
+        cv = jax.lax.dynamic_update_slice(cache.v, vn, (zero, zero, slot, zero))
+
+    g = num_heads // num_kv_heads
+    qg = q.reshape(b, 1, num_kv_heads, g, head_dim)
+    # NOTE: no preferred_element_type here — the TPU MXU accumulates bf16
+    # dots in f32 registers anyway, while on the CPU dry-run backend an f32
+    # preference makes XLA hoist a convert of the *entire stacked cache* out
+    # of the layer loop (2x cache memory). Softmax still runs in f32 below.
+    s_ = jnp.einsum("bqhgd,bhtd->bhgqt", qg, ck.astype(compute_dtype)) * (
+        head_dim ** -0.5
+    )
+    # Valid cache entries: absolute position of slot s is s (dense cache) or
+    # reconstructed ring positions (rolling cache). All per-sequence.
+    slots = jnp.arange(t)[None, :]                            # (1, t)
+    posb = jnp.broadcast_to(pos, (b,))[:, None]               # (B, 1)
+    if is_ring:
+        # ring: slot s holds absolute position p with p % t == s, p <= pos
+        abs_pos = posb - ((posb - slots) % t)
+        valid = (abs_pos >= 0) & (abs_pos <= posb) & (posb - abs_pos < window)
+    else:
+        valid = slots <= posb
+        if window is not None:
+            valid &= posb - slots < window
+    s_ = jnp.where(valid[:, None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqt,bhtd->bqhgd", p.astype(compute_dtype),
+                     cv.astype(compute_dtype))
+    out = out.reshape(b, 1, num_heads * head_dim)
+    return out @ params["wo"].astype(compute_dtype), KVCache(ck, cv)
+
+
+def cross_attention(
+    params: Params,
+    x: Array,              # (B, S, d) text stream
+    kv_states: Array,      # (B, T_img, d) frontend-provided embeddings
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    chunk: int,
+    compute_dtype,
+) -> Array:
+    """Non-causal cross-attention onto stub image/frame embeddings."""
+    b, s, _ = x.shape
+    t = kv_states.shape[1]
+    xc = x.astype(compute_dtype)
+    kvc = kv_states.astype(compute_dtype)
+    q = (xc @ params["wq"].astype(compute_dtype)).reshape(b, s, num_heads, head_dim)
+    k = (kvc @ params["wk"].astype(compute_dtype)).reshape(b, t, num_kv_heads, head_dim)
+    v = (kvc @ params["wv"].astype(compute_dtype)).reshape(b, t, num_kv_heads, head_dim)
+    if "q_norm" in params:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    out = chunked_attention(q, k, v, chunk=chunk, causal=False, window=None)
+    out = out.reshape(b, s, num_heads * head_dim)
+    return out @ params["wo"].astype(compute_dtype)

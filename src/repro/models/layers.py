@@ -1,0 +1,150 @@
+"""Shared neural-net layers: norms, rotary embeddings, SwiGLU MLP, embedding
+tables, chunked cross-entropy.
+
+Functional style: ``init_*`` builds a param dict; ``apply`` functions are
+pure. Matmul-bearing params are 2D+ so the sharding rules in
+``repro/sharding/specs.py`` can address them by path name.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(
+        dtype
+    )
+
+
+def init_rms_norm(d: int, dtype) -> Array:
+    return jnp.zeros((d,), dtype)
+
+
+# --- rotary position embeddings --------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Apply rotary embeddings.
+
+    Args:
+      x: ``(..., seq, heads, head_dim)``.
+      positions: ``(..., seq)`` int32 absolute positions.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+# --- SwiGLU MLP --------------------------------------------------------------
+
+
+def init_mlp(key: Array, d: int, d_ff: int, dtype) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "gate": (jax.random.normal(kg, (d, d_ff)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (d, d_ff)) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (d_ff, d)) * s_ff).astype(dtype),
+    }
+
+
+def mlp(params: Params, x: Array, compute_dtype) -> Array:
+    x = x.astype(compute_dtype)
+    gate = jax.nn.silu(x @ params["gate"].astype(compute_dtype))
+    up = x @ params["up"].astype(compute_dtype)
+    return (gate * up) @ params["down"].astype(compute_dtype)
+
+
+# --- embeddings --------------------------------------------------------------
+
+
+def init_embedding(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)
+
+
+def embed(table: Array, tokens: Array, compute_dtype) -> Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(table: Array, x: Array, compute_dtype) -> Array:
+    """Logits = x @ table^T (tied) or x @ head (untied; table is (d, vocab))."""
+    return x.astype(compute_dtype) @ table.astype(compute_dtype)
+
+
+# --- chunked softmax cross-entropy ------------------------------------------
+
+
+def chunked_softmax_xent(
+    x: Array,
+    unembed_table: Array,
+    labels: Array,
+    mask: Optional[Array] = None,
+    chunk: int = 512,
+) -> Array:
+    """Mean next-token cross-entropy without materializing full-seq logits.
+
+    The (batch, seq, vocab) logits tensor dominates activation memory at LM
+    vocab sizes (e.g. 152k); scanning over sequence chunks bounds it at
+    ``batch * chunk * vocab`` while keeping the f32 logsumexp. Labels are the
+    *next token* ids already aligned by the caller.
+
+    Args:
+      x: ``(batch, seq, d)`` final hidden states.
+      unembed_table: ``(d, vocab)``.
+      labels: ``(batch, seq)`` int32 target ids.
+      mask: optional ``(batch, seq)`` {0,1} loss mask.
+
+    Returns:
+      scalar mean loss over unmasked positions.
+    """
+    b, s, d = x.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n_chunks = x.shape[1] // c
+    xc = x.reshape(b, n_chunks, c, d).swapaxes(0, 1)           # (n, b, c, d)
+    lc = labels.reshape(b, n_chunks, c).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+    def step(carry, inp):
+        total, count = carry
+        xi, li, mi = inp
+        logits = (xi @ unembed_table.astype(xi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (total + nll.sum(), count + mi.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc, mc),
+    )
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,526 @@
+"""Model assembly: cycle-stacked blocks, training forward, prefill and decode.
+
+Layer heterogeneity is a static *cycle* of block kinds (config.py). Parameters
+for one cycle are stacked with a leading ``num_cycles`` axis and the model is
+a ``lax.scan`` over cycles — 126-layer models lower to one cycle's HLO, which
+keeps dry-run compiles tractable and is the standard TPU idiom.
+
+Public entry points:
+  * ``init_params(key, cfg)``
+  * ``forward(params, cfg, batch)``            -> final hidden states, aux
+  * ``train_loss(params, cfg, batch)``         -> scalar
+  * ``init_decode_state(cfg, batch, cache_len)``
+  * ``prefill(params, cfg, batch, cache_len)`` -> (state, logits_last)
+  * ``decode_step(params, cfg, state, token_embeddings, pos)`` -> (logits, state)
+
+``batch`` is a dict: ``tokens (B,S)`` or ``embeds (B,S,d)`` (stub frontends),
+optional ``cross_states (B,T,d)`` for VLM cross-attention, ``labels (B,S)``
+and optional ``loss_mask``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import ModelConfig
+from repro.sharding.constraints import hint
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_ATTN_KINDS = ("attn", "local_attn", "cross_attn")
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def _remat_policy(name: str):
+    if name == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.everything_saveable
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: Array, kind: str, cfg: ModelConfig) -> Params:
+    pdt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    if kind == "shared_attn":
+        return {}  # parameters live in params["shared"], applied per invocation
+    p: Params = {"pre_norm": layers.init_rms_norm(d, pdt)}
+    if kind in _ATTN_KINDS:
+        p["attn"] = attention.init_attention(
+            keys[0], d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            cfg.qkv_bias, cfg.qk_norm, pdt,
+        )
+        if cfg.is_moe:
+            p["ffn_norm"] = layers.init_rms_norm(d, pdt)
+            p["moe"] = moe.init_moe(keys[1], d, cfg.d_ff, cfg.num_experts, pdt)
+        elif cfg.d_ff:
+            p["ffn_norm"] = layers.init_rms_norm(d, pdt)
+            p["mlp"] = layers.init_mlp(keys[1], d, cfg.d_ff, pdt)
+    elif kind == "mlstm":
+        p["mlstm"] = ssm.init_mlstm(keys[0], d, cfg.ssm_expand, cfg.ssm_heads, pdt)
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba2(
+            keys[0], d, cfg.ssm_expand, cfg.ssm_state_dim, cfg.ssm_heads,
+            cfg.ssm_conv_width, pdt,
+        )
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    pdt = _dtype(cfg.param_dtype)
+    k_embed, k_unembed, k_blocks, k_shared = jax.random.split(key, 4)
+
+    def init_cycle(ck: Array) -> Params:
+        pks = jax.random.split(ck, len(cfg.cycle))
+        return {
+            f"pos{i}": _init_block(pks[i], kind, cfg)
+            for i, kind in enumerate(cfg.cycle)
+        }
+
+    cycle_keys = jax.random.split(k_blocks, cfg.num_cycles)
+    blocks = jax.vmap(init_cycle)(cycle_keys)
+
+    params: Params = {
+        "embed": layers.init_embedding(k_embed, cfg.vocab_size, cfg.d_model, pdt),
+        "final_norm": layers.init_rms_norm(cfg.d_model, pdt),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_unembed, (cfg.d_model, cfg.vocab_size))
+            * (cfg.d_model ** -0.5)
+        ).astype(pdt)
+    if "shared_attn" in cfg.cycle:
+        ks1, ks2, ks3 = jax.random.split(k_shared, 3)
+        params["shared"] = {
+            "pre_norm": layers.init_rms_norm(cfg.d_model, pdt),
+            "attn": attention.init_attention(
+                ks1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                cfg.qkv_bias, cfg.qk_norm, pdt,
+            ),
+            "ffn_norm": layers.init_rms_norm(cfg.d_model, pdt),
+            "mlp": layers.init_mlp(ks2, cfg.d_model, cfg.d_ff, pdt),
+        }
+    return params
+
+
+def unembed_table(params: Params, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# Sequence-mode block application (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Post-mixer FFN/MoE sublayer (aux loss discarded — serving path)."""
+    if "ffn_norm" not in p:
+        return x
+    cdt = _dtype(cfg.compute_dtype)
+    h = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.is_moe and "moe" in p:
+        out, _ = moe.moe_ffn(
+            p["moe"], h, experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor, compute_dtype=cdt,
+        )
+    else:
+        out = layers.mlp(p["mlp"], h, cdt)
+    return hint(x + out.astype(x.dtype), "residual")
+
+
+def _apply_block_seq(
+    kind: str,
+    p: Params,
+    shared: Optional[Params],
+    x: Array,
+    positions: Array,
+    cross_states: Optional[Array],
+    cfg: ModelConfig,
+) -> Tuple[Array, Array]:
+    """Returns (new_x, aux_loss)."""
+    cdt = _dtype(cfg.compute_dtype)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "shared_attn":
+        p = shared
+    h = layers.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    common = dict(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, compute_dtype=cdt,
+    )
+    if kind in ("attn", "shared_attn"):
+        out = attention.apply_attention(
+            p["attn"], h, positions, rope_theta=cfg.rope_theta,
+            window=cfg.sliding_window, chunk=cfg.attn_chunk, **common,
+        )
+    elif kind == "local_attn":
+        out = attention.apply_attention(
+            p["attn"], h, positions, rope_theta=cfg.rope_theta,
+            window=cfg.local_window, chunk=cfg.attn_chunk, **common,
+        )
+    elif kind == "cross_attn":
+        out = attention.cross_attention(
+            p["attn"], h, cross_states, chunk=cfg.attn_chunk, **common,
+        )
+    elif kind == "mlstm":
+        out = ssm.mlstm_block(
+            p["mlstm"], h, cfg.ssm_heads, cfg.attn_chunk, cdt,
+            seq_axis="model" if cfg.sequence_parallel else None,
+        )
+    elif kind == "mamba":
+        out = ssm.mamba2_block(
+            p["mamba"], h, cfg.ssm_heads, cfg.ssm_state_dim, cfg.attn_chunk, cdt
+        )
+    else:
+        raise ValueError(kind)
+    x = hint(x + out.astype(x.dtype), "residual")
+
+    if kind in ("attn", "local_attn", "cross_attn", "shared_attn") and (
+        cfg.d_ff or cfg.is_moe
+    ):
+        if "ffn_norm" in p:
+            h = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+            if cfg.is_moe and "moe" in p:
+                out, aux = moe.moe_ffn(
+                    p["moe"], h, experts_per_token=cfg.experts_per_token,
+                    capacity_factor=cfg.moe_capacity_factor, compute_dtype=cdt,
+                )
+            else:
+                out = layers.mlp(p["mlp"], h, cdt)
+            x = hint(x + out.astype(x.dtype), "residual")
+    return x, aux
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Array]
+) -> Tuple[Array, Array]:
+    """Full-sequence forward. Returns (hidden (B,S,d), total aux loss)."""
+    cdt = _dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cdt)
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+    x = hint(x, "residual")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cross = batch.get("cross_states")
+    if cross is not None:
+        cross = cross.astype(cdt)
+    shared = params.get("shared")
+
+    def cycle_body(carry, cycle_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.cycle):
+            x, a = _apply_block_seq(
+                kind, cycle_params[f"pos{i}"], shared, x, positions, cross, cfg
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(
+        cycle_body, policy=_remat_policy(cfg.remat_policy), prevent_cse=False
+    )
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.remat_group and cfg.remat_group > 1 and \
+            cfg.num_cycles % cfg.remat_group == 0:
+        # sqrt-L remat: save residuals only at group boundaries; inner cycles
+        # recompute during backward. Carry stack: (L/g + g) instead of L.
+        groups = cfg.num_cycles // cfg.remat_group
+        grouped = jax.tree.map(
+            lambda p: p.reshape(groups, cfg.remat_group, *p.shape[1:]),
+            params["blocks"],
+        )
+
+        def group_body(carry, group_params):
+            out, _ = jax.lax.scan(body, carry, group_params)
+            return out, None
+
+        outer = jax.checkpoint(
+            group_body, policy=_remat_policy(cfg.remat_policy),
+            prevent_cse=False,
+        )
+        (x, aux), _ = jax.lax.scan(outer, carry0, grouped)
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry0, params["blocks"])
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def train_loss(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Array],
+    aux_weight: float = 0.01,
+) -> Array:
+    hidden, aux = forward(params, cfg, batch)
+    loss = layers.chunked_softmax_xent(
+        hidden, unembed_table(params, cfg), batch["labels"],
+        batch.get("loss_mask"), chunk=cfg.xent_chunk,
+    )
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _block_state_shape(kind: str, cfg: ModelConfig, b: int, cache_len: int):
+    if kind in ("attn", "shared_attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.sliding_window
+        t = cache_len if window is None else min(cache_len, window)
+        cdt = _dtype(cfg.compute_dtype)
+        return attention.KVCache(
+            k=jnp.zeros((b, cfg.num_kv_heads, t, cfg.head_dim), cdt),
+            v=jnp.zeros((b, cfg.num_kv_heads, t, cfg.head_dim), cdt),
+        )
+    if kind == "cross_attn":
+        cdt = _dtype(cfg.compute_dtype)
+        # cross K/V computed once at prefill from the frontend states
+        return attention.KVCache(
+            k=jnp.zeros((b, cfg.num_kv_heads, cfg.cross_attn_tokens, cfg.head_dim), cdt),
+            v=jnp.zeros((b, cfg.num_kv_heads, cfg.cross_attn_tokens, cfg.head_dim), cdt),
+        )
+    if kind == "mlstm":
+        return ssm.mlstm_state_shape(b, cfg.d_model, cfg.ssm_expand, cfg.ssm_heads)
+    if kind == "mamba":
+        return ssm.mamba_state_shape(
+            b, cfg.d_model, cfg.ssm_expand, cfg.ssm_state_dim, cfg.ssm_heads,
+            cfg.ssm_conv_width,
+        )
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, b: int, cache_len: int):
+    """Per-cycle-position states stacked over cycles (scan xs)."""
+    one = {
+        f"pos{i}": _block_state_shape(kind, cfg, b, cache_len)
+        for i, kind in enumerate(cfg.cycle)
+    }
+    return jax.tree.map(
+        lambda x: jnp.zeros((cfg.num_cycles,) + x.shape, x.dtype), one
+    )
+
+
+def _apply_block_decode(
+    kind: str, p: Params, shared: Optional[Params], state,
+    x: Array, pos: Array, cfg: ModelConfig,
+):
+    cdt = _dtype(cfg.compute_dtype)
+    if kind == "shared_attn":
+        p = shared
+    h = layers.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if kind in ("attn", "shared_attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.sliding_window
+        out, state = attention.decode_attention(
+            p["attn"], h, state, pos,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, window=window,
+            compute_dtype=cdt,
+        )
+    elif kind == "cross_attn":
+        # cache holds projected K/V of the frontend states (filled at prefill)
+        b = x.shape[0]
+        g = cfg.num_heads // cfg.num_kv_heads
+        q = (h.astype(cdt) @ p["attn"]["wq"].astype(cdt)).reshape(
+            b, 1, cfg.num_kv_heads, g, cfg.head_dim
+        )
+        s_ = jnp.einsum("bqhgd,bhtd->bhgqt", q, state.k) * (cfg.head_dim ** -0.5)
+        pr = jax.nn.softmax(s_.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bhgqt,bhtd->bqhgd", pr.astype(cdt), state.v)
+        out = o.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["attn"]["wo"].astype(cdt)
+    elif kind == "mlstm":
+        out, state = ssm.mlstm_decode(p["mlstm"], h, state, cfg.ssm_heads, cdt)
+    elif kind == "mamba":
+        out, state = ssm.mamba2_decode(
+            p["mamba"], h, state, cfg.ssm_heads, cfg.ssm_state_dim, cdt
+        )
+    else:
+        raise ValueError(kind)
+    x = x + out.astype(x.dtype)
+
+    if kind in ("attn", "local_attn", "cross_attn", "shared_attn") and (
+        cfg.d_ff or cfg.is_moe
+    ):
+        if "ffn_norm" in p:
+            h = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+            if cfg.is_moe and "moe" in p:
+                out, _ = moe.moe_ffn(
+                    p["moe"], h, experts_per_token=cfg.experts_per_token,
+                    capacity_factor=cfg.moe_capacity_factor, compute_dtype=cdt,
+                )
+            else:
+                out = layers.mlp(p["mlp"], h, cdt)
+            x = x + out.astype(x.dtype)
+    return x, state
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, state, inputs: Dict[str, Array], pos: Array
+) -> Tuple[Array, Any]:
+    """One-token decode. ``inputs``: token (B,) or embeds (B,1,d). Returns
+    (logits (B, vocab), new state)."""
+    cdt = _dtype(cfg.compute_dtype)
+    if "embeds" in inputs:
+        x = inputs["embeds"].astype(cdt)
+    else:
+        x = layers.embed(params["embed"], inputs["tokens"][:, None], cdt)
+    shared = params.get("shared")
+
+    def cycle_body(x, xs):
+        cycle_params, cycle_state = xs
+        new_states = {}
+        for i, kind in enumerate(cfg.cycle):
+            x, ns = _apply_block_decode(
+                kind, cycle_params[f"pos{i}"], shared, cycle_state[f"pos{i}"],
+                x, pos, cfg,
+            )
+            new_states[f"pos{i}"] = ns
+        return x, new_states
+
+    x, new_state = jax.lax.scan(cycle_body, x, (params["blocks"], state))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(unembed_table(params, cfg), x[:, 0, :], cdt)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also fills decode caches
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Array], cache_len: int
+):
+    """Process a prompt of S tokens; returns (decode state, last-token logits).
+
+    Implemented as the sequence forward plus per-block cache extraction —
+    attention K/V are recomputed from the block inputs (cheap projections)
+    rather than threaded through the chunked-attention scan.
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cdt)
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cross = batch.get("cross_states")
+    if cross is not None:
+        cross = cross.astype(cdt)
+    shared = params.get("shared")
+
+    def cache_from_kv(k: Array, v: Array, window, cache_len: int):
+        """Lay the prompt's K/V into a fresh (possibly ring) cache.
+
+        One transpose to the decode layout (B, KH, T, D) happens here, once
+        per prefill — never inside the decode loop."""
+        t = cache_len if window is None else min(cache_len, window)
+        kt = k.swapaxes(1, 2).astype(cdt)  # (B, KH, S, D)
+        vt = v.swapaxes(1, 2).astype(cdt)
+        cache_k = jnp.zeros((b, cfg.num_kv_heads, t, cfg.head_dim), cdt)
+        cache_v = jnp.zeros((b, cfg.num_kv_heads, t, cfg.head_dim), cdt)
+        keep = min(s, t)
+        if window is not None and t <= window:
+            # ring layout: slot = position % t for the last t prompt positions
+            import numpy as _np
+            slots = _np.arange(s - keep, s) % t  # static indices
+            ck = cache_k.at[:, :, slots, :].set(kt[:, :, -keep:])
+            cv = cache_v.at[:, :, slots, :].set(vt[:, :, -keep:])
+            return attention.KVCache(k=ck, v=cv)
+        ck = cache_k.at[:, :, :keep, :].set(kt[:, :, :keep])
+        cv = cache_v.at[:, :, :keep, :].set(vt[:, :, :keep])
+        return attention.KVCache(k=ck, v=cv)
+
+    def cycle_body(carry, cycle_params):
+        x = carry
+        states = {}
+        for i, kind in enumerate(cfg.cycle):
+            p = cycle_params[f"pos{i}"]
+            pp = shared if kind == "shared_attn" else p
+            h_in = layers.rms_norm(x, pp["pre_norm"], cfg.norm_eps)
+            if kind in ("attn", "local_attn", "shared_attn"):
+                window = (cfg.local_window if kind == "local_attn"
+                          else cfg.sliding_window)
+                q, k, v = attention._project_qkv(
+                    pp["attn"], h_in, positions, cfg.num_heads,
+                    cfg.num_kv_heads, cfg.head_dim, cfg.rope_theta, cdt,
+                )
+                out = attention.chunked_attention(
+                    q, k, v, chunk=cfg.attn_chunk, causal=True, window=window,
+                )
+                out = out.reshape(b, s, -1) @ pp["attn"]["wo"].astype(cdt)
+                x = hint(x + out.astype(x.dtype), "residual")
+                states[f"pos{i}"] = cache_from_kv(k, v, window, cache_len)
+                x = _apply_ffn(pp, x, cfg)
+            elif kind == "cross_attn":
+                t_img = cross.shape[1]
+                k = (cross @ pp["attn"]["wk"].astype(cdt)).reshape(
+                    b, t_img, cfg.num_kv_heads, cfg.head_dim)
+                v = (cross @ pp["attn"]["wv"].astype(cdt)).reshape(
+                    b, t_img, cfg.num_kv_heads, cfg.head_dim)
+                q = (h_in.astype(cdt) @ pp["attn"]["wq"].astype(cdt)).reshape(
+                    b, s, cfg.num_heads, cfg.head_dim)
+                out = attention.chunked_attention(
+                    q, k, v, chunk=cfg.attn_chunk, causal=False, window=None,
+                )
+                out = out.reshape(b, s, -1) @ pp["attn"]["wo"].astype(cdt)
+                x = hint(x + out.astype(x.dtype), "residual")
+                states[f"pos{i}"] = attention.KVCache(
+                    k=k.swapaxes(1, 2), v=v.swapaxes(1, 2))
+                x = _apply_ffn(pp, x, cfg)
+            elif kind == "mlstm":
+                pp = p["mlstm"]
+                q, k, v, lf, gi = ssm._mlstm_gates(pp, h_in, cfg.ssm_heads, cdt)
+                if cfg.sequence_parallel:
+                    y, st = ssm.glr_shardmapped(
+                        q, k, v, lf, gi, seq_axis="model",
+                        chunk=cfg.attn_chunk, normalize=True,
+                        return_state=True,
+                    )
+                else:
+                    y, st = ssm.glr_chunked(q, k, v, lf, gi,
+                                            chunk=cfg.attn_chunk,
+                                            normalize=True)
+                y = layers.rms_norm(y.reshape(b, s, -1), pp["out_norm"])
+                o = jax.nn.sigmoid(h_in.astype(cdt) @ pp["wo_gate"].astype(cdt))
+                x = hint(x + ((o * y) @ pp["wd"].astype(cdt)).astype(x.dtype),
+                         "residual")
+                states[f"pos{i}"] = st
+            elif kind == "mamba":
+                pp = p["mamba"]
+                q, k, v, lf, dt, z, hist = ssm._mamba_core_inputs(
+                    pp, h_in, cfg.ssm_heads, cfg.ssm_state_dim, cdt)
+                y, st = ssm.glr_chunked(q, k, v, lf, dt, chunk=cfg.attn_chunk,
+                                        normalize=False)
+                y = y + v * pp["d_skip"].astype(cdt)[None, None, :, None]
+                y = layers.rms_norm(y.reshape(b, s, -1), pp["out_norm"]) * jax.nn.silu(z)
+                x = hint(x + (y @ pp["wd"].astype(cdt)).astype(x.dtype),
+                         "residual")
+                states[f"pos{i}"] = ssm.MambaState(ssm=st, conv=hist)
+            else:
+                raise ValueError(kind)
+        return x, states
+
+    x, states = jax.lax.scan(cycle_body, x, params["blocks"])
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(unembed_table(params, cfg), x[:, -1, :], cdt)
+    return states, logits

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with GShard-style capacity-based dispatch.
+
+Top-k routing is expressed as two dense einsum contractions against one-hot
+dispatch/combine tensors grouped per sequence — the formulation GSPMD shards
+cleanly (DESIGN.md §5):
+
+  * ``phi3.5-moe`` (16 experts == model-axis size): the expert dimension is
+    sharded over ``model`` → true expert parallelism; the combine contraction
+    over (E, C) emits the cross-expert reduction.
+  * ``mixtral`` (8 experts < 16): experts are replicated and ``d_ff`` is
+    sharded over ``model`` (tensor parallelism inside every expert).
+
+Tokens beyond an expert's capacity are dropped (standard GShard semantics);
+an auxiliary load-balancing loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def init_moe(key: Array, d: int, d_ff: int, num_experts: int, dtype) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (d, num_experts)) * s_in).astype(dtype),
+        "gate": (jax.random.normal(kg, (num_experts, d, d_ff)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (num_experts, d, d_ff)) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (num_experts, d_ff, d)) * s_ff).astype(dtype),
+    }
+
+
+def _top_k_dispatch(
+    logits: Array,       # (B, S, E) float32
+    k: int,
+    capacity: int,
+) -> Tuple[Array, Array, Array]:
+    """Build dispatch / combine tensors.
+
+    Returns:
+      dispatch: ``(B, S, E, C)`` {0,1} — token -> expert slot.
+      combine: ``(B, S, E, C)`` float32 — gate-weighted dispatch.
+      aux_loss: scalar load-balancing loss (Switch: E * <f, p>).
+    """
+    b, s, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    dispatch = jnp.zeros((b, s, e, capacity), logits.dtype)
+    combine = jnp.zeros((b, s, e, capacity), logits.dtype)
+    taken = jnp.zeros((b, e), logits.dtype)  # slots consumed per expert
+    masked = logits
+    gates = []
+    masks = []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                     # (B, S)
+        mask = jax.nn.one_hot(idx, e, dtype=logits.dtype)     # (B, S, E)
+        gates.append(jnp.sum(probs * mask, axis=-1))
+        masks.append(mask)
+        masked = jnp.where(mask > 0, -jnp.inf, masked)
+
+    # normalize the selected gates to sum to 1 per token
+    gate_stack = jnp.stack(gates, axis=0)                     # (k, B, S)
+    gate_stack = gate_stack / jnp.maximum(
+        jnp.sum(gate_stack, axis=0, keepdims=True), 1e-9
+    )
+
+    for choice in range(k):
+        mask = masks[choice]                                  # (B, S, E)
+        # position of each token within its expert's slot list
+        pos = jnp.cumsum(mask, axis=1) - mask + taken[:, None, :]
+        taken = taken + jnp.sum(mask, axis=1)
+        in_cap = (pos < capacity).astype(logits.dtype) * mask
+        slot = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                              dtype=logits.dtype)              # (B, S, E, C)
+        d_c = slot * in_cap[..., None]
+        dispatch = dispatch + d_c
+        combine = combine + d_c * gate_stack[choice][..., None, None]
+
+    # Switch-style aux loss on the first choice
+    f = jnp.mean(masks[0], axis=(0, 1))                       # fraction routed
+    p = jnp.mean(probs, axis=(0, 1))                          # mean router prob
+    aux = e * jnp.sum(f * p)
+    return dispatch, combine, aux
+
+
+def moe_ffn(
+    params: Params,
+    x: Array,                # (B, S, d)
+    *,
+    experts_per_token: int,
+    capacity_factor: float,
+    compute_dtype,
+    group_size: int = 4096,
+) -> Tuple[Array, Array]:
+    """MoE SwiGLU FFN. Returns (output (B,S,d), aux load-balance loss).
+
+    Tokens are routed in contiguous *groups* of at most ``group_size``
+    (GShard semantics): capacity is per group, so the dispatch one-hot is
+    ``O(tokens * group_size)`` instead of ``O(tokens * seq_len)`` — the
+    difference between 84 MB/device and 50 GB/device at 32k-token prefill.
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    xc = x.astype(compute_dtype)
+
+    g = min(group_size, s)
+    assert s % g == 0, (s, g)
+    n_groups = b * (s // g)
+    xg = xc.reshape(n_groups, g, d)
+
+    logits = (xg @ params["router"].astype(compute_dtype)).astype(jnp.float32)
+    capacity = max(1, int(g * experts_per_token * capacity_factor / e))
+    dispatch, combine, aux = _top_k_dispatch(logits, experts_per_token, capacity)
+    dispatch = dispatch.astype(compute_dtype)
+    combine = combine.astype(compute_dtype)
+
+    xin = jnp.einsum("bsd,bsec->becd", xg, dispatch)
+    gate = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", xin, params["gate"].astype(compute_dtype))
+    )
+    up = jnp.einsum("becd,edf->becf", xin, params["up"].astype(compute_dtype))
+    out_e = jnp.einsum(
+        "becf,efd->becd", gate * up, params["down"].astype(compute_dtype)
+    )
+    out = jnp.einsum("becd,bsec->bsd", out_e, combine)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,137 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+Real-engine mechanics in miniature:
+  * a fixed number of cache lanes (slots) so the jitted decode step never
+    recompiles mid-serve;
+  * per-lane positions — lanes run at different sequence offsets;
+  * admission resets a lane's cache region and streams the prompt through the
+    shared decode step one token per engine tick (piggy-backed prefill), so
+    new requests join without stalling in-flight generations;
+  * finished requests free their lane immediately (continuous batching).
+
+Batched prompt ingestion for throughput-oriented serving is the separate
+``prefill`` path (``launch/serve.py``); this engine optimizes latency under a
+rolling request mix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Optional[Request] = None
+    prompt_cursor: int = 0        # next prompt token to feed
+    generated: Optional[List[int]] = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.prompt_cursor < len(self.req.prompt)
+
+
+class ServeEngine:
+    """Fixed-slot continuous-batching engine (single host, jit-stable)."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, slots: int,
+                 cache_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.key = jax.random.PRNGKey(seed)
+        self.state = model.init_decode_state(cfg, slots, cache_len)
+        self.pos = np.zeros(slots, np.int32)
+        self.lanes = [_Lane() for _ in range(slots)]
+        self.next_token = np.zeros(slots, np.int32)
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda state, toks, pos: model.decode_step(
+                params, cfg, state, {"tokens": toks}, pos
+            )
+        )
+
+    # -- lane management ----------------------------------------------------
+
+    def _reset_lane(self, i: int) -> None:
+        """Zero one lane's cache/state (leaves have layout (cycles, B, ...))."""
+        self.state = jax.tree.map(
+            lambda x: x.at[:, i].set(jnp.zeros_like(x[:, i])), self.state
+        )
+        self.pos[i] = 0
+
+    def _admit(self, req: Request) -> bool:
+        for i, lane in enumerate(self.lanes):
+            if lane.req is None:
+                self._reset_lane(i)
+                self.lanes[i] = _Lane(req=req, prompt_cursor=0, generated=[])
+                self.next_token[i] = int(req.prompt[0])
+                return True
+        return False
+
+    def _sample(self, logits: Array, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, logits / temperature))
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, requests: List[Request], max_steps: int = 100_000
+            ) -> List[Completion]:
+        queue = list(requests)
+        done: List[Completion] = []
+        while (queue or any(l.req for l in self.lanes)) and \
+                self.steps < max_steps:
+            while queue and self._admit(queue[0]):
+                queue.pop(0)
+            if not any(l.req for l in self.lanes):
+                continue
+
+            logits, self.state = self._decode(
+                self.state, jnp.asarray(self.next_token), jnp.asarray(self.pos)
+            )
+            self.steps += 1
+
+            for i, lane in enumerate(self.lanes):
+                if lane.req is None:
+                    continue  # idle lane decoded a dummy token; state unused
+                self.pos[i] += 1
+                if lane.prefilling:
+                    lane.prompt_cursor += 1
+                    if lane.prompt_cursor < len(lane.req.prompt):
+                        self.next_token[i] = int(lane.req.prompt[lane.prompt_cursor])
+                        continue
+                # generation phase: sample from this lane's logits
+                nxt = self._sample(logits[i], lane.req.temperature)
+                lane.generated.append(nxt)
+                self.next_token[i] = nxt
+                if len(lane.generated) >= lane.req.max_new_tokens or \
+                        self.pos[i] >= self.cache_len - 1:
+                    done.append(Completion(lane.req.rid, lane.generated))
+                    self.lanes[i] = _Lane()
+        return done

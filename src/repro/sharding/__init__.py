@@ -1,0 +1,1 @@
+from repro.sharding import constraints  # noqa: F401

@@ -1,0 +1,42 @@
+"""Activation-sharding hints.
+
+``hint(x, name)`` applies ``jax.lax.with_sharding_constraint`` when the
+launcher has installed a rule for ``name`` — a no-op otherwise (CPU smoke
+tests never see a mesh). GSPMD propagates well from params + inputs alone for
+most graphs; these named hooks are the handles the perf pass (§Perf) uses to
+pin activation layouts where the default propagation picks badly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_state = threading.local()
+
+
+def _rules() -> Dict[str, PartitionSpec]:
+    return getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Optional[Dict[str, PartitionSpec]]):
+    """Install named activation sharding rules for the enclosed trace."""
+    prev = _rules()
+    _state.rules = dict(rules or {})
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def hint(x, name: str):
+    rules = _rules()
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,273 @@
+"""Named-sharding rules: params, optimizer state, inputs, decode caches.
+
+Strategy (DESIGN.md §5):
+  * **TP** (Megatron column->row) over the ``model`` axis for every matmul
+    pair; GQA K/V projections shard only when ``num_kv_heads`` divides the
+    axis, else they replicate (they are small).
+  * **FSDP/ZeRO** over ``(pod, data)`` on one non-TP dim of every large
+    param — weights are all-gathered per layer inside the scan; optimizer
+    moments/master follow the same specs, which is ZeRO-1 for free.
+  * **MoE**: expert dim sharded over ``model`` when divisible (true EP —
+    phi3.5's 16 experts), otherwise TP inside each expert (mixtral's 8).
+  * **Decode caches**: batch over ``data``; KV-sequence over ``model``
+    (flash-decoding style — softmax stats psum instead of logit gathers);
+    long_500k (batch=1) shards sequence over data too.
+
+Every sharded dim is divisibility-checked against the actual leaf shape, so
+the same rules serve 1-device CPU tests and the 512-chip production mesh.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP_MIN_SIZE = 1 << 20  # don't bother FSDP-sharding params under 1M elements
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (fsdp_axes, tp_axis)."""
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return fsdp, tp
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+class SpecBuilder:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.fsdp, self.tp = mesh_axes(mesh)
+        self.tp_size = _axis_size(mesh, self.tp)
+        self.fsdp_size = _axis_size(mesh, self.fsdp)
+
+    def _tp_if(self, dim: int) -> Optional[str]:
+        return self.tp if self.tp and dim % self.tp_size == 0 else None
+
+    def _fsdp_if(self, dim: int, numel: int):
+        if not self.fsdp or numel < FSDP_MIN_SIZE:
+            return None
+        return self.fsdp if dim % self.fsdp_size == 0 else None
+
+    def matmul2d(self, shape, stacked: bool, tp_dim: int):
+        """Spec for a (possibly layer-stacked) 2D matmul weight.
+
+        tp_dim: which logical dim (0/1 of the 2D part) carries TP.
+        FSDP goes on the other dim when it divides.
+        """
+        off = 1 if stacked else 0
+        d0, d1 = shape[off], shape[off + 1]
+        numel = int(np.prod(shape))
+        spec = [None] * len(shape)
+        dims = [d0, d1]
+        tp_axis = self._tp_if(dims[tp_dim])
+        if tp_axis:
+            spec[off + tp_dim] = tp_axis
+        other = 1 - tp_dim
+        spec[off + other] = self._fsdp_if(dims[other], numel)
+        return P(*spec)
+
+    def replicated_fsdp(self, shape, stacked: bool, dim: int = 0):
+        """No TP; FSDP on one dim if large enough."""
+        off = 1 if stacked else 0
+        numel = int(np.prod(shape))
+        spec = [None] * len(shape)
+        spec[off + dim] = self._fsdp_if(shape[off + dim], numel)
+        return P(*spec)
+
+    def moe3d(self, shape, stacked: bool, tp_dim_in_expert: int):
+        """(L?, E, d0, d1): EP over experts when divisible, else TP in-expert."""
+        off = 1 if stacked else 0
+        e = shape[off]
+        numel = int(np.prod(shape))
+        spec = [None] * len(shape)
+        if self.tp and e % self.tp_size == 0:
+            spec[off] = self.tp  # expert parallelism
+            # FSDP the first matmul dim if it divides
+            spec[off + 1] = self._fsdp_if(shape[off + 1], numel)
+        else:
+            spec[off + 1 + tp_dim_in_expert] = self._tp_if(
+                shape[off + 1 + tp_dim_in_expert]
+            )
+            other = 1 - tp_dim_in_expert
+            spec[off + 1 + other] = self._fsdp_if(shape[off + 1 + other], numel)
+        return P(*spec)
+
+
+# name -> (handler, kwargs); matched against the last path component(s)
+def param_spec(path_str: str, leaf, builder: SpecBuilder) -> P:
+    shape = leaf.shape
+    stacked = path_str.startswith("['blocks']")
+    name = path_str.split("'")[-2]  # last quoted key
+
+    if leaf.ndim - (1 if stacked else 0) <= 1:
+        # norms, biases, gate scalars: replicate (except wide out_norms)
+        if name == "out_norm" and shape[-1] % builder.tp_size == 0 and builder.tp:
+            return P(*([None] * (leaf.ndim - 1) + [builder.tp]))
+        return P(*([None] * leaf.ndim))
+
+    if name == "embed":
+        # vocab over TP; feature over FSDP when divisible
+        spec = [builder._tp_if(shape[0]), builder._fsdp_if(shape[1], leaf.size)]
+        return P(*spec)
+    if name == "unembed":
+        return P(builder._fsdp_if(shape[0], leaf.size), builder._tp_if(shape[1]))
+
+    in_moe = "['moe']" in path_str
+    if in_moe:
+        if name == "router":
+            return builder.replicated_fsdp(shape, stacked, dim=0)
+        if name in ("gate", "up"):
+            return builder.moe3d(shape, stacked, tp_dim_in_expert=1)
+        if name == "down":
+            return builder.moe3d(shape, stacked, tp_dim_in_expert=0)
+
+    if name in ("wq", "wk", "wv"):
+        # column-parallel; K/V replicate when kv-heads don't divide TP
+        off = 1 if stacked else 0
+        out_dim = shape[off + 1]
+        if name in ("wk", "wv"):
+            kv = builder.cfg.num_kv_heads
+            if builder.tp and kv % builder.tp_size != 0:
+                return builder.replicated_fsdp(shape, stacked, dim=0)
+        return builder.matmul2d(shape, stacked, tp_dim=1)
+    if name in ("wo", "down", "wd"):
+        return builder.matmul2d(shape, stacked, tp_dim=0)
+    if name in ("gate", "up", "wo_gate", "w_x", "w_z"):
+        return builder.matmul2d(shape, stacked, tp_dim=1)
+    if name in ("w_bc", "w_dt", "w_if", "router"):
+        return builder.replicated_fsdp(shape, stacked, dim=0)
+    if name in ("conv_x_w", "conv_bc_w"):
+        off = 1 if stacked else 0
+        spec = [None] * leaf.ndim
+        spec[off + 1] = builder._tp_if(shape[off + 1]) if name == "conv_x_w" else None
+        return P(*spec)
+    # default: replicate small, FSDP large
+    return builder.replicated_fsdp(shape, stacked, dim=0)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    b = SpecBuilder(mesh, cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(jax.tree_util.keystr(path), leaf, b),
+        params,
+    )
+
+
+def opt_state_specs(opt_state: Any, pspecs: Any) -> Any:
+    """Moments/master mirror param specs; scalars replicate."""
+    import jax.tree_util as jtu
+
+    def like_params(subtree):
+        return jtu.tree_map(lambda _, s: s, subtree, pspecs)
+
+    from repro.train.optimizer import AdamWState
+
+    return AdamWState(
+        step=P(),
+        mu=like_params(opt_state.mu),
+        nu=like_params(opt_state.nu),
+        master=None if opt_state.master is None else like_params(opt_state.master),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inputs / activations / caches
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Token/label/embeds batches: shard dim0 (batch) over DP axes."""
+    dp = dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % max(dp_size, 1) == 0 and dp:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch)
+
+
+def decode_state_specs(state: Any, cfg: ModelConfig, mesh: Mesh,
+                       batch_size: int) -> Any:
+    """Cache sharding. Leaves are stacked (cycles, B, ...).
+
+    * KV caches (cycles, B, T, KH, hd): B over DP when divisible; KV heads
+      over TP when divisible, else T (sequence) over TP (flash-decoding);
+      for B == 1 (long_500k) the sequence also takes the DP axes.
+    * Recurrent states (cycles, B, H, ...): B over DP; heads over TP when
+      divisible, else the wider state dim.
+    """
+    b = SpecBuilder(mesh, cfg)
+    dp = dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    batch_ok = dp and batch_size % dp_size == 0
+
+    def spec(leaf):
+        shape = leaf.shape
+        spec_l = [None] * leaf.ndim
+        if leaf.ndim >= 2 and batch_ok:
+            spec_l[1] = dp
+        if leaf.ndim == 5:  # KV cache (cycles, B, KH, T, hd)
+            kh, t = shape[2], shape[3]
+            if b.tp and kh % b.tp_size == 0:
+                spec_l[2] = b.tp
+            elif b.tp and t % b.tp_size == 0:
+                spec_l[3] = b.tp
+            if not batch_ok and dp and t % (dp_size * b.tp_size) == 0 and \
+                    spec_l[3] == b.tp:
+                spec_l[3] = tuple(dp) + (b.tp,)
+            elif not batch_ok and dp and spec_l[3] is None and \
+                    t % dp_size == 0:
+                spec_l[3] = dp
+        elif leaf.ndim >= 3:  # recurrent states (cycles, B, H, ...)
+            h = shape[2]
+            if b.tp and h % b.tp_size == 0:
+                spec_l[2] = b.tp
+            elif b.tp and leaf.ndim >= 4 and shape[3] % b.tp_size == 0:
+                spec_l[3] = b.tp
+        return P(*spec_l)
+
+    return jax.tree.map(spec, state)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def activation_hint_rules(cfg: ModelConfig, mesh: Mesh):
+    """Named rules consumed by sharding.constraints.hint inside the model."""
+    dp = dp_axes(mesh)
+    if cfg.sequence_parallel and "model" in mesh.axis_names:
+        # linear-recurrence archs: activations sequence-sharded over `model`
+        return {"residual": P(dp, "model", None)}
+    return {"residual": P(dp, None, None)}

@@ -1,0 +1,1 @@
+from repro.train import checkpoint, compression, optimizer, train_step, trainer  # noqa: F401

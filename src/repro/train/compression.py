@@ -1,0 +1,117 @@
+"""Count-sketch gradient compression for cross-pod all-reduce (beyond-paper).
+
+STORM's counters are mergeable by addition because count sketches are linear;
+the same linearity lets us compress *gradients*: sketch each pod's gradient,
+all-reduce the tiny sketch over the slow cross-pod links, and unsketch
+(FetchSGD, Rothchild et al. 2020 — same substrate as the paper, applied to
+the distributed-optimization layer):
+
+    sketch(g1) + sketch(g2) = sketch(g1 + g2)
+
+Unsketching uses the median-of-rows count-sketch estimator plus top-k
+extraction with error feedback (the residual is carried into the next step),
+which preserves convergence. Intra-pod reduction stays exact (fast ICI);
+compression applies only across the `pod` axis where links are scarce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchCompressorConfig:
+    rows: int = 5                 # median-of-rows estimator
+    cols: int = 1 << 18           # sketch width per row
+    top_k_fraction: float = 0.01  # fraction of coordinates kept at unsketch
+    seed: int = 17
+
+
+class CompressorState(NamedTuple):
+    residual: Any  # error-feedback tree, same structure as grads
+
+
+def _hash_params(cfg: SketchCompressorConfig, n: int) -> Tuple[Array, Array]:
+    """Per-coordinate (bucket, sign) for each row; derived, never stored."""
+    key = jax.random.PRNGKey(cfg.seed)
+    kb, ks = jax.random.split(key)
+    buckets = jax.random.randint(kb, (cfg.rows, n), 0, cfg.cols)
+    signs = jax.random.rademacher(ks, (cfg.rows, n), dtype=jnp.float32)
+    return buckets, signs
+
+
+def sketch_vector(cfg: SketchCompressorConfig, vec: Array) -> Array:
+    """Dense vector (n,) -> count sketch (rows, cols). Linear in ``vec``."""
+    n = vec.shape[0]
+    buckets, signs = _hash_params(cfg, n)
+    contrib = vec[None, :] * signs                      # (rows, n)
+    sk = jax.vmap(
+        lambda b, c: jnp.zeros((cfg.cols,), vec.dtype).at[b].add(c)
+    )(buckets, contrib)
+    return sk
+
+
+def unsketch_vector(cfg: SketchCompressorConfig, sk: Array, n: int) -> Array:
+    """Median-of-rows estimate, then keep top-k by magnitude."""
+    buckets, signs = _hash_params(cfg, n)
+    est = jnp.median(sk[jnp.arange(cfg.rows)[:, None], buckets] * signs, axis=0)
+    k = max(1, int(n * cfg.top_k_fraction))
+    thresh = jax.lax.top_k(jnp.abs(est), k)[0][-1]
+    return jnp.where(jnp.abs(est) >= thresh, est, 0.0)
+
+
+def init_state(grads_template: Any) -> CompressorState:
+    return CompressorState(
+        residual=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_template
+        )
+    )
+
+
+def compress_allreduce(
+    cfg: SketchCompressorConfig,
+    grads: Any,
+    state: CompressorState,
+    axis_name: str | None = None,
+) -> Tuple[Any, CompressorState]:
+    """Error-feedback sketch -> (psum over ``axis_name``) -> unsketch.
+
+    Inside ``shard_map`` the sketch is psum'd across the pod axis; without an
+    axis (tests, single host) the sketch round-trip alone is exercised.
+    Communication per step: rows * cols floats, independent of model size.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(state.residual)
+    sizes = [int(l.size) for l in leaves]
+    flat = jnp.concatenate(
+        [ (l.astype(jnp.float32) + r.astype(jnp.float32)).reshape(-1)
+          for l, r in zip(leaves, res_leaves) ]
+    )
+    sk = sketch_vector(cfg, flat)
+    if axis_name is not None:
+        sk = jax.lax.psum(sk, axis_name)
+        denom = jax.lax.psum(jnp.ones(()), axis_name)
+    else:
+        denom = 1.0
+    est = unsketch_vector(cfg, sk, flat.shape[0]) / denom
+    new_residual_flat = flat - est * denom  # what this pod failed to transmit
+
+    outs, residuals, off = [], [], 0
+    for l, n in zip(leaves, sizes):
+        outs.append(est[off : off + n].reshape(l.shape).astype(l.dtype))
+        residuals.append(new_residual_flat[off : off + n].reshape(l.shape))
+        off += n
+    return (
+        jax.tree.unflatten(treedef, outs),
+        CompressorState(residual=jax.tree.unflatten(treedef, residuals)),
+    )
+
+
+def compression_ratio(cfg: SketchCompressorConfig, n_params: int) -> float:
+    return n_params / float(cfg.rows * cfg.cols)

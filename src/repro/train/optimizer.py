@@ -1,0 +1,140 @@
+"""AdamW with a configurable dtype policy + cosine schedule.
+
+Implemented in-tree (no optax in this container) with the pieces the 405B
+config needs: f32 master weights held in the optimizer state when params are
+bf16, optional bf16 first/second moments (halves optimizer HBM — the
+difference between fitting and not fitting 405B on 16 GB v5e chips, see
+EXPERIMENTS.md §Dry-run), decoupled weight decay and global-norm clipping.
+
+State sharding (ZeRO-1) is decided in ``sharding/specs.py`` — the state tree
+mirrors the param tree, so spec derivation is a tree-map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # bf16 halves optimizer memory
+    master_dtype: str = "float32"        # f32 master copies when params bf16;
+                                         # set equal to the param dtype to
+                                         # drop master copies entirely (405B)
+    grad_dtype: str = "float32"          # accumulation dtype for microbatches
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any          # first moment, tree like params
+    nu: Any          # second moment
+    master: Any      # master weights (None-tree when params are already f32)
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup + cosine decay to ``min_lr_ratio``."""
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step.astype(jnp.float32) - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cosine
+    return cfg.learning_rate * warm * decay
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    mdt = _dt(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    needs_master = any(
+        p.dtype != _dt(cfg.master_dtype) for p in jax.tree.leaves(params)
+    )
+    master = (
+        jax.tree.map(lambda p: p.astype(_dt(cfg.master_dtype)), params)
+        if needs_master
+        else None
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def apply(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+) -> Tuple[Any, AdamWState, Dict[str, Array]]:
+    """One AdamW update. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    clip_scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    mdt = _dt(cfg.moment_dtype)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    source = state.master if state.master is not None else params
+
+    def upd(p_master, g, mu, nu):
+        g = g.astype(jnp.float32) * clip_scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mu_hat = mu32 / b1c
+        nu_hat = nu32 / b2c
+        p32 = p_master.astype(jnp.float32)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p32
+        p_new = p32 - lr * delta
+        return p_new, mu32.astype(mdt), nu32.astype(mdt)
+
+    out = jax.tree.map(upd, source, grads, state.mu, state.nu)
+    # unzip the 3-tuples
+    treedef = jax.tree.structure(params)
+    flat = treedef.flatten_up_to(out)
+    p_new32 = treedef.unflatten([t[0] for t in flat])
+    mu_new = treedef.unflatten([t[1] for t in flat])
+    nu_new = treedef.unflatten([t[2] for t in flat])
+
+    new_master = (
+        jax.tree.map(lambda p: p.astype(_dt(cfg.master_dtype)), p_new32)
+        if state.master is not None
+        else None
+    )
+    new_params = jax.tree.map(
+        lambda p32, p_old: p32.astype(p_old.dtype), p_new32, params
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "param_norm": global_norm(new_params)}
+    return new_params, AdamWState(step, mu_new, nu_new, new_master), metrics

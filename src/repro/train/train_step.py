@@ -1,0 +1,105 @@
+"""The jitted training step: loss, (accumulated) grads, optimizer update.
+
+Gradient accumulation scans over microbatches so the activation peak is one
+microbatch's worth — with remat inside the model this is what bounds 405B
+train_4k memory. The optional cross-pod count-sketch compressor hooks in
+between grad computation and the optimizer (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt_lib.AdamWConfig = dataclasses.field(
+        default_factory=opt_lib.AdamWConfig
+    )
+    microbatches: int = 1      # grad accumulation steps per update
+    aux_weight: float = 0.01   # MoE load-balance loss weight
+
+
+class TrainStateT(NamedTuple):
+    params: Any
+    opt: opt_lib.AdamWState
+    step: Array
+
+
+def init_state(key: Array, cfg: ModelConfig, tcfg: TrainConfig) -> TrainStateT:
+    params = model.init_params(key, cfg)
+    return TrainStateT(
+        params=params,
+        opt=opt_lib.init(tcfg.optimizer, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_microbatches(batch: Dict[str, Array], n: int) -> Dict[str, Array]:
+    """(B, ...) -> (n, B/n, ...) for scan."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def loss_and_grads(
+    params: Any, cfg: ModelConfig, batch: Dict[str, Array],
+    microbatches: int = 1, aux_weight: float = 0.01,
+    grad_dtype: str = "float32",
+) -> Tuple[Array, Any]:
+    """Mean loss + grads, accumulated over microbatches with lax.scan."""
+    if microbatches <= 1:
+        return jax.value_and_grad(
+            lambda p: model.train_loss(p, cfg, batch, aux_weight)
+        )(params)
+
+    mb = _split_microbatches(batch, microbatches)
+    acc_dtype = jnp.dtype(grad_dtype)
+
+    def step(carry, mbatch):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(
+            lambda p: model.train_loss(p, cfg, mbatch, aux_weight)
+        )(params)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(acc_dtype), grads_acc, grads
+        )
+        return (loss_acc + loss, grads_acc), None
+
+    init = (
+        jnp.zeros((), jnp.float32),
+        jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params),
+    )
+    (loss_sum, grads_sum), _ = jax.lax.scan(step, init, mb)
+    inv = 1.0 / microbatches
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)
+
+
+def train_step(
+    state: TrainStateT,
+    batch: Dict[str, Array],
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+) -> Tuple[TrainStateT, Dict[str, Array]]:
+    """One optimizer update. jit this with donate_argnums=(0,)."""
+    loss, grads = loss_and_grads(
+        state.params, cfg, batch, tcfg.microbatches, tcfg.aux_weight,
+        grad_dtype=tcfg.optimizer.grad_dtype,
+    )
+    new_params, new_opt, metrics = opt_lib.apply(
+        tcfg.optimizer, state.params, grads, state.opt
+    )
+    metrics["loss"] = loss
+    return TrainStateT(new_params, new_opt, state.step + 1), metrics

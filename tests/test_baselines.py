@@ -1,0 +1,83 @@
+"""Baseline solvers (paper §5): sampling + sketch-and-solve fidelity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.data import datasets
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return datasets.make_regression(jax.random.PRNGKey(0), 1200, 6, noise=0.1,
+                                    condition=20)
+
+
+class TestOLS:
+    def test_exact_on_noiseless(self):
+        x, y, theta = datasets.make_regression(jax.random.PRNGKey(1), 400, 4,
+                                               noise=0.0, condition=3)
+        fit = baselines.ols(x, y)
+        np.testing.assert_allclose(np.asarray(fit.theta), np.asarray(theta),
+                                   atol=1e-3)
+        assert float(fit.mse(x, y)) < 1e-6
+
+
+class TestSampling:
+    def test_uniform_converges_with_m(self, problem):
+        x, y, _ = problem
+        ols_mse = float(baselines.ols(x, y).mse(x, y))
+        big = float(baselines.uniform_sampling(jax.random.PRNGKey(2), x, y,
+                                               800).mse(x, y))
+        assert big < ols_mse * 1.5
+
+    def test_leverage_scores_sum_to_rank(self, problem):
+        x, _, _ = problem
+        scores = baselines.leverage_scores(x)
+        np.testing.assert_allclose(float(scores.sum()), x.shape[1] + 1, rtol=1e-4)
+        assert float(scores.min()) >= 0.0
+
+    def test_leverage_sampling_reasonable(self, problem):
+        x, y, _ = problem
+        mse = float(baselines.leverage_sampling(jax.random.PRNGKey(3), x, y,
+                                                400).mse(x, y))
+        ols_mse = float(baselines.ols(x, y).mse(x, y))
+        assert mse < ols_mse * 3.0
+
+
+class TestClarksonWoodruff:
+    def test_close_to_ols_for_large_m(self, problem):
+        x, y, _ = problem
+        fit = baselines.clarkson_woodruff(jax.random.PRNGKey(4), x, y, 600)
+        ols_mse = float(baselines.ols(x, y).mse(x, y))
+        assert float(fit.mse(x, y)) < ols_mse * 2.0
+
+    def test_streaming_merge_equivalence(self):
+        """CountSketch is linear: sketching halves and summing == sketching all.
+
+        (This mirrors STORM's mergeability and is why CW is the natural
+        sketch baseline.)"""
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(5), 200, 3,
+                                           noise=0.1)
+        key = jax.random.PRNGKey(6)
+        n = x.shape[0]
+        k_row, k_sign = jax.random.split(key)
+        rows = jax.random.randint(k_row, (n,), 0, 64)
+        signs = jax.random.rademacher(k_sign, (n,), dtype=x.dtype)
+        xb = jnp.concatenate([x, jnp.ones((n, 1))], axis=-1) * signs[:, None]
+        full = jax.ops.segment_sum(xb, rows, num_segments=64)
+        half = jax.ops.segment_sum(xb[:100], rows[:100], num_segments=64) + \
+            jax.ops.segment_sum(xb[100:], rows[100:], num_segments=64)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(half), atol=1e-4)
+
+
+class TestMemoryAccounting:
+    def test_bytes_positive_and_ordered(self, problem):
+        x, y, _ = problem
+        small = baselines.uniform_sampling(jax.random.PRNGKey(7), x, y, 32)
+        large = baselines.uniform_sampling(jax.random.PRNGKey(7), x, y, 512)
+        assert 0 < small.memory_bytes < large.memory_bytes

@@ -1,0 +1,53 @@
+"""End-to-end STORM max-margin classification tests (paper §4.2, Thm 3)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import classification, dfo
+from repro.data import datasets
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _fast_config(planes=1, rows=512):
+    return classification.StormClassifierConfig(
+        rows=rows, planes=planes,
+        dfo=dfo.DFOConfig(steps=200, num_queries=8, sigma=0.5,
+                          learning_rate=1.0, decay=0.995, average_tail=0.5),
+    )
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return datasets.make_classification(jax.random.PRNGKey(0), 1500, 2, margin=0.7)
+
+
+class TestFit:
+    def test_separable_blobs_high_accuracy(self, blobs):
+        x, y, _ = blobs
+        fit = classification.fit(jax.random.PRNGKey(1), x, y, _fast_config())
+        assert float(fit.accuracy(x, y)) > 0.9
+
+    @pytest.mark.parametrize("planes", [1, 2])
+    def test_planes_variants(self, blobs, planes):
+        x, y, _ = blobs
+        fit = classification.fit(jax.random.PRNGKey(2), x, y, _fast_config(planes))
+        assert float(fit.accuracy(x, y)) > 0.85
+
+    def test_higher_dim(self):
+        x, y, _ = datasets.make_classification(jax.random.PRNGKey(3), 2000, 8,
+                                               margin=0.8)
+        fit = classification.fit(jax.random.PRNGKey(4), x, y,
+                                 _fast_config(rows=2048))
+        assert float(fit.accuracy(x, y)) > 0.85
+
+    def test_decision_scale_free(self, blobs):
+        """Predictions depend only on the direction of theta."""
+        x, y, _ = blobs
+        fit = classification.fit(jax.random.PRNGKey(1), x, y, _fast_config())
+        preds1 = fit.predict(x)
+        scaled = fit._replace(theta=fit.theta * 13.0)
+        assert jnp.array_equal(preds1, scaled.predict(x))

@@ -1,0 +1,76 @@
+"""Derivative-free optimizer tests (paper Algorithm 2 machinery)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quadratic(center):
+    def f(pts):  # (q, d) -> (q,)
+        d = pts - center
+        return jnp.sum(d * d, axis=-1)
+
+    return f
+
+
+class TestMinimize:
+    def test_converges_on_quadratic(self):
+        center = jnp.asarray([0.7, -0.4, 0.2])
+        cfg = dfo.DFOConfig(steps=300, num_queries=8, sigma=0.2, sigma_decay=0.99,
+                            learning_rate=0.05, decay=0.995, average_tail=0.3)
+        res = dfo.minimize(_quadratic(center), jnp.zeros(3), jax.random.PRNGKey(0), cfg)
+        assert float(jnp.linalg.norm(res.theta - center)) < 0.05
+        assert float(res.losses[-1]) < float(res.losses[0])
+
+    def test_projection_enforced(self):
+        center = jnp.asarray([0.5, 0.5])
+        cfg = dfo.DFOConfig(steps=50, num_queries=4, sigma=0.2, learning_rate=0.05)
+        res = dfo.minimize(
+            _quadratic(center), jnp.zeros(2), jax.random.PRNGKey(0), cfg,
+            project=dfo.pin_last_coordinate(-1.0),
+        )
+        assert float(res.theta[-1]) == -1.0
+
+    def test_non_antithetic_path(self):
+        cfg = dfo.DFOConfig(steps=150, num_queries=12, sigma=0.2,
+                            learning_rate=0.03, antithetic=False)
+        res = dfo.minimize(_quadratic(jnp.asarray([0.3, 0.1])), jnp.zeros(2),
+                           jax.random.PRNGKey(1), cfg)
+        assert float(jnp.linalg.norm(res.theta - jnp.asarray([0.3, 0.1]))) < 0.15
+
+    def test_loss_trace_shape(self):
+        cfg = dfo.DFOConfig(steps=17, num_queries=2, sigma=0.1)
+        res = dfo.minimize(_quadratic(jnp.zeros(2)), jnp.ones(2),
+                           jax.random.PRNGKey(0), cfg)
+        assert res.losses.shape == (17,)
+
+
+class TestQuadraticRefine:
+    def test_exact_on_quadratic(self):
+        """The model-based polish recovers a quadratic's optimum in one shot."""
+        center = jnp.asarray([0.25, -0.6, 0.1, 0.4])
+        theta0 = center + 0.2
+        out = dfo.quadratic_refine(
+            _quadratic(center), theta0, jax.random.PRNGKey(0), radius=0.5
+        )
+        assert float(jnp.linalg.norm(out - center)) < 1e-2
+
+    def test_never_accepts_worse(self):
+        """On an adversarial (linear) landscape the accept test keeps theta sane."""
+        f = lambda pts: jnp.sum(pts, axis=-1)
+        theta0 = jnp.zeros(3)
+        out = dfo.quadratic_refine(f, theta0, jax.random.PRNGKey(0), radius=0.3)
+        assert float(f(out[None, :])[0]) <= float(f(theta0[None, :])[0]) + 1e-6
+
+    def test_respects_projection(self):
+        center = jnp.asarray([0.2, 0.3, -1.0])
+        out = dfo.quadratic_refine(
+            _quadratic(center), jnp.asarray([0.0, 0.0, -1.0]),
+            jax.random.PRNGKey(0), radius=0.4,
+            project=dfo.pin_last_coordinate(-1.0),
+        )
+        assert float(out[-1]) == -1.0

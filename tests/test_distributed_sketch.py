@@ -1,0 +1,93 @@
+"""Distributed sketch build + merge (psum == mergeable summary).
+
+The psum-based SPMD path needs >1 device to be meaningful; we spawn a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+those cases (the main test process must keep seeing 1 device — see the
+dry-run notes in DESIGN.md).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import distributed, lsh, sketch
+
+jax.config.update("jax_platform_name", "cpu")
+
+_REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class TestTreeMerge:
+    def test_tree_merge_equals_union(self):
+        params = lsh.init_srp(jax.random.PRNGKey(0), 32, 3, 6)
+        shards = [
+            0.4 * jax.random.normal(jax.random.PRNGKey(i), (30 + i, 6))
+            for i in range(5)
+        ]
+        merged = distributed.tree_merge(
+            [sketch.sketch_dataset(params, z, batch=16, paired=False) for z in shards]
+        )
+        union = sketch.sketch_dataset(params, jnp.concatenate(shards), batch=16, paired=False)
+        np.testing.assert_array_equal(np.asarray(merged.counts),
+                                      np.asarray(union.counts))
+        assert int(merged.n) == int(union.n)
+
+    def test_single_shard(self):
+        params = lsh.init_srp(jax.random.PRNGKey(0), 8, 2, 4)
+        z = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (10, 4))
+        sk = sketch.sketch_dataset(params, z, batch=5, paired=False)
+        out = distributed.tree_merge([sk])
+        np.testing.assert_array_equal(np.asarray(out.counts), np.asarray(sk.counts))
+
+
+class TestShardedSingleDevice:
+    def test_sharded_sketch_on_one_device(self):
+        """shard_map over a 1-device mesh must equal the local build."""
+        params = lsh.init_srp(jax.random.PRNGKey(0), 16, 3, 5)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(1), (64, 5))
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        got = distributed.sharded_sketch(params, z, mesh, axis="data",
+                                         paired=False, batch=16)
+        want = sketch.sketch_dataset(params, z, batch=16, paired=False)
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(want.counts))
+        assert int(got.n) == int(want.n)
+
+
+class TestShardedMultiDevice:
+    def test_psum_merge_across_8_fake_devices(self):
+        """Full SPMD path: 8 host devices, data sharded, psum-merged sketch
+        must match the single-device union sketch bit-for-bit."""
+        prog = textwrap.dedent(
+            """
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, jax.numpy as jnp
+            import numpy as np
+            from jax.sharding import Mesh
+            from repro.core import distributed, lsh, sketch
+
+            params = lsh.init_srp(jax.random.PRNGKey(0), 16, 3, 5)
+            z = 0.4 * jax.random.normal(jax.random.PRNGKey(1), (64, 5))
+            mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+            got = distributed.sharded_sketch(params, z, mesh, axis="data",
+                                             paired=False, batch=8)
+            want = sketch.sketch_dataset(params, z, batch=8, paired=False)
+            assert np.array_equal(np.asarray(got.counts), np.asarray(want.counts)), \\
+                "psum merge != union sketch"
+            assert int(got.n) == int(want.n)
+            print("OK")
+            """
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout

@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO roofline accounting (launch/hlo_analysis.py)."""
+
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+
+def _analyze(text):
+    return H.analyze_text(textwrap.dedent(text))
+
+
+MODULE = """
+%cond (arg: (s32[], f32[8,128])) -> pred[] {
+  %arg = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %arg = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups={}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ip, %ar)
+}
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %p0)
+  %while.1 = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+class TestAnalyzer:
+    def test_trip_count_multiplies_flops(self):
+        res = _analyze(MODULE)
+        # one dot of 2*8*128*128 flops, 10 trips
+        assert res["flops"] == 10 * 2 * 8 * 128 * 128
+
+    def test_collectives_trip_aware(self):
+        res = _analyze(MODULE)
+        # max(in, out) = 4096 bytes per trip, 10 trips
+        assert res["coll:all-reduce"] == 10 * 8 * 128 * 4
+        assert res["collective_bytes"] == 10 * 8 * 128 * 4
+
+    def test_comment_stripping(self):
+        res = _analyze(MODULE.replace(
+            "%ar = f32[8,128]{1,0} all-reduce(%dot.1)",
+            "%ar = f32[8,128]{1,0} all-reduce(%dot.1, /*index=5*/%dot.1)",
+        ))
+        assert res["flops"] == 10 * 2 * 8 * 128 * 128
+
+    def test_shape_bytes(self):
+        assert H._shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+        assert H._shape_bytes("bf16[2,3]") == 12
+        assert H._shape_bytes("(s32[], f32[4])") == 4 + 16
+        assert H._shape_bytes("pred[]") == 1

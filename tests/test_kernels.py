@@ -1,0 +1,159 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles.
+
+Per the kernel contract, every kernel is swept over shapes/dtypes and checked
+bit-exactly (codes, counts are integers) or to float tolerance (query means)
+against ``repro.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.kernels import ops, ref
+from repro.kernels import sketch_query as query_kernel
+from repro.kernels import srp_hash as hash_kernel
+from repro.kernels import storm_sketch as histogram_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _inputs(n, d, r, p, seed=0, dtype=jnp.float32):
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (n, d), dtype)
+    w = jax.random.normal(kw, (p, d, r), dtype)
+    mask = (jax.random.uniform(km, (n,)) > 0.25).astype(jnp.float32)
+    return x, w, mask
+
+
+SHAPES = [
+    (8, 4, 8, 1),       # minimal
+    (100, 11, 64, 4),   # paper-scale regression (d ~ 10)
+    (300, 130, 256, 4), # d > block boundary
+    (513, 512, 300, 2), # n, r off tile boundaries
+    (64, 1024, 128, 8), # deep feature dim, p = 8 (B = 256)
+]
+
+
+class TestSRPHashKernel:
+    @pytest.mark.parametrize("n,d,r,p", SHAPES)
+    def test_matches_oracle(self, n, d, r, p):
+        x, w, _ = _inputs(n, d, r, p)
+        got = hash_kernel.srp_hash(x, w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.srp_hash(x, w)))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x, w, _ = _inputs(64, 32, 32, 4, dtype=dtype)
+        got = hash_kernel.srp_hash(x, w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.srp_hash(x, w)))
+
+    @given(n=st.integers(1, 70), d=st.integers(1, 40),
+           r=st.integers(1, 40), p=st.integers(1, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_property_sweep(self, n, d, r, p):
+        x, w, _ = _inputs(n, d, r, p, seed=n * 1000 + d)
+        got = hash_kernel.srp_hash(x, w, interpret=True, block_n=32, block_r=32,
+                                   block_d=32)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.srp_hash(x, w)))
+
+    def test_codes_bounded(self):
+        x, w, _ = _inputs(50, 20, 30, 5)
+        codes = np.asarray(hash_kernel.srp_hash(x, w, interpret=True))
+        assert codes.min() >= 0 and codes.max() < 32
+
+
+class TestHashHistogramKernel:
+    @pytest.mark.parametrize("n,d,r,p", SHAPES)
+    def test_matches_oracle(self, n, d, r, p):
+        x, w, mask = _inputs(n, d, r, p)
+        got = histogram_kernel.hash_histogram(x, w, mask, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.hash_histogram(x, w, mask))
+        )
+
+    def test_mass_conservation(self):
+        """Histogram total mass == number of unmasked points x rows."""
+        x, w, mask = _inputs(200, 16, 48, 4)
+        got = histogram_kernel.hash_histogram(x, w, mask, interpret=True)
+        assert int(np.asarray(got).sum()) == int(mask.sum()) * 48
+
+    @given(n=st.integers(1, 60), block_n=st.sampled_from([8, 16, 32]))
+    @settings(max_examples=10, deadline=None)
+    def test_block_invariance(self, n, block_n):
+        """Counts must not depend on the tiling."""
+        x, w, mask = _inputs(n, 24, 16, 3, seed=n)
+        a = histogram_kernel.hash_histogram(x, w, mask, interpret=True,
+                                            block_n=block_n)
+        b = ref.hash_histogram(x, w, mask)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestSketchQueryKernel:
+    @pytest.mark.parametrize("m,d,r,p", [(1, 8, 16, 2), (16, 11, 64, 4),
+                                         (32, 512, 1024, 4), (128, 64, 300, 3)])
+    def test_matches_oracle(self, m, d, r, p):
+        q, w, _ = _inputs(m, d, r, p, seed=7)
+        counts = jax.random.randint(jax.random.PRNGKey(8), (r, 1 << p), 0, 1000)
+        got = query_kernel.sketch_query(q, w, counts, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.sketch_query(q, w, counts)),
+            rtol=1e-5,
+        )
+
+    def test_uniform_counts_give_constant(self):
+        """With constant counters every query must return that constant."""
+        q, w, _ = _inputs(9, 16, 32, 4, seed=9)
+        counts = jnp.full((32, 16), 7, jnp.int32)
+        got = query_kernel.sketch_query(q, w, counts, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), 7.0, rtol=1e-6)
+
+
+class TestOpsIntegration:
+    def test_build_sketch_equals_core_streaming(self):
+        """Fused one-shot build == core scan-based streaming build."""
+        params = lsh.init_srp(jax.random.PRNGKey(1), 96, 4, 9)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (257, 7))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        fused = ops.build_sketch(params, zs, paired=True, mode="interpret")
+        core = sketch_lib.sketch_dataset(params, zs, batch=64, paired=True)
+        np.testing.assert_array_equal(np.asarray(fused.counts),
+                                      np.asarray(core.counts))
+        assert int(fused.n) == int(core.n)
+
+    def test_query_theta_paths_agree(self):
+        params = lsh.init_srp(jax.random.PRNGKey(1), 96, 4, 9)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (100, 7))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        sk = ops.build_sketch(params, zs, paired=True, mode="interpret")
+        tt = jax.random.normal(jax.random.PRNGKey(3), (6, 7))
+        est_f = ops.query_theta(sk, params, tt, paired=True, mode="interpret")
+        est_c = sketch_lib.query_theta(sk, params, tt, paired=True)
+        np.testing.assert_allclose(np.asarray(est_f), np.asarray(est_c),
+                                   rtol=1e-5)
+
+    def test_layout_conversion_roundtrip(self):
+        params = lsh.init_srp(jax.random.PRNGKey(4), 12, 3, 5)
+        w = ops.from_lsh_params(params)
+        assert w.shape == (3, 5, 12)
+        x = jax.random.normal(jax.random.PRNGKey(5), (20, 5))
+        np.testing.assert_array_equal(
+            np.asarray(ref.srp_hash(x, w)),
+            np.asarray(lsh.srp_codes(params, x)),
+        )
+
+    def test_masked_build(self):
+        params = lsh.init_srp(jax.random.PRNGKey(6), 32, 2, 4)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(7), (50, 4))
+        mask = jnp.concatenate([jnp.ones(30), jnp.zeros(20)])
+        sk = ops.build_sketch(params, z, mask=mask, paired=False,
+                              mode="interpret")
+        sk_trunc = ops.build_sketch(params, z[:30], paired=False,
+                                    mode="interpret")
+        np.testing.assert_array_equal(np.asarray(sk.counts),
+                                      np.asarray(sk_trunc.counts))

@@ -1,0 +1,94 @@
+"""Surrogate-loss theory tests (paper Theorems 2-3, Figure 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestPRPSurrogate:
+    def test_p1_is_constant(self):
+        """For p=1 the paired surrogate is identically 1/2 (zero gradient —
+        exactly why the paper requires p >= 2)."""
+        t = jnp.linspace(-0.99, 0.99, 101)
+        g = losses.prp_surrogate(t, 1)
+        np.testing.assert_allclose(np.asarray(g), 0.5, atol=1e-6)
+
+    @pytest.mark.parametrize("p", [2, 4, 8])
+    def test_convex_and_minimized_at_zero(self, p):
+        t = jnp.linspace(-0.95, 0.95, 201)
+        g = np.asarray(losses.prp_surrogate(t, p))
+        second = g[:-2] - 2 * g[1:-1] + g[2:]
+        assert (second >= -1e-6).all(), "not convex"
+        assert abs(t[np.argmin(g)]) < 0.01, "minimum not at 0"
+        np.testing.assert_allclose(g.min(), 0.5 ** p, atol=1e-6)
+
+    def test_symmetric(self):
+        t = jnp.linspace(-0.9, 0.9, 51)
+        np.testing.assert_allclose(
+            np.asarray(losses.prp_surrogate(t, 4)),
+            np.asarray(losses.prp_surrogate(-t, 4)),
+            atol=1e-6,
+        )
+
+    def test_p4_steepest_near_optimum(self):
+        """Fig 3(b): slope at <a,b>=0.1 is maximized at p=4 among powers of 2."""
+        slopes = {p: float(losses.surrogate_slope_at(0.1, p)) for p in [1, 2, 4, 8, 16]}
+        assert max(slopes, key=slopes.get) == 4, slopes
+
+    def test_same_minimizer_as_least_squares(self):
+        """Thm 2 (finite-sample): analytic surrogate risk and L2 risk are
+        minimized at the same theta for well-conditioned data."""
+        key = jax.random.PRNGKey(0)
+        kx, ke = jax.random.split(key)
+        x = jax.random.normal(kx, (4000, 3)) * 0.2
+        theta_star = jnp.asarray([0.5, -0.3, 0.2])
+        y = x @ theta_star + 0.01 * jax.random.normal(ke, (4000,))
+
+        def surrogate_risk(th):
+            return losses.prp_empirical_risk(th, x, y, 4)
+
+        g = jax.grad(surrogate_risk)(theta_star)
+        # Gradient of the surrogate at the L2 minimizer ~ 0.
+        assert float(jnp.linalg.norm(g)) < 0.02
+        # And it is a genuine minimum: random perturbations increase the risk.
+        base = float(surrogate_risk(theta_star))
+        for s in range(5):
+            d = jax.random.normal(jax.random.PRNGKey(10 + s), (3,)) * 0.5
+            assert float(surrogate_risk(theta_star + d)) > base
+
+
+class TestClassificationSurrogate:
+    def test_calibrated_negative_slope_at_origin(self):
+        """Thm 3: d(phi)/dt < 0 at t=0 (classification calibration)."""
+        for p in [1, 2, 4]:
+            g = jax.grad(lambda t: losses.classification_surrogate(t, p))(0.0)
+            assert float(g) < 0.0
+
+    def test_monotone_decreasing_in_margin(self):
+        t = jnp.linspace(-0.9, 0.9, 101)
+        phi = np.asarray(losses.classification_surrogate(t, 2))
+        assert (np.diff(phi) <= 1e-6).all()
+
+    def test_value_at_origin(self):
+        # phi(0) = 2^p (1/2)^p = 1 — comparable scale to hinge/logistic at 0.
+        for p in [1, 2, 4]:
+            v = float(losses.classification_surrogate(jnp.asarray(0.0), p))
+            np.testing.assert_allclose(v, 1.0, atol=1e-6)
+
+
+class TestReferenceLosses:
+    def test_l2(self):
+        x = jnp.eye(3)
+        y = jnp.asarray([1.0, 2.0, 3.0])
+        th = jnp.asarray([1.0, 2.0, 3.0])
+        assert float(losses.l2_empirical_risk(th, x, y)) == 0.0
+
+    def test_hinge(self):
+        x = jnp.asarray([[1.0], [-1.0]])
+        y = jnp.asarray([1.0, -1.0])
+        assert float(losses.hinge_empirical_risk(jnp.asarray([2.0]), x, y)) == 0.0

@@ -1,0 +1,150 @@
+"""LSH family tests: collision-probability fidelity, augmentation algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _unit(key, d):
+    v = jax.random.normal(key, (d,))
+    return v / jnp.linalg.norm(v)
+
+
+class TestSRP:
+    def test_codes_in_range(self):
+        params = lsh.init_srp(jax.random.PRNGKey(0), rows=32, planes=5, dim=7)
+        x = jax.random.normal(jax.random.PRNGKey(1), (11, 7))
+        codes = lsh.srp_codes(params, x)
+        assert codes.shape == (11, 32)
+        assert codes.dtype == jnp.int32
+        assert int(codes.min()) >= 0 and int(codes.max()) < 32
+
+    def test_deterministic(self):
+        params = lsh.init_srp(jax.random.PRNGKey(0), 8, 4, 5)
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+        assert jnp.array_equal(lsh.srp_codes(params, x), lsh.srp_codes(params, x))
+
+    @pytest.mark.parametrize("planes", [1, 2, 4])
+    @pytest.mark.parametrize("orthogonal", [False, True])
+    def test_collision_rate_matches_analytic(self, planes, orthogonal):
+        key = jax.random.PRNGKey(42)
+        params = lsh.init_srp(key, rows=8000, planes=planes, dim=6,
+                              orthogonal=orthogonal)
+        kx, ky = jax.random.split(jax.random.PRNGKey(7))
+        x = _unit(kx, 6)
+        y = x + 0.5 * jax.random.normal(ky, (6,))
+        emp = float(lsh.empirical_collision_rate(params, x, y, planes))
+        ana = float(lsh.srp_collision_prob(x, y, planes))
+        assert abs(emp - ana) < 0.02, (emp, ana)
+
+    def test_scale_invariance(self):
+        """SRP depends only on direction."""
+        params = lsh.init_srp(jax.random.PRNGKey(0), 16, 3, 4)
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, 4))
+        assert jnp.array_equal(
+            lsh.srp_codes(params, x), lsh.srp_codes(params, 3.7 * x)
+        )
+
+
+class TestAsymmetric:
+    def test_augmented_data_unit_norm(self):
+        z = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (9, 5))
+        z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1.0)
+        a = lsh.augment_data(z)
+        np.testing.assert_allclose(np.linalg.norm(a, axis=-1), 1.0, atol=1e-5)
+
+    def test_inner_product_preserved(self):
+        kq, kz = jax.random.split(jax.random.PRNGKey(3))
+        q = 0.6 * _unit(kq, 5)
+        z = 0.4 * jax.random.normal(kz, (7, 5))
+        z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1.0)
+        got = lsh.augment_data(z) @ lsh.augment_query(q)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(z @ q), atol=1e-5)
+
+    def test_asymmetric_collision_monotone_in_inner_product(self):
+        """Empirical collision rate of aug pairs follows ip_collision_prob."""
+        params = lsh.init_srp(jax.random.PRNGKey(0), rows=6000, planes=2, dim=5)
+        q = 0.8 * _unit(jax.random.PRNGKey(1), 3)
+        qa = lsh.augment_query(q)
+        rates, anas = [], []
+        for s, scale in enumerate([-0.9, -0.3, 0.3, 0.9]):
+            z = scale * q / jnp.linalg.norm(q) * 0.9
+            za = lsh.augment_data(z)
+            rates.append(float(lsh.empirical_collision_rate(params, za, qa, 2)))
+            anas.append(float(lsh.ip_collision_prob(jnp.dot(z, q), 2)))
+        np.testing.assert_allclose(rates, anas, atol=0.03)
+        assert rates == sorted(rates)  # monotone increasing in <z, q>
+
+
+class TestScaling:
+    def test_scale_to_unit_ball(self):
+        z = jax.random.normal(jax.random.PRNGKey(0), (500, 6)) * 5.0
+        zs, c = lsh.scale_to_unit_ball(z, slack=1.05, quantile=0.9)
+        norms = np.linalg.norm(np.asarray(zs), axis=-1)
+        assert norms.max() <= 1.0 + 1e-5
+        assert norms.mean() > 0.3  # not crushed to the pole
+        assert c > 0
+
+    def test_normalize_query(self):
+        q = jnp.asarray([3.0, 4.0])
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(lsh.normalize_query(q))), 1.0, atol=1e-6
+        )
+
+
+class TestComposition:
+    @given(
+        a=st.integers(min_value=0, max_value=255),
+        b=st.integers(min_value=0, max_value=15),
+        a2=st.integers(min_value=0, max_value=255),
+        b2=st.integers(min_value=0, max_value=15),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_pair_codes_injective(self, a, b, a2, b2):
+        pa = int(lsh.pair_codes(jnp.int32(a), jnp.int32(b), 16))
+        pb = int(lsh.pair_codes(jnp.int32(a2), jnp.int32(b2), 16))
+        assert (pa == pb) == (a == a2 and b == b2)
+
+    def test_product_collision_probability(self):
+        """Thm 1 multiplication: composed code collision prob = k1 * k2."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        p1 = lsh.init_srp(k1, rows=20000, planes=1, dim=4)
+        p2 = lsh.init_srp(k2, rows=20000, planes=2, dim=4)
+        x = _unit(jax.random.PRNGKey(5), 4)
+        y = _unit(jax.random.PRNGKey(6), 4)
+        ca = lsh.pair_codes(lsh.srp_codes(p1, x), lsh.srp_codes(p2, x), 4)
+        cb = lsh.pair_codes(lsh.srp_codes(p1, y), lsh.srp_codes(p2, y), 4)
+        emp = float(jnp.mean((ca == cb).astype(jnp.float32)))
+        ana = float(
+            lsh.srp_collision_prob(x, y, 1) * lsh.srp_collision_prob(x, y, 2)
+        )
+        assert abs(emp - ana) < 0.015
+
+
+class TestOrthogonal:
+    def test_orthogonal_within_block_same_plane(self):
+        """Same plane index, rows within one block: orthonormal directions."""
+        dim = 8
+        params = lsh.init_srp(jax.random.PRNGKey(0), rows=8, planes=3, dim=dim,
+                              orthogonal=True)
+        w = np.asarray(params.projections)  # (8, 3, 8)
+        for j in range(3):
+            block = w[:, j, :]  # 8 rows = one full block
+            gram = block @ block.T
+            np.testing.assert_allclose(gram, np.eye(8), atol=1e-5)
+
+    def test_unbiased_collision_rate(self):
+        """Within-row planes are independent -> k^p unbiased (bias regression)."""
+        params = lsh.init_srp(jax.random.PRNGKey(1), rows=8000, planes=4, dim=6,
+                              orthogonal=True)
+        x = _unit(jax.random.PRNGKey(2), 6)
+        y = x + 0.4 * jax.random.normal(jax.random.PRNGKey(3), (6,))
+        emp = float(lsh.empirical_collision_rate(params, x, y, 4))
+        ana = float(lsh.srp_collision_prob(x, y, 4))
+        assert abs(emp - ana) < 0.02, (emp, ana)

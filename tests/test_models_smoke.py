@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate the REDUCED same-family config,
+run one forward/train step on CPU, assert output shapes and no NaNs; exercise
+the prefill->decode path against the full-sequence forward.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import layers, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 24
+
+
+def _batch(cfg, key=1):
+    batch = {}
+    if cfg.embeddings_provided:
+        batch["embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(key), (B, S, cfg.d_model)) * 0.1
+        )
+    else:
+        batch["tokens"] = jax.random.randint(
+            jax.random.PRNGKey(key), (B, S), 0, cfg.vocab_size
+        )
+    if "cross_attn" in cfg.cycle:
+        batch["cross_states"] = (
+            jax.random.normal(jax.random.PRNGKey(key + 1),
+                              (B, cfg.cross_attn_tokens, cfg.d_model)) * 0.1
+        )
+    batch["labels"] = jax.random.randint(
+        jax.random.PRNGKey(key + 2), (B, S), 0, cfg.vocab_size
+    )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = registry.get_config(arch, smoke=True)
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+class TestPerArch:
+    def test_forward_shapes_and_finite(self, arch, fitted):
+        cfg, params = fitted(arch)
+        hidden, aux = model.forward(params, cfg, _batch(cfg))
+        assert hidden.shape == (B, S, cfg.d_model)
+        assert bool(jnp.isfinite(hidden).all()), "NaN/inf in hidden states"
+        assert bool(jnp.isfinite(aux))
+
+    def test_train_step_loss_and_grads_finite(self, arch, fitted):
+        cfg, params = fitted(arch)
+        batch = _batch(cfg)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.train_loss(p, cfg, batch)
+        )(params)
+        assert np.isfinite(float(loss))
+        # loss should be near ln(vocab) at init
+        assert 0.3 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat)
+        assert any(float(jnp.abs(g).max()) > 0 for g in flat), "all-zero grads"
+
+    def test_decode_matches_forward(self, arch, fitted):
+        cfg, _ = fitted(arch)
+        if cfg.is_moe:  # capacity dropping is order-dependent; disable drops
+            cfg = dataclasses.replace(
+                cfg, moe_capacity_factor=float(cfg.num_experts)
+            )
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch(cfg)
+        batch.pop("labels")
+        hidden, _ = model.forward(params, cfg, batch)
+        full_logits = layers.unembed(
+            model.unembed_table(params, cfg), hidden, jnp.float32
+        )
+        p_len = S - 3
+        pre = {
+            k: (v[:, :p_len] if k in ("tokens", "embeds") else v)
+            for k, v in batch.items()
+        }
+        state, logits = model.prefill(params, cfg, pre, cache_len=S)
+        errs = [float(jnp.abs(logits - full_logits[:, p_len - 1]).max())]
+        for t in range(p_len, S):
+            inp = (
+                {"embeds": batch["embeds"][:, t:t + 1]}
+                if cfg.embeddings_provided
+                else {"tokens": batch["tokens"][:, t]}
+            )
+            logits, state = model.decode_step(params, cfg, state, inp,
+                                              jnp.int32(t))
+            errs.append(float(jnp.abs(logits - full_logits[:, t]).max()))
+        assert max(errs) < 1e-3, f"decode drift {max(errs)}"
+
+    def test_full_config_consistency(self, arch, fitted):
+        """The FULL config must be structurally valid (no allocation here)."""
+        cfg = registry.get_config(arch, smoke=False)
+        assert cfg.num_layers % len(cfg.cycle) == 0
+        assert cfg.param_count() > 1e8  # every assigned arch is >= 1B-ish
+        if cfg.is_moe:
+            assert cfg.active_param_count() < cfg.param_count()
+
+
+class TestRegistry:
+    def test_all_archs_present(self):
+        assert len(registry.ARCH_IDS) == 10
+
+    def test_cell_counts(self):
+        all_cells = registry.cells(include_skipped=True)
+        assert len(all_cells) == 40
+        runnable = [c for c in all_cells if not c[2]]
+        skipped = [c for c in all_cells if c[2]]
+        assert len(skipped) == 6  # 10 archs - 4 long-context capable
+        for arch, shape, _ in skipped:
+            assert shape == "long_500k"
+            assert registry.skip_reason(arch, shape)
+
+    def test_param_counts_roughly_match_names(self):
+        """Sanity: analytic param counts are in the ballpark of the names."""
+        expect = {
+            "qwen2-7b": (6e9, 9e9),
+            "gemma3-1b": (0.7e9, 1.6e9),
+            "llama3-405b": (3.5e11, 4.6e11),
+            "qwen3-32b": (2.6e10, 4.0e10),
+            "xlstm-1.3b": (1.0e9, 2.0e9),
+            "zamba2-2.7b": (2.0e9, 3.4e9),
+            "mixtral-8x22b": (1.2e11, 1.55e11),
+            "phi3.5-moe-42b-a6.6b": (3.6e10, 4.8e10),
+            "musicgen-medium": (1.2e9, 2.2e9),
+            "llama-3.2-vision-11b": (0.8e10, 1.2e10),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = registry.get_config(arch).param_count()
+            assert lo < n < hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"

@@ -1,0 +1,78 @@
+"""Differentially-private sketch release tests (paper §2.2 refs [11, 21])."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, privacy, sketch
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _built_sketch(seed=0, n=400, rows=64):
+    params = lsh.init_srp(jax.random.PRNGKey(seed), rows, 4, 5 + 2)
+    z = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 5))
+    zs, _ = lsh.scale_to_unit_ball(z)
+    return params, sketch.sketch_dataset(params, zs, batch=100, paired=True)
+
+
+class TestLaplaceCounts:
+    def test_high_epsilon_close_to_exact(self):
+        params, sk = _built_sketch()
+        ps = privacy.privatize_counts(jax.random.PRNGKey(2), sk, epsilon=1e5)
+        np.testing.assert_allclose(
+            np.asarray(ps.counts), np.asarray(sk.counts), atol=0.5
+        )
+
+    def test_noise_scales_with_epsilon(self):
+        params, sk = _built_sketch()
+        loose = privacy.privatize_counts(jax.random.PRNGKey(3), sk, epsilon=10.0)
+        tight = privacy.privatize_counts(jax.random.PRNGKey(3), sk, epsilon=0.1)
+        err_loose = float(jnp.abs(loose.counts - sk.counts).mean())
+        err_tight = float(jnp.abs(tight.counts - sk.counts).mean())
+        assert err_tight > err_loose * 10
+
+    def test_private_query_unbiased(self):
+        """Laplace noise is zero-mean: private queries track exact ones."""
+        params, sk = _built_sketch(rows=512)
+        q = jax.random.normal(jax.random.PRNGKey(5), (4, 5))
+        codes = lsh.query_codes(params, q)
+        exact = sketch.query(sk, codes, paired=True)
+        ests = []
+        for s in range(20):
+            ps = privacy.privatize_counts(jax.random.PRNGKey(100 + s), sk,
+                                          epsilon=5.0)
+            ests.append(privacy.query_private(ps, codes, paired=True))
+        mean_est = jnp.mean(jnp.stack(ests), axis=0)
+        np.testing.assert_allclose(np.asarray(mean_est), np.asarray(exact),
+                                   atol=0.02)
+
+
+class TestGaussianProjections:
+    def test_sigma_zero_matches_plain(self):
+        params, _ = _built_sketch()
+        x = 0.4 * jax.random.normal(jax.random.PRNGKey(6), (10, 7))
+        noisy = privacy.private_srp_codes(jax.random.PRNGKey(7), params, x, 0.0)
+        plain = lsh.srp_codes(params, x)
+        assert jnp.array_equal(noisy, plain)
+
+    def test_large_sigma_decorrelates(self):
+        params, _ = _built_sketch()
+        x = 0.4 * jax.random.normal(jax.random.PRNGKey(8), (50, 7))
+        noisy = privacy.private_srp_codes(jax.random.PRNGKey(9), params, x, 100.0)
+        plain = lsh.srp_codes(params, x)
+        agree = float(jnp.mean((noisy == plain).astype(jnp.float32)))
+        assert agree < 0.35  # ~1/16 for p=4 plus chance alignment
+
+    def test_sigma_formula_monotone(self):
+        s1 = float(privacy.gaussian_sigma(1.0, 1e-5))
+        s2 = float(privacy.gaussian_sigma(2.0, 1e-5))
+        assert s1 > s2 > 0
+
+    def test_private_insert_counts_mass(self):
+        params, _ = _built_sketch()
+        sk = sketch.init_sketch(64, 16)
+        z = 0.3 * jax.random.normal(jax.random.PRNGKey(10), (20, 5))
+        sk = privacy.private_prp_insert(jax.random.PRNGKey(11), sk, params, z, 0.5)
+        assert int(sk.counts.sum()) == 20 * 64 * 2
+        assert int(sk.n) == 20

@@ -1,0 +1,97 @@
+"""End-to-end STORM regression tests (paper §4.1, Algorithm 2)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, dfo, regression
+from repro.data import datasets
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _fast_config(rows=1024):
+    return regression.StormRegressorConfig(
+        rows=rows,
+        dfo=dfo.DFOConfig(steps=200, num_queries=8, sigma=0.5, sigma_decay=0.995,
+                          learning_rate=2.0, decay=0.995, average_tail=0.5),
+    )
+
+
+@pytest.fixture(scope="module")
+def problem():
+    kx = jax.random.PRNGKey(0)
+    x, y, theta_true = datasets.make_regression(kx, 800, 5, noise=0.2, condition=5)
+    return x, y, theta_true
+
+
+class TestFit:
+    def test_beats_trivial_predictor(self, problem):
+        x, y, _ = problem
+        fit = regression.fit(jax.random.PRNGKey(1), x, y, _fast_config())
+        assert float(fit.mse(x, y)) < 0.5 * float(jnp.var(y))
+
+    def test_direction_matches_ols(self, problem):
+        x, y, _ = problem
+        fit = regression.fit(jax.random.PRNGKey(1), x, y, _fast_config())
+        ols = baselines.ols(x, y)
+        cos = jnp.dot(fit.theta, ols.theta) / (
+            jnp.linalg.norm(fit.theta) * jnp.linalg.norm(ols.theta) + 1e-12
+        )
+        assert float(cos) > 0.8, float(cos)
+
+    def test_loss_trace_decreases(self, problem):
+        x, y, _ = problem
+        fit = regression.fit(jax.random.PRNGKey(1), x, y, _fast_config())
+        head = float(jnp.mean(fit.losses[:20]))
+        tail = float(jnp.mean(fit.losses[-20:]))
+        assert tail <= head
+
+    def test_predict_shapes(self, problem):
+        x, y, _ = problem
+        fit = regression.fit(jax.random.PRNGKey(1), x, y, _fast_config(rows=256))
+        assert fit.predict(x).shape == y.shape
+        assert np.isfinite(float(fit.mse(x, y)))
+
+    def test_more_rows_helps_on_average(self, problem):
+        """Estimator variance shrinks with R — MSE at R=2048 <= MSE at R=64
+        (averaged over seeds to tame hash noise)."""
+        x, y, _ = problem
+        mses = {}
+        for rows in (64, 2048):
+            vals = [
+                float(regression.fit(jax.random.PRNGKey(s), x, y,
+                                     _fast_config(rows=rows)).mse(x, y))
+                for s in range(3)
+            ]
+            mses[rows] = sum(vals) / len(vals)
+        assert mses[2048] <= mses[64] * 1.25, mses
+
+    def test_l2_regularization_shrinks_theta(self, problem):
+        x, y, _ = problem
+        base = regression.fit(jax.random.PRNGKey(2), x, y, _fast_config())
+        reg_cfg = dataclasses.replace(_fast_config(), l2=0.05)
+        reg = regression.fit(jax.random.PRNGKey(2), x, y, reg_cfg)
+        assert float(jnp.linalg.norm(reg.theta_std)) <= float(
+            jnp.linalg.norm(base.theta_std)
+        ) + 1e-3
+
+    def test_sketch_memory_accounting(self):
+        cfg = regression.StormRegressorConfig(rows=128, planes=4, count_dtype="int16")
+        assert regression.sketch_memory_bytes(cfg) == 128 * 16 * 2
+
+
+class TestUnstandardization:
+    def test_roundtrip_on_noiseless_data(self):
+        """With zero noise and a generous sketch the recovered model must
+        predict well in the *original* (unstandardized) units."""
+        kx = jax.random.PRNGKey(3)
+        x, y, theta_true = datasets.make_regression(kx, 600, 3, noise=0.0,
+                                                    condition=2)
+        y = y + 5.0  # non-trivial intercept
+        fit = regression.fit(jax.random.PRNGKey(4), x, y, _fast_config(rows=2048))
+        r2 = 1.0 - float(fit.mse(x, y)) / float(jnp.var(y))
+        assert r2 > 0.7, r2

@@ -1,0 +1,119 @@
+"""STORM sketch tests: counting semantics, mergeability, estimator fidelity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses, lsh, sketch
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(rows=16, planes=3, dim=5, seed=0):
+    return lsh.init_srp(jax.random.PRNGKey(seed), rows, planes, dim)
+
+
+class TestCounting:
+    def test_update_increments_exact_cells(self):
+        sk = sketch.init_sketch(rows=3, buckets=8)
+        codes = jnp.asarray([[1, 2, 3], [1, 0, 7]], dtype=jnp.int32)
+        sk = sketch.update(sk, codes)
+        expected = np.zeros((3, 8), np.int32)
+        expected[0, 1] += 2
+        expected[1, 2] += 1
+        expected[1, 0] += 1
+        expected[2, 3] += 1
+        expected[2, 7] += 1
+        np.testing.assert_array_equal(np.asarray(sk.counts), expected)
+        assert int(sk.n) == 2
+
+    def test_prp_update_double_counts(self):
+        sk = sketch.init_sketch(rows=2, buckets=4)
+        cp = jnp.asarray([[0, 1]], dtype=jnp.int32)
+        cn = jnp.asarray([[3, 2]], dtype=jnp.int32)
+        sk = sketch.prp_update(sk, cp, cn)
+        assert int(sk.counts.sum()) == 4  # two buckets per row
+        assert int(sk.n) == 1
+
+    def test_total_mass_invariant(self):
+        """Each insert adds exactly R (or 2R for PRP) to the total count."""
+        params = _params(rows=16, dim=5 + 2)  # paired inserts augment to dim+2
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (37, 5))
+        z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True) * 2, 1.0)
+        sk = sketch.sketch_dataset(params, z, batch=8, paired=True)
+        assert int(sk.counts.sum()) == 37 * 16 * 2
+        assert int(sk.n) == 37
+
+    @given(n=st.integers(min_value=1, max_value=40),
+           batch=st.integers(min_value=1, max_value=16))
+    @settings(max_examples=20, deadline=None)
+    def test_padding_never_counted(self, n, batch):
+        params = _params(rows=4, planes=2, dim=3, seed=2)
+        z = 0.3 * jax.random.normal(jax.random.PRNGKey(n), (n, 3))
+        sk = sketch.sketch_dataset(params, z, batch=batch, paired=False)
+        assert int(sk.n) == n
+        assert int(sk.counts.sum()) == n * 4
+
+
+class TestMerge:
+    def test_merge_equals_union(self):
+        params = _params()
+        za = 0.4 * jax.random.normal(jax.random.PRNGKey(1), (20, 5))
+        zb = 0.4 * jax.random.normal(jax.random.PRNGKey(2), (30, 5))
+        s_union = sketch.sketch_dataset(
+            params, jnp.concatenate([za, zb]), batch=10, paired=False
+        )
+        s_merge = sketch.merge(
+            sketch.sketch_dataset(params, za, batch=10, paired=False),
+            sketch.sketch_dataset(params, zb, batch=10, paired=False),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s_union.counts), np.asarray(s_merge.counts)
+        )
+        assert int(s_union.n) == int(s_merge.n)
+
+    def test_merge_commutative_associative(self):
+        params = _params()
+        zs = [0.4 * jax.random.normal(jax.random.PRNGKey(i), (10, 5)) for i in range(3)]
+        sks = [sketch.sketch_dataset(params, z, batch=5, paired=False) for z in zs]
+        left = sketch.merge(sketch.merge(sks[0], sks[1]), sks[2])
+        right = sketch.merge(sks[0], sketch.merge(sks[2], sks[1]))
+        np.testing.assert_array_equal(np.asarray(left.counts), np.asarray(right.counts))
+
+
+class TestEstimator:
+    def test_query_matches_analytic_surrogate(self):
+        """RACE estimate ≈ mean PRP surrogate loss (paper Thm 2 estimator)."""
+        kz, kp, kq = jax.random.split(jax.random.PRNGKey(0), 3)
+        z = jax.random.normal(kz, (800, 6))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        params = lsh.init_srp(kp, rows=4000, planes=4, dim=6 + 2)
+        sk = sketch.sketch_dataset(params, zs, batch=200, paired=True)
+        q = jax.random.normal(kq, (6,))
+        est = float(sketch.query_theta(sk, params, q, paired=True))
+        qn = q / jnp.linalg.norm(q)
+        ana = float(jnp.mean(losses.prp_surrogate(zs @ qn, 4)))
+        assert abs(est - ana) < 0.01, (est, ana)
+
+    def test_query_batched_matches_single(self):
+        params = _params(rows=32, planes=3, dim=7, seed=4)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(5), (100, 5))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        sk = sketch.sketch_dataset(params, zs, batch=25, paired=True)
+        qs = jax.random.normal(jax.random.PRNGKey(6), (4, 5))
+        batched = sketch.query_theta(sk, params, qs, paired=True)
+        singles = jnp.stack(
+            [sketch.query_theta(sk, params, qs[i], paired=True) for i in range(4)]
+        )
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(singles), rtol=1e-6)
+
+    def test_query_normalization_paired_vs_plain(self):
+        sk = sketch.Sketch(counts=jnp.ones((4, 8), jnp.int32) * 6, n=jnp.int32(3))
+        codes = jnp.zeros((4,), jnp.int32)
+        assert float(sketch.query(sk, codes, paired=False)) == 2.0
+        assert float(sketch.query(sk, codes, paired=True)) == 1.0
+
+    def test_memory_bytes(self):
+        sk = sketch.init_sketch(128, 16, dtype=jnp.int16)
+        assert sk.memory_bytes() == 128 * 16 * 2 + 4

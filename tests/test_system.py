@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Two flows:
+  1. The paper's edge story: stream -> sketch -> DISCARD the data -> merge
+     sketches -> train from counters only -> sane model.
+  2. The framework story: train a small LM with checkpointing, kill, resume,
+     then serve it with continuous batching.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import baselines, dfo, distributed, lsh, regression
+from repro.core import sketch as sketch_lib
+from repro.data import datasets
+from repro.serve.engine import Request, ServeEngine
+from repro.train import train_step as ts
+from repro.train import optimizer as opt_lib
+from repro.train import trainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestEdgeToModelPipeline:
+    def test_train_from_counters_only(self):
+        """Sketch the stream, delete the data, train, beat the mean-predictor."""
+        kd, kf = jax.random.split(jax.random.PRNGKey(0))
+        x, y, _ = datasets.make_regression(kd, 1500, 6, noise=0.2, condition=8)
+
+        # edge devices: 3 shards sketched independently, then tree-merged
+        cfg = regression.StormRegressorConfig(
+            rows=2048,
+            dfo=dfo.DFOConfig(steps=250, num_queries=8, sigma=0.5,
+                              sigma_decay=0.995, learning_rate=2.0,
+                              decay=0.995, average_tail=0.5),
+        )
+        xs = (x - x.mean(0)) / (x.std(0) + 1e-8)
+        ys = (y - y.mean()) / (y.std() + 1e-8)
+        z = jnp.concatenate([xs, ys[:, None]], axis=-1)
+        zs, _ = lsh.scale_to_unit_ball(z, cfg.norm_slack)
+        params = lsh.init_srp(jax.random.PRNGKey(42), cfg.rows, cfg.planes,
+                              z.shape[1] + 2)
+        shards = jnp.array_split(zs, 3)
+        merged = distributed.tree_merge(
+            [sketch_lib.sketch_dataset(params, s, batch=256) for s in shards]
+        )
+        assert int(merged.n) == x.shape[0]
+
+        # the raw data is gone; fit uses only (sketch, hash params) + the
+        # standardization statistics an edge device would keep
+        fit = regression.fit(kf, x, y, cfg, prebuilt=(merged, params, None))
+        mse = float(fit.mse(x, y))
+        assert mse < 0.6 * float(jnp.var(y)), mse
+        ols = baselines.ols(x, y)
+        cos = float(jnp.dot(fit.theta, ols.theta) /
+                    (jnp.linalg.norm(fit.theta) * jnp.linalg.norm(ols.theta)
+                     + 1e-12))
+        assert cos > 0.7, cos
+
+
+class TestTrainCheckpointServe:
+    def test_full_lifecycle(self):
+        cfg = registry.get_config("qwen2-7b", smoke=True)
+        tcfg = ts.TrainConfig(
+            optimizer=opt_lib.AdamWConfig(learning_rate=3e-3, warmup_steps=5,
+                                          total_steps=40)
+        )
+        toks = jax.random.randint(jax.random.PRNGKey(7), (4, 32), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+        with tempfile.TemporaryDirectory() as d:
+            loop = trainer.LoopConfig(total_steps=15, ckpt_every=5, ckpt_dir=d)
+            r1 = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop,
+                               lambda step: batch)
+            # "preemption": resume and continue to 25
+            loop2 = trainer.LoopConfig(total_steps=25, ckpt_every=5,
+                                       ckpt_dir=d)
+            r2 = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop2,
+                               lambda step: batch)
+            assert r2.resumed_from == 15
+            assert r2.final_loss < r1.losses[0], "loss did not improve"
+
+            # restore final params and serve them
+            from repro.train import checkpoint
+            state = ts.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+            step, state, _ = checkpoint.restore(
+                d, jax.tree.map(lambda x: x, state)
+            )
+            assert step == 25
+        engine = ServeEngine(state.params, cfg, slots=2, cache_len=64)
+        outs = engine.run([
+            Request(rid=0, prompt=np.asarray(toks[0, :6]), max_new_tokens=8),
+            Request(rid=1, prompt=np.asarray(toks[1, :4]), max_new_tokens=8),
+        ])
+        assert sorted(c.rid for c in outs) == [0, 1]
+        assert all(len(c.tokens) == 8 for c in outs)
+        assert all(0 <= t < cfg.vocab_size for c in outs for t in c.tokens)

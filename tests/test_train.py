@@ -1,0 +1,219 @@
+"""Training-substrate tests: optimizer, accumulation, checkpointing, fault
+tolerance, elastic restore, gradient compression."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.train import checkpoint, compression
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+from repro.train import trainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    tcfg = ts.TrainConfig(
+        optimizer=opt_lib.AdamWConfig(learning_rate=3e-3, warmup_steps=5,
+                                      total_steps=60)
+    )
+    state = ts.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    return cfg, tcfg, state, batch
+
+
+class TestOptimizer:
+    def test_memorizes_fixed_batch(self, setup):
+        cfg, tcfg, state, batch = setup
+        fn = jax.jit(lambda s, b: ts.train_step(s, b, cfg, tcfg))
+        losses = []
+        for _ in range(25):
+            state, m = fn(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.5 * losses[0]
+        assert all(np.isfinite(l) for l in losses)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = opt_lib.AdamWConfig(learning_rate=1.0, warmup_steps=10,
+                                  total_steps=100, min_lr_ratio=0.1)
+        lr5 = float(opt_lib.schedule(cfg, jnp.int32(5)))
+        lr10 = float(opt_lib.schedule(cfg, jnp.int32(10)))
+        lr100 = float(opt_lib.schedule(cfg, jnp.int32(100)))
+        assert lr5 == pytest.approx(0.5)
+        assert lr10 == pytest.approx(1.0)
+        assert lr100 == pytest.approx(0.1, rel=1e-3)
+
+    def test_grad_clipping_bounds_update(self, setup):
+        cfg, _, state, batch = setup
+        tcfg = ts.TrainConfig(
+            optimizer=opt_lib.AdamWConfig(learning_rate=1e-3, grad_clip=1e-9)
+        )
+        new_state, m = ts.train_step(state, batch, cfg, tcfg)
+        # with an absurdly small clip the params barely move
+        delta = max(
+            float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+            for a, b in zip(jax.tree.leaves(new_state.params),
+                            jax.tree.leaves(state.params))
+        )
+        assert delta < 1e-2
+
+    def test_bf16_moments_and_master(self, setup):
+        cfg, _, _, batch = setup
+        tcfg = ts.TrainConfig(
+            optimizer=opt_lib.AdamWConfig(moment_dtype="bfloat16")
+        )
+        import dataclasses as dc
+        cfg16 = dc.replace(cfg, param_dtype="bfloat16", compute_dtype="bfloat16")
+        state = ts.init_state(jax.random.PRNGKey(0), cfg16, tcfg)
+        assert all(m.dtype == jnp.bfloat16 for m in jax.tree.leaves(state.opt.mu))
+        assert state.opt.master is not None  # f32 master for bf16 params
+        new_state, metrics = ts.train_step(state, batch, cfg16, tcfg)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+class TestAccumulation:
+    def test_microbatch_equivalence(self, setup):
+        cfg, _, state, batch = setup
+        l1, g1 = ts.loss_and_grads(state.params, cfg, batch, microbatches=1)
+        l2, g2 = ts.loss_and_grads(state.params, cfg, batch, microbatches=2)
+        assert float(l1) == pytest.approx(float(l2), abs=1e-5)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5
+            )
+
+
+class TestCheckpoint:
+    def test_roundtrip_bitexact(self, setup):
+        _, _, state, _ = setup
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 3, state)
+            step, restored, _ = checkpoint.restore(
+                d, jax.tree.map(lambda x: x, state)
+            )
+            assert step == 3
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self, setup):
+        _, _, state, _ = setup
+        with tempfile.TemporaryDirectory() as d:
+            for s in range(5):
+                checkpoint.save(d, s, state, keep=2)
+            assert checkpoint.available_steps(d) == [3, 4]
+
+    def test_corrupt_checkpoint_falls_back(self, setup):
+        """Fault tolerance: a torn/corrupt newest checkpoint is skipped."""
+        _, _, state, _ = setup
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, state)
+            p2 = checkpoint.save(d, 2, state)
+            # corrupt the newest: truncate an array file
+            victim = next(f for f in os.listdir(p2) if f.endswith(".npy"))
+            with open(os.path.join(p2, victim), "r+b") as f:
+                f.truncate(16)
+            step, _, _ = checkpoint.restore(d, jax.tree.map(lambda x: x, state))
+            assert step == 1  # fell back past the corrupt one
+
+    def test_elastic_dtype_cast_restore(self, setup):
+        """Restore into a different dtype template (topology/policy change)."""
+        _, _, state, _ = setup
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, state.params)
+            template = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16),
+                state.params,
+            )
+            _, restored, _ = checkpoint.restore(d, template)
+            assert all(r.dtype == jnp.bfloat16 for r in jax.tree.leaves(restored))
+
+
+class TestTrainerLoop:
+    def test_resume_after_kill(self, setup):
+        """Simulated preemption: run 6 steps, 'kill', resume, finish at 10."""
+        cfg, tcfg, _, batch = setup
+
+        def data(step):
+            return batch
+
+        with tempfile.TemporaryDirectory() as d:
+            loop = trainer.LoopConfig(total_steps=6, ckpt_every=3, ckpt_dir=d)
+            r1 = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop, data)
+            assert r1.steps_run == 6
+            loop2 = trainer.LoopConfig(total_steps=10, ckpt_every=3, ckpt_dir=d)
+            r2 = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop2, data)
+            assert r2.resumed_from == 6
+            assert r2.steps_run == 4  # only the remaining steps
+
+    def test_straggler_detection(self, setup):
+        """Inject a slow step and check it is flagged."""
+        cfg, tcfg, _, batch = setup
+        import time as _time
+        base = jax.jit(lambda s, b: ts.train_step(s, b, cfg, tcfg))
+        calls = {"n": 0}
+
+        def slow_fn(s, b):
+            calls["n"] += 1
+            out = base(s, b)
+            jax.block_until_ready(out[1]["loss"])
+            if calls["n"] == 9:
+                _time.sleep(1.5)
+            return out
+
+        loop = trainer.LoopConfig(total_steps=12, ckpt_every=100,
+                                  straggler_factor=3.0)
+        report = trainer.train(jax.random.PRNGKey(0), cfg, tcfg, loop,
+                               lambda s: batch, step_fn=slow_fn)
+        assert 8 in report.straggler_steps
+
+
+class TestCompression:
+    def test_linearity_merge(self):
+        """sketch(a) + sketch(b) == sketch(a + b) — the psum-compatibility."""
+        cfg = compression.SketchCompressorConfig(rows=3, cols=512)
+        a = jax.random.normal(jax.random.PRNGKey(0), (200,))
+        b = jax.random.normal(jax.random.PRNGKey(1), (200,))
+        sa = compression.sketch_vector(cfg, a)
+        sb = compression.sketch_vector(cfg, b)
+        sab = compression.sketch_vector(cfg, a + b)
+        np.testing.assert_allclose(np.asarray(sa + sb), np.asarray(sab),
+                                   atol=1e-5)
+
+    def test_heavy_hitters_recovered(self):
+        cfg = compression.SketchCompressorConfig(rows=5, cols=8192,
+                                                 top_k_fraction=0.02)
+        vec = jnp.zeros(1000).at[jnp.asarray([7, 123, 999])].set(
+            jnp.asarray([10.0, -8.0, 5.0])
+        )
+        vec = vec + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (1000,))
+        est = compression.unsketch_vector(
+            cfg, compression.sketch_vector(cfg, vec), 1000
+        )
+        assert abs(float(est[7]) - 10.0) < 0.5
+        assert abs(float(est[123]) + 8.0) < 0.5
+
+    def test_error_feedback_accumulates(self):
+        cfg = compression.SketchCompressorConfig(rows=3, cols=1024,
+                                                 top_k_fraction=0.01)
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(3), (500,))}
+        state = compression.init_state(grads)
+        est, state = compression.compress_allreduce(cfg, grads, state)
+        # residual = grads - est (what was not transmitted)
+        np.testing.assert_allclose(
+            np.asarray(state.residual["w"]),
+            np.asarray(grads["w"] - est["w"]),
+            atol=1e-5,
+        )
+
+    def test_ratio(self):
+        cfg = compression.SketchCompressorConfig(rows=5, cols=1 << 18)
+        assert compression.compression_ratio(cfg, 7_000_000_000) > 5000
