@@ -3,7 +3,18 @@
 On this CPU container the Pallas kernels run in interpret mode (not
 representative of TPU throughput); the jnp reference path is the meaningful
 CPU number and the ratio documents interpret-mode overhead. Rows:
-name,us_per_call,derived (derived = Melem/s for the ref path).
+name,us_per_call,derived (derived = Melem/s for throughput rows).
+
+Timing is min-over-iters of argument-passing jitted functions (zero-arg
+closures let XLA constant-fold the workload away; the minimum is the right
+estimator because scheduler noise only ever inflates a measurement).
+
+Paired-insert rows benchmark the antithetic PRP hot loop: one-pass
+``ref.paired_hash_histogram`` against the two single-sided
+``ref.hash_histogram`` calls it replaces; the ``paired_insert_ratio`` row's
+derived field is one-pass/two-pass (< 1 is a win, ~0.5-0.6 measured).
+Large-m query rows track the tiled batched query at DFO/quadratic-refine
+batch sizes.
 """
 
 from __future__ import annotations
@@ -14,6 +25,7 @@ from typing import Callable, List
 import jax
 import jax.numpy as jnp
 
+from repro.core import lsh
 from repro.kernels import ref
 
 SHAPES = [
@@ -22,14 +34,59 @@ SHAPES = [
     (1024, 1024, 4096, 4), # d_model-scale probes
 ]
 
+QUERY_M = (512, 4096)      # quadratic-refine / large-DFO batch sizes
 
-def _time(fn: Callable[[], jax.Array], iters: int = 5) -> float:
-    fn().block_until_ready()  # compile + warm
-    t0 = time.perf_counter()
+
+def _time(fn: Callable[..., jax.Array], *args, iters: int = 8) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
     for _ in range(iters):
-        out = fn()
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _time_pair(fa, fb, args, iters: int = 20):
+    """Min-time both sides of an A/B with interleaved iterations so slow
+    drift (thermal, allocator state) cancels out of the ratio."""
+    jax.block_until_ready(fa(*args))
+    jax.block_until_ready(fb(*args))
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa(*args))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb(*args))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+@jax.jit
+def _srp_hash(x, w):
+    return ref.srp_hash(x, w)
+
+
+@jax.jit
+def _hash_histogram(x, w, mask):
+    return ref.hash_histogram(x, w, mask)
+
+
+@jax.jit
+def _sketch_query(q, w, counts):
+    return ref.sketch_query(q, w, counts)
+
+
+@jax.jit
+def _paired_one_pass(z, wa, mask):
+    return ref.paired_hash_histogram(z, wa, mask)
+
+
+@jax.jit
+def _paired_two_sided(z, wa, mask):
+    return (ref.hash_histogram(lsh.augment_data(z), wa, mask)
+            + ref.hash_histogram(lsh.augment_data(-z), wa, mask))
 
 
 def run(print_fn=print) -> List[str]:
@@ -40,22 +97,34 @@ def run(print_fn=print) -> List[str]:
         w = jax.random.normal(kw, (p, d, r))
         mask = jnp.ones((n,), jnp.float32)
 
-        hash_ref = jax.jit(lambda: ref.srp_hash(x, w))
-        us = _time(hash_ref)
+        us = _time(_srp_hash, x, w)
         rate = n * r / us  # codes per us == Melem/s
         rows.append(f"kern/srp_hash/ref/n{n}_d{d}_R{r},{us:.0f},{rate:.1f}")
 
-        hist_ref = jax.jit(lambda: ref.hash_histogram(x, w, mask))
-        us = _time(hist_ref)
+        us = _time(_hash_histogram, x, w, mask)
         rows.append(f"kern/hash_histogram/ref/n{n}_d{d}_R{r},{us:.0f},"
                     f"{n * r / us:.1f}")
 
-        q = jax.random.normal(jax.random.PRNGKey(3), (16, d))
+        # Antithetic PRP insert: one-pass paired kernel vs the two
+        # single-sided histogram calls it replaces (same counts, half the
+        # projection matmuls, one composed-code scatter pass).
+        z = jax.random.normal(kx, (n, d)) * (0.5 / jnp.sqrt(d))
+        wa = jax.random.normal(kw, (p, d + 2, r))
+        us_one, us_two = _time_pair(_paired_one_pass, _paired_two_sided,
+                                    (z, wa, mask))
+        rows.append(f"kern/paired_insert/ref/n{n}_d{d}_R{r},{us_one:.0f},"
+                    f"{n * r / us_one:.1f}")
+        rows.append(f"kern/paired_insert_two_sided/ref/n{n}_d{d}_R{r},"
+                    f"{us_two:.0f},{n * r / us_two:.1f}")
+        rows.append(f"kern/paired_insert_ratio/ref/n{n}_d{d}_R{r},"
+                    f"{us_one:.0f},{us_one / us_two:.3f}")
+
         counts = jnp.ones((r, 1 << p), jnp.int32)
-        query_ref = jax.jit(lambda: ref.sketch_query(q, w, counts))
-        us = _time(query_ref)
-        rows.append(f"kern/sketch_query/ref/m16_d{d}_R{r},{us:.0f},"
-                    f"{16 * r / us:.2f}")
+        for m in (16,) + QUERY_M:
+            q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
+            us = _time(_sketch_query, q, w, counts)
+            rows.append(f"kern/sketch_query/ref/m{m}_d{d}_R{r},{us:.0f},"
+                        f"{m * r / us:.2f}")
     for row in rows:
         print_fn(row)
     return rows

@@ -1,0 +1,38 @@
+"""Version-compat shims over the JAX API surface this repo targets.
+
+The code is written against the current ``jax.shard_map`` / ``jax.lax.pvary``
+API; the pinned container ships an older jax where ``shard_map`` still lives
+in ``jax.experimental`` and varying-manual-axes (vma) tracking does not exist
+yet. These shims keep every call site on the new spelling while degrading
+gracefully on the old runtime:
+
+* :func:`shard_map` — forwards to ``jax.shard_map`` when present, else to
+  ``jax.experimental.shard_map.shard_map`` (dropping the abstract-mesh-only
+  ``axis_names`` kwarg and disabling the static replication checker, which
+  predates vma and rejects valid programs).
+* :func:`pvary` — identity on runtimes without vma tracking (where every
+  value inside ``shard_map`` is already treated as varying).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with fallback to the pre-0.5 experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs.pop("axis_names", None)
+    kwargs.setdefault("check_rep", False)
+    return _shard_map(f, **kwargs)
+
+
+def pvary(x, axes):
+    """``jax.lax.pvary`` where available; identity on pre-vma runtimes."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axes) if fn is not None else x

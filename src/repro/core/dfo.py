@@ -6,8 +6,10 @@ are estimated by antithetic sphere sampling (Nesterov–Spokoiny):
     g_hat = (d / (2 k sigma)) * sum_j [L(theta + sigma v_j) - L(theta - sigma v_j)] v_j
 
 with ``v_j`` uniform on the unit sphere. The paper queries ~10 points per
-step; we batch all ``2k`` queries into one hashed gather so a DFO step is a
-single fused call (DESIGN.md §3).
+step; we batch all ``2k`` sphere queries *and* the iterate-loss evaluation
+into one hashed gather, so a DFO step is a single fused call of ``2k + 1``
+queries (DESIGN.md §3.3) — the trace therefore records the loss at the
+iterate *entering* each step.
 
 The regression driver constrains the last coordinate of ``theta_tilde`` to
 ``-1`` after every step (Algorithm 2's projection).
@@ -66,26 +68,31 @@ def minimize(
         homogeneous coordinate to -1).
 
     Returns:
-      ``DFOResult`` with the final iterate and the per-step loss trace.
+      ``DFOResult`` with the final iterate and the per-step loss trace
+      (``losses[t]`` is the loss at the iterate entering step ``t``).
     """
     dim = theta0.shape[-1]
     proj = project if project is not None else (lambda t: t)
 
     def step(carry, key_t):
         theta, lr, sigma = carry
-        v = _sphere(key_t, config.num_queries, dim)
+        k = config.num_queries
+        v = _sphere(key_t, k, dim)
+        # The iterate rides along in the sphere batch: one fused query call
+        # per step (2k+1 or k+1 points) instead of a separate 1-point call.
         if config.antithetic:
-            pts = jnp.concatenate([theta + sigma * v, theta - sigma * v], axis=0)
+            pts = jnp.concatenate(
+                [theta + sigma * v, theta - sigma * v, theta[None, :]], axis=0
+            )
             vals = loss_fn(pts)
-            diff = vals[: config.num_queries] - vals[config.num_queries :]
-            grad = (dim / (2.0 * config.num_queries * sigma)) * (diff @ v)
+            diff = vals[:k] - vals[k : 2 * k]
+            grad = (dim / (2.0 * k * sigma)) * (diff @ v)
         else:
-            pts = theta + sigma * v
+            pts = jnp.concatenate([theta + sigma * v, theta[None, :]], axis=0)
             vals = loss_fn(pts)
-            base = loss_fn(theta[None, :])[0]
-            grad = (dim / (config.num_queries * sigma)) * ((vals - base) @ v)
+            grad = (dim / (k * sigma)) * ((vals[:k] - vals[k]) @ v)
+        loss_here = vals[-1]  # loss at the iterate entering this step
         theta = proj(theta - lr * grad)
-        loss_here = loss_fn(theta[None, :])[0]
         carry = (theta, lr * config.decay, sigma * config.sigma_decay)
         return carry, (loss_here, theta)
 
@@ -147,8 +154,8 @@ def quadratic_refine(
     nrm = jnp.linalg.norm(step)
     step = step * jnp.minimum(1.0, radius / (nrm + 1e-12))
     cand = proj(theta + step)
-    better = loss_fn(cand[None, :])[0] <= loss_fn(theta[None, :])[0]
-    return jnp.where(better, cand, theta)
+    accept_vals = loss_fn(jnp.stack([cand, theta]))  # one batched accept test
+    return jnp.where(accept_vals[0] <= accept_vals[1], cand, theta)
 
 
 def pin_last_coordinate(value: float = -1.0) -> Callable[[Array], Array]:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import lsh, sketch as sketch_lib
 
 Array = jax.Array
@@ -62,7 +63,7 @@ def sharded_sketch(
         return sketch_lib.Sketch(counts=counts, n=n)
 
     shard_spec = P(axes)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_build,
         mesh=mesh,
         in_specs=(P(), shard_spec),

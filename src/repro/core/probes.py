@@ -109,16 +109,28 @@ class FittedProbe(NamedTuple):
 def fit_probe(
     key: Array, state: ProbeState, d_model: int,
     dfo_config: Optional[dfo.DFOConfig] = None,
+    l2: float = 3e-2,
 ) -> FittedProbe:
-    """Recover the linear value-head from counters only (Algorithm 2)."""
+    """Recover the linear value-head from counters only (Algorithm 2).
+
+    ``l2`` ridge-regularizes the DFO objective (paper §6). At d_model scale
+    the frozen-hash noise of the RACE estimate rewards magnitude overshoot —
+    the sketch loss keeps falling along ``alpha * theta`` well past the true
+    mse minimum — so the high-d probe needs the ridge term to recover a
+    usable readout (measured: without it the probe loses to the mean
+    predictor at d_model = 64, R = 4096).
+    """
     cfg_d = dfo_config or dfo.DFOConfig(
         steps=300, num_queries=8, sigma=0.5, sigma_decay=0.995,
         learning_rate=2.0, decay=0.995, average_tail=0.5,
     )
 
     def loss_fn(thetas: Array) -> Array:
-        return sketch_lib.query_theta(state.sketch, state.params, thetas,
-                                      paired=True)
+        est = sketch_lib.query_theta(state.sketch, state.params, thetas,
+                                     paired=True)
+        if l2 > 0.0:
+            est = est + l2 * jnp.sum(thetas[..., :d_model] ** 2, axis=-1)
+        return est
 
     proj = dfo.pin_last_coordinate(-1.0)
     jloss = jax.jit(loss_fn)

@@ -30,6 +30,7 @@ class StormRegressorConfig:
     norm_slack: float = 1.05      # unit-ball scaling slack (quantile-based)
     count_dtype: str = "int32"
     orthogonal: bool = False      # structured-orthogonal SRP (variance ↓, beyond-paper)
+    engine: str = "auto"          # insert/query path: scan | kernel | auto (DESIGN.md §3.4)
     l2: float = 0.0               # optional ridge on the DFO objective (paper §6)
     refine_steps: int = 1         # model-based quadratic polish passes (ref [13])
     refine_radius: float = 0.3
@@ -111,12 +112,23 @@ def fit(
             batch=config.batch,
             paired=True,
             dtype=jnp.dtype(config.count_dtype),
+            engine=config.engine,
         )
     else:
         sk, params, _ = prebuilt
 
+    use_kernel = sketch_lib.resolve_engine(config.engine) == "kernel"
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops  # deferred: ops imports core
+
     def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
-        est = sketch_lib.query_theta(sk, params, thetas, paired=True)
+        # Kernel path: the tiled query kernel handles any batch size, so the
+        # DFO sphere batches and the O(d^2) quadratic-refine batches all stay
+        # on the fused path.
+        if use_kernel:
+            est = kernel_ops.query_theta(sk, params, thetas, paired=True)
+        else:
+            est = sketch_lib.query_theta(sk, params, thetas, paired=True)
         if config.l2 > 0.0:
             est = est + config.l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
         return est

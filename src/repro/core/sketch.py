@@ -136,6 +136,19 @@ def query_theta(
 # ---------------------------------------------------------------------------
 
 
+def resolve_engine(engine: str) -> str:
+    """Resolve an insert/query engine name to ``scan`` or ``kernel``.
+
+    Single owner of the ``auto`` rule (kernel on TPU, scan elsewhere) so
+    insert and query sides can never disagree on what ``auto`` means.
+    """
+    if engine not in ("auto", "scan", "kernel"):
+        raise ValueError(f"unknown engine {engine!r}; use auto | scan | kernel")
+    if engine == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "scan"
+    return engine
+
+
 def sketch_dataset(
     params: lsh.LSHParams,
     z: Array,
@@ -145,6 +158,7 @@ def sketch_dataset(
     paired: bool = True,
     dtype: jnp.dtype = jnp.int32,
     vary_axes: tuple = (),
+    engine: str = "auto",
 ) -> Sketch:
     """One-pass sketch of a full (pre-scaled) dataset ``z: (n, dim)``.
 
@@ -153,9 +167,31 @@ def sketch_dataset(
 
     ``vary_axes``: mesh axis names to mark the scan carry as varying over —
     required when called inside ``shard_map`` (JAX vma tracking).
+
+    ``engine`` selects the insert path: ``"scan"`` is the pure-jnp
+    hash + scatter-add scan below; ``"kernel"`` streams batches through the
+    fused Pallas histogram engine (``repro.kernels.ops.sketch_stream``,
+    DESIGN.md §3.4); ``"auto"`` picks the kernel on TPU and the scan
+    elsewhere. Engines agree up to floating-point sign ties in the paired
+    projection (a tied point moves to a sibling bucket in the same row —
+    row masses exact; see DESIGN.md §3.2). ``vary_axes`` (shard_map callers)
+    always uses the scan path.
     """
     rows = rows if rows is not None else params.rows
     buckets = buckets if buckets is not None else params.buckets
+    resolved = resolve_engine(engine)
+    if resolved == "kernel" and not vary_axes:
+        if rows != params.rows or buckets != params.buckets:
+            if engine == "kernel":  # explicit request we cannot honor
+                raise ValueError(
+                    "engine='kernel' derives rows/buckets from params; "
+                    f"got overrides rows={rows}, buckets={buckets}"
+                )
+        else:
+            from repro.kernels import ops as kernel_ops  # deferred: ops imports us
+
+            sk = kernel_ops.sketch_stream(params, z, batch=batch, paired=paired)
+            return Sketch(counts=sk.counts.astype(dtype), n=sk.n)
     n, dim = z.shape
     n_pad = (-n) % batch
     zp = jnp.concatenate([z, jnp.zeros((n_pad, dim), z.dtype)], axis=0)
@@ -189,6 +225,8 @@ def sketch_dataset(
 
     init = init_sketch(rows, buckets, dtype)
     if vary_axes:
-        init = jax.tree.map(lambda t: jax.lax.pvary(t, tuple(vary_axes)), init)
+        from repro import compat
+
+        init = jax.tree.map(lambda t: compat.pvary(t, tuple(vary_axes)), init)
     out, _ = jax.lax.scan(step, init, (zp, maskp))
     return out

@@ -55,13 +55,31 @@ def hash_histogram(
     return histogram_kernel.hash_histogram(x, w, mask, interpret=interpret)
 
 
+def paired_hash_histogram(
+    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+) -> Array:
+    """Fused antithetic PRP insert: one projection pass, both code sets.
+
+    ``z`` is pre-scaled but NOT augmented; ``w`` lives in the augmented space
+    ``(p, d + 2, R)``. Equals ``hash_histogram(aug(z)) + hash_histogram(aug(-z))``
+    at half the MXU flops and HBM reads.
+    """
+    if mask is None:
+        mask = jnp.ones((z.shape[0],), jnp.float32)
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and z.shape[-1] < 64):
+        return ref.paired_hash_histogram(z, w, mask)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return histogram_kernel.paired_hash_histogram(z, w, mask, interpret=interpret)
+
+
 def sketch_query(q: Array, w: Array, counts: Array, mode: str = "auto") -> Array:
-    """Batched RACE query: ``(m,)`` mean counts at the query codes."""
-    if (
-        mode == "ref"
-        or q.shape[0] > 128
-        or (mode == "auto" and not _on_tpu() and q.shape[-1] < 64)
-    ):
+    """Batched RACE query: ``(m,)`` mean counts at the query codes.
+
+    The kernel grids over query tiles, so any batch size (DFO sphere batches,
+    quadratic-refine trust-region batches with m in the thousands) stays on
+    the kernel path — there is no large-m reference fallback.
+    """
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and q.shape[-1] < 64):
         return ref.sketch_query(q, w, counts)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
     return query_kernel.sketch_query(q, w, counts, interpret=interpret)
@@ -80,13 +98,17 @@ def build_sketch(
     paired: bool = True,
     mode: str = "auto",
 ) -> sketch_lib.Sketch:
-    """One-shot fused sketch of pre-scaled data ``z`` (PRP when paired)."""
+    """One-shot fused sketch of pre-scaled data ``z`` (PRP when paired).
+
+    The paired insert runs the projection matmuls exactly once per batch and
+    derives both antithetic code sets from the shared accumulator
+    (``paired_hash_histogram``) — not two single-sided histogram passes.
+    """
     w = from_lsh_params(params)
     if mask is None:
         mask = jnp.ones((z.shape[0],), jnp.float32)
     if paired:
-        counts = hash_histogram(lsh.augment_data(z), w, mask, mode=mode)
-        counts += hash_histogram(lsh.augment_data(-z), w, mask, mode=mode)
+        counts = paired_hash_histogram(z, w, mask, mode=mode)
     else:
         counts = hash_histogram(z, w, mask, mode=mode)
     n = jnp.sum(mask).astype(jnp.int32)
@@ -108,3 +130,45 @@ def query_theta(
     denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * (2.0 if paired else 1.0)
     est = mean_count / denom
     return est[0] if theta_tilde.ndim == 1 else est
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode"))
+def sketch_stream(
+    params: lsh.LSHParams,
+    z: Array,
+    mask: Optional[Array] = None,
+    batch: int = 1024,
+    paired: bool = True,
+    mode: str = "auto",
+) -> sketch_lib.Sketch:
+    """Streaming kernel engine: scan masked batches through the fused insert.
+
+    The dataset is padded to a batch multiple and scanned with a carried
+    ``(R, B)`` count accumulator, so each step is one fused histogram kernel
+    call (paired or single-sided) instead of a hash + scatter-add — the kernel
+    analogue of ``core.sketch.sketch_dataset`` (DESIGN.md §3.4). Counts agree
+    with the scatter-add scan up to floating-point sign ties in the paired
+    projection (row masses exact; DESIGN.md §3.2).
+    """
+    n, dim = z.shape
+    w = from_lsh_params(params)
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_pad = (-n) % batch
+    zp = jnp.concatenate([z, jnp.zeros((n_pad, dim), z.dtype)], axis=0)
+    mp = jnp.concatenate([mask, jnp.zeros((n_pad,), jnp.float32)], axis=0)
+    zb = zp.reshape(-1, batch, dim)
+    mb = mp.reshape(-1, batch)
+
+    def step(counts: Array, xs):
+        z_t, m_t = xs
+        if paired:
+            tile = paired_hash_histogram(z_t, w, m_t, mode=mode)
+        else:
+            tile = hash_histogram(z_t, w, m_t, mode=mode)
+        return counts + tile, None
+
+    init = jnp.zeros((params.rows, params.buckets), jnp.int32)
+    counts, _ = jax.lax.scan(step, init, (zb, mb))
+    return sketch_lib.Sketch(counts=counts, n=jnp.sum(mask).astype(jnp.int32))

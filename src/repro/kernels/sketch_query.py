@@ -1,15 +1,20 @@
 """Pallas TPU kernel: batched STORM sketch query (hash + gather + row-mean).
 
-The DFO optimizer issues ~2k sphere queries per step; this kernel fuses the
-query-side hashing with the counter gather so a whole DFO step is one call.
-TPU has no fast gather either — the gather is a one-hot contraction against
-the (br, B) counter tile held in VMEM.
+The DFO optimizer issues ~2k sphere queries per step and the quadratic-refine
+polish issues ``3 * (1 + d + d(d+1)/2)`` trust-region samples in one batch;
+this kernel fuses the query-side hashing with the counter gather so a whole
+DFO step is one call. TPU has no fast gather either — the gather is a one-hot
+contraction against the (br, B) counter tile held in VMEM.
 
-Schedule:
-  grid = (R/br, d/bd); queries (m <= block_m) live in a single block.
-  - scratch ``acc (p, bm, br)`` accumulates projections over ``k``;
+Schedule (DESIGN.md §3.3):
+  grid = (m/bm, R/br, d/bd); ``k`` (features) fastest, then ``R``.
+  - scratch ``acc (p, bm, br)`` accumulates projections over ``k`` for the
+    current (query-tile, row-tile) pair;
   - at the last ``k`` step, codes are packed and the partial sum
-    ``sum_r counts[r, code]`` for this row tile is added to the output.
+    ``sum_r counts[r, code]`` for this row tile is added to the output;
+  - each output block (bm, 1) is revisited across the whole (R, d) subgrid
+    and initialized once at the first step, so arbitrarily large query
+    batches (m >> 128) stream through without a reference fallback.
 """
 
 from __future__ import annotations
@@ -25,10 +30,10 @@ Array = jax.Array
 
 
 def _query_kernel(q_ref, w_ref, c_ref, o_ref, acc_ref, *, planes: int, k_steps: int):
-    i = pl.program_id(0)
-    k = pl.program_id(1)
+    j = pl.program_id(1)  # row (R) tile
+    k = pl.program_id(2)  # feature (d) tile
 
-    @pl.when(jnp.logical_and(i == 0, k == 0))
+    @pl.when(jnp.logical_and(j == 0, k == 0))
     def _init_out():
         o_ref[...] = jnp.zeros_like(o_ref)
 
@@ -37,9 +42,9 @@ def _query_kernel(q_ref, w_ref, c_ref, o_ref, acc_ref, *, planes: int, k_steps: 
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[...].astype(jnp.float32)  # (bm, bd)
-    for j in range(planes):
-        acc_ref[j, :, :] += jnp.dot(
-            q, w_ref[j, :, :].astype(jnp.float32),
+    for p in range(planes):
+        acc_ref[p, :, :] += jnp.dot(
+            q, w_ref[p, :, :].astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
 
@@ -47,8 +52,8 @@ def _query_kernel(q_ref, w_ref, c_ref, o_ref, acc_ref, *, planes: int, k_steps: 
     def _epilogue():
         buckets = c_ref.shape[-1]
         codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bm, br)
-        for j in range(planes):
-            codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
+        for p in range(planes):
+            codes += (acc_ref[p, :, :] > 0).astype(jnp.int32) << p
         iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
         onehot = (codes[:, :, None] == iota).astype(jnp.float32)  # (bm, br, B)
         counts = c_ref[...].astype(jnp.float32)  # (br, B)
@@ -68,10 +73,10 @@ def sketch_query(
     block_d: int = 512,
     interpret: bool = False,
 ) -> Array:
-    """Batched RACE query. See ``ref.sketch_query`` for semantics.
+    """Batched RACE query, tiled over queries. See ``ref.sketch_query``.
 
     Args:
-      q: ``(m, d)`` normalized/augmented query vectors.
+      q: ``(m, d)`` normalized/augmented query vectors; m is unrestricted.
       w: ``(p, d, R)`` hyperplane normals.
       counts: ``(R, 2**p)`` counters.
 
@@ -90,19 +95,17 @@ def sketch_query(
     wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
     # Padded rows must contribute 0: zero counters for padded R rows.
     cp = jnp.pad(counts, ((0, r_pad), (0, 0)))
-    grid = ((r + r_pad) // br, (d + d_pad) // bd)
-    m_tiles = (m + m_pad) // bm
+    grid = ((m + m_pad) // bm, (r + r_pad) // br, (d + d_pad) // bd)
 
-    assert m_tiles == 1, "queries are batched into a single tile by design"
     out = pl.pallas_call(
-        functools.partial(_query_kernel, planes=p, k_steps=grid[1]),
+        functools.partial(_query_kernel, planes=p, k_steps=grid[2]),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bd), lambda i, k: (0, k)),
-            pl.BlockSpec((p, bd, br), lambda i, k: (0, k, i)),
-            pl.BlockSpec((br, 1 << p), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((p, bd, br), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((br, 1 << p), lambda i, j, k: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (0, 0)),
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m + m_pad, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((p, bm, br), jnp.float32)],
         interpret=interpret,

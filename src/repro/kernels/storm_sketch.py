@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused SRP hash + histogram (the STORM insert hot loop).
+"""Pallas TPU kernels: fused SRP hash + histogram (the STORM insert hot loop).
 
 A GPU implementation scatter-increments the ``R x B`` counter array with
 atomics. TPUs have no fast scatter, so the insert is re-thought for the MXU/
@@ -7,13 +7,19 @@ matmuls, sign+pack to codes, expand to a one-hot cube and reduce over the
 batch tile into a VMEM-resident ``(br, B)`` accumulator. Codes and one-hots
 never touch HBM; each data element is read exactly once.
 
-Schedule:
+Schedule (shared by both kernels):
   grid = (R/br, n/bn, d/bd); ``k`` (features) fastest, then ``n``.
   - scratch ``acc (p, bn, br)`` accumulates projections over ``k``;
   - on the last ``k`` step the epilogue packs codes and adds the masked
     one-hot histogram of the tile into the output block;
   - the output block (br, B) is revisited across the whole (n, k) subgrid
     and initialized once at the first step.
+
+``paired_hash_histogram`` is the antithetic PRP insert (DESIGN.md §3.2): the
+augmented pair ``aug(±z) = [±z, 0, pad]`` shares the padding coordinate, so
+the epilogue derives the negative-side projections from the accumulator and a
+rank-1 ``pad ⊗ w_pad`` correction — both code sets from one projection pass,
+halving MXU flops and HBM reads per insert versus two single-sided calls.
 """
 
 from __future__ import annotations
@@ -112,4 +118,111 @@ def hash_histogram(
         scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
         interpret=interpret,
     )(xp, wp, mp)
+    return out[:r]
+
+
+def _paired_hash_histogram_kernel(
+    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, *, planes: int,
+    k_steps: int,
+):
+    n_i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n_i == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd) — augmented features
+    for j in range(planes):
+        acc_ref[j, :, :] += jnp.dot(
+            x, w_ref[j, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        buckets = o_ref.shape[-1]
+        pad = pad_ref[...].astype(jnp.float32)  # (bn, 1)
+        codes_p = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
+        codes_n = jnp.zeros(acc_ref.shape[1:], jnp.int32)
+        for j in range(planes):
+            acc = acc_ref[j, :, :]  # proj(aug(z)) = s + t
+            t2 = 2.0 * pad * wp_ref[j, :, :].astype(jnp.float32)  # (bn, br)
+            codes_p += (acc > 0).astype(jnp.int32) << j
+            codes_n += ((t2 - acc) > 0).astype(jnp.int32) << j  # proj(aug(-z))
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes_p[:, :, None] == iota).astype(jnp.float32)
+        onehot += (codes_n[:, :, None] == iota).astype(jnp.float32)
+        masked = onehot * m_ref[...].astype(jnp.float32)[:, None, None]
+        o_ref[...] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+)
+def paired_hash_histogram(
+    z: Array,
+    w: Array,
+    mask: Array,
+    *,
+    block_n: int = 128,
+    block_r: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Fused antithetic PRP insert. See ``ref.paired_hash_histogram``.
+
+    Args:
+      z: ``(n, d)`` pre-scaled points (``|z| <= 1``; NOT augmented).
+      w: ``(p, d + 2, R)`` hyperplane normals for the augmented space.
+      mask: ``(n,)`` validity mask in {0, 1} (stream padding).
+
+    Returns:
+      ``(R, 2**p)`` int32 counts (each unmasked point adds 2 per row).
+    """
+    n, d = z.shape
+    p, d_aug, r = w.shape
+    assert d_aug == d + 2, (d_aug, d)
+    buckets = 1 << p
+
+    z = z.astype(jnp.float32)
+    sq = jnp.sum(z * z, axis=-1, keepdims=True)
+    pad_col = jnp.sqrt(jnp.clip(1.0 - sq, 0.0, None))  # (n, 1)
+    x_aug = jnp.concatenate([z, jnp.zeros_like(pad_col), pad_col], axis=-1)
+
+    bn = min(block_n, max(8, n))
+    br = min(block_r, r)
+    bd = min(block_d, d_aug)
+    n_pad, r_pad, d_pad = (-n) % bn, (-r) % br, (-d_aug) % bd
+    xp = jnp.pad(x_aug, ((0, n_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    # Padded rows are masked out; padded pad-column entries of 0 keep the
+    # rank-1 correction zero there.
+    padp = jnp.pad(pad_col, ((0, n_pad), (0, 0)))
+    w_pad = jnp.pad(w[:, d + 1 : d + 2, :], ((0, 0), (0, 0), (0, r_pad)))
+    mp = jnp.pad(mask.astype(jnp.float32), (0, n_pad))
+    grid = ((r + r_pad) // br, (n + n_pad) // bn, (d_aug + d_pad) // bd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _paired_hash_histogram_kernel, planes=p, k_steps=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((p, bd, br), lambda i, j, k: (0, k, i)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((p, 1, br), lambda i, j, k: (0, 0, i)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br, buckets), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, padp, w_pad, mp)
     return out[:r]

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -70,14 +72,14 @@ def pipeline_forward(
             buf = jax.lax.ppermute(out, axis, perm)
             return (buf, outputs), None
 
-        buf0 = jax.lax.pvary(jnp.zeros_like(x_local[0]), (axis,))
-        outs0 = jax.lax.pvary(jnp.zeros_like(x_local), (axis,))
+        buf0 = compat.pvary(jnp.zeros_like(x_local[0]), (axis,))
+        outs0 = compat.pvary(jnp.zeros_like(x_local), (axis,))
         (_, outputs), _ = jax.lax.scan(body, (buf0, outs0),
                                        jnp.arange(steps))
         # only the last stage holds non-zero outputs; psum broadcasts them
         return jax.lax.psum(outputs, axis)
 
-    fn_sharded = jax.shard_map(
+    fn_sharded = compat.shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(P(axis), P()),

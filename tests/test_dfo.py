@@ -49,6 +49,43 @@ class TestMinimize:
         assert res.losses.shape == (17,)
 
 
+class TestFusedQueryBatching:
+    """The DFO hot loop issues ONE batched loss call per step: the iterate
+    rides along with the sphere points (2k+1 antithetic / k+1 one-sided)."""
+
+    def _trace_batches(self, antithetic, k):
+        batches = []
+
+        def f(pts):
+            batches.append(pts.shape[0])
+            return jnp.sum((pts - 0.5) ** 2, axis=-1)
+
+        cfg = dfo.DFOConfig(steps=4, num_queries=k, sigma=0.2,
+                            learning_rate=0.05, antithetic=antithetic)
+        dfo.minimize(f, jnp.zeros(3), jax.random.PRNGKey(0), cfg)
+        return batches
+
+    def test_antithetic_single_call_per_step(self):
+        batches = self._trace_batches(antithetic=True, k=6)
+        assert set(batches) == {2 * 6 + 1}
+
+    def test_one_sided_single_call_per_step(self):
+        batches = self._trace_batches(antithetic=False, k=5)
+        assert set(batches) == {5 + 1}
+
+    def test_refine_batches_accept_test(self):
+        """quadratic_refine: one trust-region batch + one 2-point accept."""
+        batches = []
+
+        def f(pts):
+            batches.append(pts.shape[0])
+            return jnp.sum(pts * pts, axis=-1)
+
+        dfo.quadratic_refine(f, jnp.zeros(3), jax.random.PRNGKey(0),
+                             radius=0.3, num_samples=40)
+        assert sorted(set(batches)) == [2, 40]
+
+
 class TestQuadraticRefine:
     def test_exact_on_quadratic(self):
         """The model-based polish recovers a quadratic's optimum in one shot."""

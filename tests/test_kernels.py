@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property sweeps to skips
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import lsh, sketch as sketch_lib
 from repro.kernels import ops, ref
