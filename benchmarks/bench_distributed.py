@@ -17,38 +17,40 @@ from repro.core import distributed, lsh, sketch
 from repro.train import compression
 
 
-def run(print_fn=print) -> List[str]:
+def run(print_fn=print, smoke: bool = False) -> List[str]:
     rows = []
 
     # tree merge: edge-gateway aggregation across k devices (host-side)
-    params = lsh.init_srp(jax.random.PRNGKey(0), 512, 4, 12)
-    shards = [0.4 * jax.random.normal(jax.random.PRNGKey(i), (2000, 10))
+    r_rows, n_shard = (64, 200) if smoke else (512, 2000)
+    params = lsh.init_srp(jax.random.PRNGKey(0), r_rows, 4, 12)
+    shards = [0.4 * jax.random.normal(jax.random.PRNGKey(i), (n_shard, 10))
               for i in range(8)]
     sks = [sketch.sketch_dataset(params, lsh.scale_to_unit_ball(z)[0],
-                                 batch=500) for z in shards]
+                                 batch=max(n_shard // 4, 1)) for z in shards]
     t0 = time.perf_counter()
     merged = distributed.tree_merge(sks)
     jax.block_until_ready(merged.counts)
     us = (time.perf_counter() - t0) * 1e6
     rows.append(f"dist/tree_merge/8shards,{us:.0f},{int(merged.n)}")
     rows.append(
-        f"dist/sketch_bytes/R512,0,{merged.memory_bytes()}"
+        f"dist/sketch_bytes/R{r_rows},0,{merged.memory_bytes()}"
     )
 
     # gradient compression: ratio + heavy-hitter recovery at 7B-scale count
-    ccfg = compression.SketchCompressorConfig(rows=5, cols=1 << 14,
-                                              top_k_fraction=0.01)
-    vec = jnp.zeros(200_000).at[jnp.asarray([11, 777, 123456])].set(
-        jnp.asarray([4.0, -3.0, 2.0]))
-    vec = vec + 0.005 * jax.random.normal(jax.random.PRNGKey(5), (200_000,))
+    n_vec = 20_000 if smoke else 200_000
+    ccfg = compression.SketchCompressorConfig(
+        rows=5, cols=1 << (10 if smoke else 14), top_k_fraction=0.01
+    )
+    hot = jnp.asarray([11, 777, n_vec - 100])
+    vec = jnp.zeros(n_vec).at[hot].set(jnp.asarray([4.0, -3.0, 2.0]))
+    vec = vec + 0.005 * jax.random.normal(jax.random.PRNGKey(5), (n_vec,))
     t0 = time.perf_counter()
     sk = compression.sketch_vector(ccfg, vec)
     est = compression.unsketch_vector(ccfg, sk, vec.shape[0])
     jax.block_until_ready(est)
     us = (time.perf_counter() - t0) * 1e6
-    err = float(jnp.abs(est[jnp.asarray([11, 777, 123456])] -
-                        jnp.asarray([4.0, -3.0, 2.0])).max())
-    rows.append(f"compress/roundtrip/200k,{us:.0f},{err:.4f}")
+    err = float(jnp.abs(est[hot] - jnp.asarray([4.0, -3.0, 2.0])).max())
+    rows.append(f"compress/roundtrip/{n_vec // 1000}k,{us:.0f},{err:.4f}")
     rows.append(
         f"compress/ratio/7B,0,"
         f"{compression.compression_ratio(ccfg, 7_000_000_000):.0f}"

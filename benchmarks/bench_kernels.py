@@ -14,11 +14,18 @@ Paired-insert rows benchmark the antithetic PRP hot loop: one-pass
 ``ref.hash_histogram`` calls it replaces; the ``paired_insert_ratio`` row's
 derived field is one-pass/two-pass (< 1 is a win, ~0.5-0.6 measured).
 Large-m query rows track the tiled batched query at DFO/quadratic-refine
-batch sizes.
+batch sizes; fleet rows use the fused fleet-step shape ``m = F*(2k+1)``
+(k=8, DESIGN.md §8). The ``fit/*`` rows time the end-to-end fleet training
+claim: ``fit(restarts=8)`` against a Python loop of 8 sequential fits —
+the ``fit/fleet8_speedup`` derived field is loop-time/fleet-time (> 1 is a
+win; acceptance bar is >= 2).
+
+``run(smoke=True)`` shrinks every shape/iter for the CI harness-smoke job.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, List
 
@@ -33,8 +40,14 @@ SHAPES = [
     (4096, 128, 2048, 4),  # probe-scale d
     (1024, 1024, 4096, 4), # d_model-scale probes
 ]
+SHAPES_SMOKE = [(256, 8, 64, 3)]
 
 QUERY_M = (512, 4096)      # quadratic-refine / large-DFO batch sizes
+QUERY_M_SMOKE = (64,)
+
+FLEET_K = 8                # DFO num_queries: fleet step batch = F*(2k+1)
+FLEET_F = (8, 32, 128)
+FLEET_F_SMOKE = (4,)
 
 
 def _time(fn: Callable[..., jax.Array], *args, iters: int = 8) -> float:
@@ -89,9 +102,62 @@ def _paired_two_sided(z, wa, mask):
             + ref.hash_histogram(lsh.augment_data(-z), wa, mask))
 
 
-def run(print_fn=print) -> List[str]:
+def _bench_fleet_fit(rows: List[str], smoke: bool) -> None:
+    """End-to-end fleet training: fit(restarts=8) vs a Python loop of fits.
+
+    The loop is the pre-fleet alternative a user has today — F sequential
+    ``fit`` calls, each tracing its own DFO scan and issuing its own tiny
+    per-step queries. The fleet run advances all F members on ONE fused
+    F*(2k+1)-point query per step under a single trace.
+    """
+    from repro.core import dfo as dfo_lib, regression
+    from repro.data import datasets
+
+    f = 8
+    n, d, r, steps = (256, 4, 64, 12) if smoke else (1024, 6, 256, 100)
+    iters = 1 if smoke else 3
+    x, y, _ = datasets.make_regression(
+        jax.random.PRNGKey(0), n, d, noise=0.2, condition=3
+    )
+    cfg = regression.StormRegressorConfig(
+        rows=r,
+        dfo=dfo_lib.DFOConfig(steps=steps, num_queries=FLEET_K, sigma=0.5,
+                              sigma_decay=0.995, learning_rate=2.0,
+                              decay=0.995, average_tail=0.5),
+    )
+    fleet_cfg = dataclasses.replace(cfg, restarts=f)
+
+    def loop_of_fits():
+        thetas = [
+            regression.fit(jax.random.PRNGKey(s), x, y, cfg).theta
+            for s in range(f)
+        ]
+        jax.block_until_ready(thetas[-1])
+
+    def fleet_fit():
+        jax.block_until_ready(
+            regression.fit(jax.random.PRNGKey(0), x, y, fleet_cfg).theta
+        )
+
+    best_loop = best_fleet = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        loop_of_fits()
+        best_loop = min(best_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fleet_fit()
+        best_fleet = min(best_fleet, time.perf_counter() - t0)
+    us_loop, us_fleet = best_loop * 1e6, best_fleet * 1e6
+    tag = f"n{n}_d{d}_R{r}_s{steps}"
+    rows.append(f"fit/loop{f}/{tag},{us_loop:.0f},{f * 1e6 / us_loop:.2f}")
+    rows.append(f"fit/fleet{f}/{tag},{us_fleet:.0f},{f * 1e6 / us_fleet:.2f}")
+    rows.append(f"fit/fleet{f}_speedup/{tag},{us_fleet:.0f},"
+                f"{us_loop / us_fleet:.2f}")
+
+
+def run(print_fn=print, smoke: bool = False) -> List[str]:
     rows = []
-    for (n, d, r, p) in SHAPES:
+    for (n, d, r, p) in (SHAPES_SMOKE if smoke else SHAPES):
         kx, kw = jax.random.split(jax.random.PRNGKey(n + d))
         x = jax.random.normal(kx, (n, d))
         w = jax.random.normal(kw, (p, d, r))
@@ -120,11 +186,26 @@ def run(print_fn=print) -> List[str]:
                     f"{us_one:.0f},{us_one / us_two:.3f}")
 
         counts = jnp.ones((r, 1 << p), jnp.int32)
-        for m in (16,) + QUERY_M:
+        for m in (16,) + (QUERY_M_SMOKE if smoke else QUERY_M):
             q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
             us = _time(_sketch_query, q, w, counts)
             rows.append(f"kern/sketch_query/ref/m{m}_d{d}_R{r},{us:.0f},"
                         f"{m * r / us:.2f}")
+
+    # Fleet-step query shapes: one fused call of m = F*(2k+1) points serves
+    # F optimizers per DFO step (DESIGN.md §8). Paper-scale d/R.
+    n, d, r, p = (SHAPES_SMOKE if smoke else SHAPES)[0]
+    kw = jax.random.PRNGKey(11)
+    w = jax.random.normal(kw, (p, d, r))
+    counts = jnp.ones((r, 1 << p), jnp.int32)
+    for f in (FLEET_F_SMOKE if smoke else FLEET_F):
+        m = f * (2 * FLEET_K + 1)
+        q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
+        us = _time(_sketch_query, q, w, counts)
+        rows.append(f"kern/sketch_query/ref/fleetF{f}_m{m}_d{d}_R{r},"
+                    f"{us:.0f},{m * r / us:.2f}")
+
+    _bench_fleet_fit(rows, smoke)
     for row in rows:
         print_fn(row)
     return rows

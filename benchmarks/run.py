@@ -8,11 +8,16 @@ JSON (suite -> [{name, us_per_call, derived}]) so the perf trajectory is
 machine-readable, e.g.::
 
     python -m benchmarks.run kernels --json BENCH_kernels.json
+
+``--smoke`` shrinks shapes/iterations on the suites that support it — the CI
+harness-smoke job runs this so the perf harness itself cannot rot between
+perf PRs (numbers are meaningless; only that every row still produces).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -44,6 +49,9 @@ def main() -> None:
                         help=f"suites to run (default: all of {list(suites)})")
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="write suite rows as structured JSON to PATH")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny shapes/iters (CI harness smoke; numbers "
+                             "are not meaningful)")
     args = parser.parse_args()
 
     unknown = [s for s in args.suite if s not in suites]
@@ -62,7 +70,13 @@ def main() -> None:
     t0 = time.perf_counter()
     results = {}
     for name in selected:
-        results[name] = suites[name]() or []
+        fn = suites[name]
+        kwargs = (
+            {"smoke": True}
+            if args.smoke and "smoke" in inspect.signature(fn).parameters
+            else {}
+        )
+        results[name] = fn(**kwargs) or []
     total = time.perf_counter() - t0
     print(f"# total_seconds,{total:.1f},", file=sys.stderr)
 

@@ -11,14 +11,22 @@ into one hashed gather, so a DFO step is a single fused call of ``2k + 1``
 queries (DESIGN.md §3.3) — the trace therefore records the loss at the
 iterate *entering* each step.
 
+Everything is **fleet-native** (DESIGN.md §8): :func:`minimize_fleet` carries
+``(F, dim)`` iterates — F independent optimizers (restarts, models, devices)
+against one shared sketch — and flattens each step's sphere batches into ONE
+loss call of ``F * (2k + 1)`` points, recovering per-fleet gradients by
+reshape. :func:`minimize` is the ``F = 1`` special case. Fleet members may
+carry their own ``sigma`` / ``learning_rate`` (restart hyper-diversity).
+
 The regression driver constrains the last coordinate of ``theta_tilde`` to
-``-1`` after every step (Algorithm 2's projection).
+``-1`` after every step (Algorithm 2's projection). Projection callables must
+be batch-polymorphic over leading fleet axes (``pin_last_coordinate`` is).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +38,11 @@ LossFn = Callable[[Array], Array]  # (q, dim) or (dim,) -> (q,) or scalar
 class DFOResult(NamedTuple):
     theta: Array
     losses: Array  # (steps,) loss trace at the iterate
+
+
+class FleetDFOResult(NamedTuple):
+    theta: Array   # (F, dim) final iterates
+    losses: Array  # (F, steps) per-member loss traces
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +62,101 @@ def _sphere(key: Array, k: int, dim: int) -> Array:
     return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
 
 
+def _fleet_param(
+    value: Optional[Union[float, Array]], default: float, f: int
+) -> Array:
+    """Broadcast a scalar / per-member hyperparameter to a ``(F,)`` array."""
+    arr = jnp.asarray(default if value is None else value, jnp.float32)
+    if arr.ndim == 0:
+        return jnp.broadcast_to(arr, (f,))
+    if arr.shape != (f,):
+        raise ValueError(f"per-fleet hyperparameter has shape {arr.shape}, "
+                         f"expected () or ({f},)")
+    return arr
+
+
+def minimize_fleet(
+    loss_fn: LossFn,
+    theta0: Array,
+    keys: Array,
+    config: DFOConfig,
+    project: Optional[Callable[[Array], Array]] = None,
+    sigma: Optional[Union[float, Array]] = None,
+    learning_rate: Optional[Union[float, Array]] = None,
+) -> FleetDFOResult:
+    """Minimize F independent black-box losses with ONE fused query per step.
+
+    Each step draws per-member sphere directions, flattens the ``(F, 2k+1)``
+    point block to a single ``(F*(2k+1), dim)`` loss call (riding the m-tiled
+    query kernel grid), and recovers per-member gradients by reshape — the
+    whole fleet advances on one hashed gather. Member ``f`` reproduces
+    ``minimize(loss_fn, theta0[f], keys[f], config)`` bit-for-bit when all
+    members share the config hyperparameters.
+
+    Args:
+      loss_fn: maps ``(q, dim)`` parameter batches to ``(q,)`` losses —
+        typically a batched sketch query. Must be pointwise (each row's loss
+        independent of the rest of the batch), which every sketch query is.
+      theta0: ``(F, dim)`` initial iterates.
+      keys: ``(F,)`` stacked PRNG keys, one per member.
+      config: shared DFO hyperparameters.
+      project: optional batch-polymorphic projection applied after each
+        update (e.g. pin the homogeneous coordinate to -1).
+      sigma / learning_rate: optional per-member ``(F,)`` overrides of the
+        config scalars (restart hyper-diversity schedule, DESIGN.md §8).
+
+    Returns:
+      ``FleetDFOResult`` with ``(F, dim)`` final iterates and ``(F, steps)``
+      per-member loss traces (``losses[f, t]`` is member f's loss at the
+      iterate entering step ``t``).
+    """
+    f, dim = theta0.shape
+    proj = project if project is not None else (lambda t: t)
+    k = config.num_queries
+    sig0 = _fleet_param(sigma, config.sigma, f)
+    lr0 = _fleet_param(learning_rate, config.learning_rate, f)
+    # Per-member step keys, identical to each member splitting its own key.
+    step_keys = jax.vmap(lambda kk: jax.random.split(kk, config.steps))(keys)
+    step_keys = jnp.swapaxes(step_keys, 0, 1)  # (steps, F, 2)
+
+    def step(carry, keys_t):
+        theta, lr, sig = carry  # (F, dim), (F,), (F,)
+        v = jax.vmap(lambda kk: _sphere(kk, k, dim))(keys_t)  # (F, k, dim)
+        sv = sig[:, None, None] * v
+        here = theta[:, None, :]
+        # The iterate rides along in the sphere batch: one fused query call
+        # per step of F*(2k+1) (or F*(k+1)) points for the whole fleet.
+        if config.antithetic:
+            pts = jnp.concatenate([here + sv, here - sv, here], axis=1)
+            vals = loss_fn(pts.reshape(f * (2 * k + 1), dim))
+            vals = vals.reshape(f, 2 * k + 1)
+            diff = vals[:, :k] - vals[:, k : 2 * k]
+            grad = (dim / (2.0 * k * sig))[:, None] * jnp.einsum(
+                "fk,fkd->fd", diff, v
+            )
+        else:
+            pts = jnp.concatenate([here + sv, here], axis=1)
+            vals = loss_fn(pts.reshape(f * (k + 1), dim))
+            vals = vals.reshape(f, k + 1)
+            grad = (dim / (k * sig))[:, None] * jnp.einsum(
+                "fk,fkd->fd", vals[:, :k] - vals[:, k : k + 1], v
+            )
+        loss_here = vals[:, -1]  # loss at the iterate entering this step
+        theta = proj(theta - lr[:, None] * grad)
+        carry = (theta, lr * config.decay, sig * config.sigma_decay)
+        return carry, (loss_here, theta)
+
+    init = (proj(theta0), lr0, sig0)
+    (theta, _, _), (losses, iterates) = jax.lax.scan(step, init, step_keys)
+
+    if config.average_tail > 0.0:
+        # Polyak averaging over the noisy tail — variance ↓ without bias for a
+        # convex basin; re-projected in case the average leaves the constraint.
+        tail = max(1, int(config.steps * config.average_tail))
+        theta = proj(jnp.mean(iterates[-tail:], axis=0))
+    return FleetDFOResult(theta=theta, losses=jnp.swapaxes(losses, 0, 1))
+
+
 def minimize(
     loss_fn: LossFn,
     theta0: Array,
@@ -57,6 +165,9 @@ def minimize(
     project: Optional[Callable[[Array], Array]] = None,
 ) -> DFOResult:
     """Minimize a black-box loss with batched sphere-sampling gradients.
+
+    The single-iterate entry point — the ``F = 1`` slice of
+    :func:`minimize_fleet` (identical numerics, identical query batching).
 
     Args:
       loss_fn: maps a batch of parameter vectors ``(q, dim)`` to losses
@@ -71,69 +182,20 @@ def minimize(
       ``DFOResult`` with the final iterate and the per-step loss trace
       (``losses[t]`` is the loss at the iterate entering step ``t``).
     """
-    dim = theta0.shape[-1]
-    proj = project if project is not None else (lambda t: t)
-
-    def step(carry, key_t):
-        theta, lr, sigma = carry
-        k = config.num_queries
-        v = _sphere(key_t, k, dim)
-        # The iterate rides along in the sphere batch: one fused query call
-        # per step (2k+1 or k+1 points) instead of a separate 1-point call.
-        if config.antithetic:
-            pts = jnp.concatenate(
-                [theta + sigma * v, theta - sigma * v, theta[None, :]], axis=0
-            )
-            vals = loss_fn(pts)
-            diff = vals[:k] - vals[k : 2 * k]
-            grad = (dim / (2.0 * k * sigma)) * (diff @ v)
-        else:
-            pts = jnp.concatenate([theta + sigma * v, theta[None, :]], axis=0)
-            vals = loss_fn(pts)
-            grad = (dim / (k * sigma)) * ((vals[:k] - vals[k]) @ v)
-        loss_here = vals[-1]  # loss at the iterate entering this step
-        theta = proj(theta - lr * grad)
-        carry = (theta, lr * config.decay, sigma * config.sigma_decay)
-        return carry, (loss_here, theta)
-
-    keys = jax.random.split(key, config.steps)
-    init = (proj(theta0), config.learning_rate, config.sigma)
-    (theta, _, _), (losses, iterates) = jax.lax.scan(step, init, keys)
-
-    if config.average_tail > 0.0:
-        # Polyak averaging over the noisy tail — variance ↓ without bias for a
-        # convex basin; re-projected in case the average leaves the constraint.
-        tail = max(1, int(config.steps * config.average_tail))
-        theta = proj(jnp.mean(iterates[-tail:], axis=0))
-    return DFOResult(theta=theta, losses=losses)
+    res = minimize_fleet(loss_fn, theta0[None, :], key[None], config,
+                         project=project)
+    return DFOResult(theta=res.theta[0], losses=res.losses[0])
 
 
-def quadratic_refine(
-    loss_fn: LossFn,
-    theta: Array,
-    key: Array,
-    radius: float = 0.3,
-    num_samples: Optional[int] = None,
-    ridge: float = 1e-6,
-    project: Optional[Callable[[Array], Array]] = None,
-) -> Array:
-    """Model-based DFO polish (Conn–Scheinberg–Vicente, the paper's ref [13]).
+def _quadratic_model_step(delta: Array, vals: Array, radius: float,
+                          ridge: float) -> Array:
+    """Fit a full quadratic to (delta, vals) samples; return the model step.
 
-    Fits a full quadratic model of the black-box loss from samples in a trust
-    region around ``theta`` and jumps to the model minimizer (clipped to the
-    region). One shot of this snaps a sphere-sampling iterate much closer to
-    the basin floor than further noisy first-order steps, because the fit
-    averages O(d^2) queries.
+    Pure linear algebra (no loss queries); vmapped over the fleet axis so the
+    F feature solves form one block-diagonal batched solve.
     """
-    dim = theta.shape[-1]
-    proj = project if project is not None else (lambda t: t)
+    m, dim = delta.shape
     n_feat = 1 + dim + dim * (dim + 1) // 2
-    m = num_samples if num_samples is not None else 3 * n_feat
-
-    pts = theta + radius * jax.random.normal(key, (m, dim)) / jnp.sqrt(dim)
-    vals = loss_fn(pts)
-
-    delta = pts - theta
     iu = jnp.triu_indices(dim)
     quad = (delta[:, :, None] * delta[:, None, :])[:, iu[0], iu[1]]
     feats = jnp.concatenate([jnp.ones((m, 1)), delta, quad], axis=-1)
@@ -152,16 +214,84 @@ def quadratic_refine(
     lam = jnp.maximum(1e-4, 1e-3 - jnp.min(evals))
     step = -jnp.linalg.solve(h + lam * jnp.eye(dim), g)
     nrm = jnp.linalg.norm(step)
-    step = step * jnp.minimum(1.0, radius / (nrm + 1e-12))
+    return step * jnp.minimum(1.0, radius / (nrm + 1e-12))
+
+
+def quadratic_refine_fleet(
+    loss_fn: LossFn,
+    theta: Array,
+    keys: Array,
+    radius: float = 0.3,
+    num_samples: Optional[int] = None,
+    ridge: float = 1e-6,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> Array:
+    """Fleet-batched model-based DFO polish — two fused loss calls total.
+
+    Every member samples its own trust region, but all ``F * m`` model points
+    go through ONE loss call (and all ``2F`` accept tests through a second);
+    the per-member quadratic fits are a vmapped block-diagonal feature solve.
+    Member ``f`` equals ``quadratic_refine(loss_fn, theta[f], keys[f], ...)``.
+
+    Args:
+      theta: ``(F, dim)`` iterates to polish.
+      keys: ``(F,)`` stacked PRNG keys, one per member.
+    """
+    f, dim = theta.shape
+    proj = project if project is not None else (lambda t: t)
+    n_feat = 1 + dim + dim * (dim + 1) // 2
+    m = num_samples if num_samples is not None else 3 * n_feat
+
+    pts = jax.vmap(
+        lambda th, kk: th + radius * jax.random.normal(kk, (m, dim))
+        / jnp.sqrt(dim)
+    )(theta, keys)  # (F, m, dim)
+    vals = loss_fn(pts.reshape(f * m, dim)).reshape(f, m)
+
+    step = jax.vmap(
+        lambda p_f, v_f, th_f: _quadratic_model_step(
+            p_f - th_f, v_f, radius, ridge
+        )
+    )(pts, vals, theta)
     cand = proj(theta + step)
-    accept_vals = loss_fn(jnp.stack([cand, theta]))  # one batched accept test
-    return jnp.where(accept_vals[0] <= accept_vals[1], cand, theta)
+    # One batched accept test for the whole fleet: per member [cand, theta].
+    accept = loss_fn(jnp.stack([cand, theta], axis=1).reshape(2 * f, dim))
+    accept = accept.reshape(f, 2)
+    return jnp.where((accept[:, 0] <= accept[:, 1])[:, None], cand, theta)
+
+
+def quadratic_refine(
+    loss_fn: LossFn,
+    theta: Array,
+    key: Array,
+    radius: float = 0.3,
+    num_samples: Optional[int] = None,
+    ridge: float = 1e-6,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> Array:
+    """Model-based DFO polish (Conn–Scheinberg–Vicente, the paper's ref [13]).
+
+    Fits a full quadratic model of the black-box loss from samples in a trust
+    region around ``theta`` and jumps to the model minimizer (clipped to the
+    region). One shot of this snaps a sphere-sampling iterate much closer to
+    the basin floor than further noisy first-order steps, because the fit
+    averages O(d^2) queries. The ``F = 1`` slice of
+    :func:`quadratic_refine_fleet`.
+    """
+    return quadratic_refine_fleet(
+        loss_fn, theta[None, :], key[None], radius=radius,
+        num_samples=num_samples, ridge=ridge, project=project,
+    )[0]
 
 
 def pin_last_coordinate(value: float = -1.0) -> Callable[[Array], Array]:
-    """Projection pinning ``theta_tilde[-1]`` (Algorithm 2's constraint)."""
+    """Projection pinning ``theta_tilde[..., -1]`` (Algorithm 2's constraint).
+
+    Batch-polymorphic: applies to a single ``(dim,)`` iterate or a fleet
+    ``(F, dim)`` block alike.
+    """
 
     def proj(t: Array) -> Array:
-        return t.at[-1].set(value)
+        return t.at[..., -1].set(value)
 
     return proj

@@ -1,4 +1,4 @@
-"""Distributed STORM: shard-local sketching + collective merge.
+"""Distributed STORM: shard-local sketching, collective merge, fleet training.
 
 The sketch's mergeability-by-addition maps exactly onto ``psum``: every
 data-parallel worker folds its local stream into a private sketch and one
@@ -6,25 +6,30 @@ integer all-reduce produces the sketch of the union (DESIGN.md §3). At a few
 KB–MB the sketch is negligible against ICI bandwidth, so the paper's
 communication-efficiency claim survives verbatim at pod scale.
 
-Two entry points:
+Entry points:
 
 * :func:`sharded_sketch` — SPMD build + merge under ``shard_map`` for data
   already sharded across a mesh axis (the production path).
 * :func:`tree_merge` — host-side hierarchical merge of independently built
   sketches (the paper's edge-gateway topology).
+* :func:`fleet_fit` — the training-side dual: shard a FLEET of optimizers
+  over the mesh against one replicated merged sketch. Counters are read-only
+  during optimization, so after the one-time merge there is **zero per-step
+  communication** — a gateway trains many edge models from one sketch
+  (DESIGN.md §8).
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import lsh, sketch as sketch_lib
+from repro.core import dfo, lsh, sketch as sketch_lib
 
 Array = jax.Array
 
@@ -85,6 +90,100 @@ def tree_merge(sketches: Sequence[sketch_lib.Sketch]) -> sketch_lib.Sketch:
             nxt.append(layer[-1])
         layer = nxt
     return layer[0]
+
+
+def fleet_fit(
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    theta0: Array,
+    keys: Array,
+    config: dfo.DFOConfig,
+    mesh: Optional[Mesh] = None,
+    axis: str = "fleet",
+    sigma: Optional[Union[float, Array]] = None,
+    learning_rate: Optional[Union[float, Array]] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+    l2: float = 0.0,
+    engine: str = "auto",
+    project_last: bool = True,
+) -> dfo.FleetDFOResult:
+    """Train F models against ONE replicated sketch, fleet axis over the mesh.
+
+    The communication dual of :func:`sharded_sketch`: there the *data* shards
+    and the sketch is the reduction; here the merged sketch replicates
+    (read-only counters) and the *fleet* of optimizers shards over ``axis``.
+    Each device advances its fleet shard with one fused
+    ``F_local * (2k+1)``-point query per DFO step and NO collectives — the
+    gateway topology where many edge models train from one merged summary.
+
+    Args:
+      sk: the merged sketch (replicated to every device).
+      params: hash parameters (replicated).
+      theta0: ``(F, dim)`` initial iterates, shardable on dim 0.
+      keys: ``(F,)`` stacked PRNG keys, one per member.
+      config: shared DFO hyperparameters.
+      mesh: device mesh; ``None`` runs the identical program unsharded (the
+        reference semantics the 1-device-mesh test pins).
+      axis: mesh axis carrying the fleet shards.
+      sigma / learning_rate: optional per-member ``(F,)`` hyperparameters.
+      refine_steps / refine_radius: optional quadratic-polish passes.
+      l2: ridge on the sketch loss (paper §6).
+      engine: query path (``scan | kernel | auto``).
+      project_last: pin ``theta[..., -1] = -1`` (Algorithm 2's constraint).
+
+    Returns:
+      ``FleetDFOResult`` with ``(F, dim)`` thetas and ``(F, steps)`` traces.
+    """
+    from repro.core import regression  # deferred: regression imports core.dfo
+
+    f = theta0.shape[0]
+    proj = dfo.pin_last_coordinate(-1.0) if project_last else None
+    sig = dfo._fleet_param(sigma, config.sigma, f)
+    lr = dfo._fleet_param(learning_rate, config.learning_rate, f)
+
+    def local(counts, n, projections, th, ks, sg, lr_):
+        loss_fn = regression.make_loss_fn(
+            sketch_lib.Sketch(counts=counts, n=n),
+            lsh.LSHParams(projections=projections),
+            l2=l2,
+            engine=engine,
+        )
+        # Shared optimize-then-refine loop: fleet_fit members advance exactly
+        # like fit() restarts (same refine-key/radius schedule).
+        res = regression.run_fleet(
+            loss_fn, th, ks, config, project=proj, sigma=sg,
+            learning_rate=lr_, refine_steps=refine_steps,
+            refine_radius=refine_radius,
+        )
+        return res.theta, res.losses
+
+    if mesh is None:
+        # Jitted whole, like the shard_map path compiles it: the unsharded
+        # reference is the same compiled program minus the sharding
+        # annotations (loss traces match a 1-device mesh bit-for-bit).
+        thetas, traces = jax.jit(local)(sk.counts, sk.n, params.projections,
+                                        theta0, keys, sig, lr)
+        return dfo.FleetDFOResult(theta=thetas, losses=traces)
+
+    from repro.sharding import specs as sharding_specs
+
+    fleet_spec, replicated = sharding_specs.fleet_specs(axis)
+    sharding_specs.check_fleet_divisible(f, mesh, axis)
+    fn = compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(replicated, replicated, replicated,
+                  fleet_spec, fleet_spec, fleet_spec, fleet_spec),
+        out_specs=(fleet_spec, fleet_spec),
+    )
+    put = NamedSharding(mesh, fleet_spec)
+    thetas, traces = fn(
+        sk.counts, sk.n, params.projections,
+        jax.device_put(theta0, put), jax.device_put(keys, put),
+        jax.device_put(sig, put), jax.device_put(lr, put),
+    )
+    return dfo.FleetDFOResult(theta=thetas, losses=traces)
 
 
 @partial(jax.jit, static_argnames=("paired",))

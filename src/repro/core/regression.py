@@ -4,6 +4,12 @@ Pipeline: standardize -> scale ``[x, y]`` into the unit ball -> one-pass PRP
 sketch -> derivative-free minimization of the sketch-estimated surrogate ->
 un-standardize ``theta``.
 
+The optimizer is fleet-native (DESIGN.md §8): ``fit(restarts=F)`` seeds F
+optimizers with diversified inits and σ/lr ladders against the ONE sketch,
+advances them all with a single fused ``F*(2k+1)``-point query per DFO step,
+and selects (or basin-averages) by final sketch-loss. ``restarts=1`` is the
+paper's single-iterate Algorithm 2, bit-for-bit.
+
 The sketch is built through ``repro.kernels.ops`` so the same driver runs the
 pure-jnp path on CPU and the fused Pallas path on TPU.
 """
@@ -11,7 +17,7 @@ pure-jnp path on CPU and the fused Pallas path on TPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +40,12 @@ class StormRegressorConfig:
     l2: float = 0.0               # optional ridge on the DFO objective (paper §6)
     refine_steps: int = 1         # model-based quadratic polish passes (ref [13])
     refine_radius: float = 0.3
+    restarts: int = 1             # F — fleet size (one fused query serves all)
+    restart_select: str = "best"  # best | average (basin average, DESIGN.md §8)
+    restart_basin_tol: float = 0.05   # average: keep members within (1+tol)·best
+    restart_sigma_spread: float = 2.0  # geometric σ ladder across members
+    restart_lr_spread: float = 2.0     # geometric lr ladder (reverse-paired)
+    restart_init_scale: float = 0.3    # random-ball init radius, members >= 1
     dfo: dfo.DFOConfig = dataclasses.field(
         default_factory=lambda: dfo.DFOConfig(
             steps=400, num_queries=8, sigma=0.5, sigma_decay=0.995,
@@ -48,11 +60,12 @@ class FittedRegressor(NamedTuple):
     theta_std: Array      # (d,) weights in standardized space (diagnostics)
     sketch: sketch_lib.Sketch
     params: lsh.LSHParams
-    losses: Array         # DFO loss trace
+    losses: Array         # DFO loss trace of the selected fleet member
     x_mean: Array
     x_scale: Array
     y_mean: Array
     y_scale: Array
+    fleet_losses: Optional[Array] = None  # (F,) final sketch-loss per member
 
     def predict(self, x: Array) -> Array:
         return x @ self.theta + self.intercept
@@ -76,6 +89,124 @@ def _standardize(x: Array, y: Array, enabled: bool):
 scale_to_unit_ball = lsh.scale_to_unit_ball  # canonical home: repro.core.lsh
 
 
+def make_loss_fn(
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    l2: float = 0.0,
+    engine: str = "auto",
+    d: Optional[int] = None,
+) -> Callable[[Array], Array]:
+    """Batched sketch-loss closure with session-hoisted kernel weights.
+
+    The kernel path's ``(R, p, d) -> (p, d, R)`` weight transpose
+    (``ops.from_lsh_params``) runs ONCE here, outside every query; the
+    returned closure threads the converted array through each call, so the
+    scanned DFO step contains no per-step transpose of the projection tensor
+    (jaxpr-asserted in tests). The kernel's m-tiled query grid accepts any
+    batch size, so DFO sphere blocks, fleet blocks of ``F*(2k+1)`` points,
+    and O(d^2) quadratic-refine batches all stay on the fused path.
+
+    Args:
+      sk: the (frozen) sketch to query.
+      params: hash parameters.
+      l2: optional ridge on the first ``d`` coordinates (paper §6).
+      engine: ``scan | kernel | auto`` query path (DESIGN.md §3.4).
+      d: feature dimension for the ridge term; defaults to ``params.dim - 3``
+        (params hash the augmented ``[x, y]`` space of ``d + 1 + 2`` dims).
+
+    Returns:
+      A jitted ``(q, dim) -> (q,)`` loss callable.
+    """
+    d = params.dim - 3 if d is None else d
+    use_kernel = sketch_lib.resolve_engine(engine) == "kernel"
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops  # deferred: ops imports core
+
+        w = kernel_ops.from_lsh_params(params)  # hoisted: once per session
+
+        def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
+            est = kernel_ops.query_theta_with_weights(sk, w, thetas, paired=True)
+            if l2 > 0.0:
+                est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
+            return est
+    else:
+
+        def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
+            est = sketch_lib.query_theta(sk, params, thetas, paired=True)
+            if l2 > 0.0:
+                est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
+            return est
+
+    return jax.jit(loss_fn)
+
+
+def run_fleet(
+    loss_fn: Callable[[Array], Array],
+    theta0: Array,
+    keys: Array,
+    config: dfo.DFOConfig,
+    project: Optional[Callable[[Array], Array]] = None,
+    sigma: Optional[Array] = None,
+    learning_rate: Optional[Array] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+) -> dfo.FleetDFOResult:
+    """Optimize-then-refine fleet loop shared by ``fit`` and
+    ``distributed.fleet_fit`` — the single owner of the refine-key convention
+    (``fold_in(member_key, pass+1)``) and the radius-halving schedule, so the
+    sharded and restart paths cannot drift apart.
+
+    Returns the refined ``(F, dim)`` thetas with the minimize-phase loss
+    traces.
+    """
+    res = dfo.minimize_fleet(loss_fn, theta0, keys, config, project=project,
+                             sigma=sigma, learning_rate=learning_rate)
+    thetas = res.theta
+    for i in range(refine_steps):
+        refine_keys = jax.vmap(lambda mk: jax.random.fold_in(mk, i + 1))(keys)
+        thetas = dfo.quadratic_refine_fleet(
+            loss_fn, thetas, refine_keys,
+            radius=refine_radius / (2.0 ** i), project=project,
+        )
+    return dfo.FleetDFOResult(theta=thetas, losses=res.losses)
+
+
+def seed_fleet(
+    key: Array, f: int, d: int, config: StormRegressorConfig
+):
+    """Restart-diversity schedule (DESIGN.md §8).
+
+    Member 0 is the paper's deterministic baseline — zero init with the
+    configured σ/lr and ``key`` itself — so ``restarts=1`` reproduces the
+    single-iterate fit bit-for-bit. Members ``i >= 1`` draw random-ball inits
+    and walk geometric σ/lr ladders (reverse-paired so aggressive radii meet
+    conservative rates and vice versa), covering basins and noise regimes the
+    baseline member misses.
+
+    Returns:
+      ``(keys (F,), theta0 (F, d+1), sigmas (F,), lrs (F,))``.
+    """
+    base = config.dfo
+    keys = [key]
+    theta0 = [jnp.zeros((d + 1,), jnp.float32)]
+    sigmas = [jnp.float32(base.sigma)]
+    lrs = [jnp.float32(base.learning_rate)]
+    for i in range(1, f):
+        # Offset past the refine-pass fold_in indices (1..refine_steps).
+        ki = jax.random.fold_in(key, 7919 + i)
+        keys.append(ki)
+        u = -1.0 + 2.0 * (i - 1) / max(1, f - 2) if f > 2 else 0.0
+        sigmas.append(jnp.float32(base.sigma * config.restart_sigma_spread ** u))
+        lrs.append(jnp.float32(base.learning_rate
+                               * config.restart_lr_spread ** (-u)))
+        theta0.append(
+            config.restart_init_scale
+            * jax.random.normal(jax.random.fold_in(ki, 0), (d + 1,), jnp.float32)
+        )
+    return (jnp.stack(keys), jnp.stack(theta0), jnp.stack(sigmas),
+            jnp.stack(lrs))
+
+
 def fit(
     key: Array,
     x: Array,
@@ -89,14 +220,20 @@ def fit(
       key: PRNG key (hash functions + DFO sampling).
       x: ``(n, d)`` features.
       y: ``(n,)`` targets.
-      config: hyperparameters.
+      config: hyperparameters. ``config.restarts=F`` trains an F-member fleet
+        against the one sketch — every DFO step is a single fused
+        ``F*(2k+1)``-point query — and selects by final sketch-loss.
       prebuilt: optionally a ``(sketch, params, scale)`` triple built elsewhere
         (e.g. merged from distributed shards) — then ``x, y`` are used only for
         standardization statistics and are never re-read.
     """
     config = config or StormRegressorConfig()
+    if config.restart_select not in ("best", "average"):
+        raise ValueError(f"unknown restart_select {config.restart_select!r}; "
+                         "use best | average")
     k_hash, k_dfo = jax.random.split(key)
     d = x.shape[-1]
+    f = max(1, config.restarts)
 
     xs_, ys_, xm, xsc, ym, ysc = _standardize(x, y, config.standardize)
     z = jnp.concatenate([xs_, ys_[:, None]], axis=-1)
@@ -117,41 +254,49 @@ def fit(
     else:
         sk, params, _ = prebuilt
 
-    use_kernel = sketch_lib.resolve_engine(config.engine) == "kernel"
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops  # deferred: ops imports core
-
-    def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
-        # Kernel path: the tiled query kernel handles any batch size, so the
-        # DFO sphere batches and the O(d^2) quadratic-refine batches all stay
-        # on the fused path.
-        if use_kernel:
-            est = kernel_ops.query_theta(sk, params, thetas, paired=True)
-        else:
-            est = sketch_lib.query_theta(sk, params, thetas, paired=True)
-        if config.l2 > 0.0:
-            est = est + config.l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
-        return est
-
-    loss_fn = jax.jit(loss_fn)
+    loss_fn = make_loss_fn(sk, params, l2=config.l2, engine=config.engine, d=d)
     proj = dfo.pin_last_coordinate(-1.0)
-    theta0 = jnp.zeros((d + 1,), jnp.float32)
-    result = dfo.minimize(loss_fn, theta0, k_dfo, config.dfo, project=proj)
-    theta_tilde = result.theta
-    for i in range(config.refine_steps):
-        theta_tilde = dfo.quadratic_refine(
-            loss_fn,
-            theta_tilde,
-            jax.random.fold_in(k_dfo, i + 1),
-            radius=config.refine_radius / (2.0 ** i),
-            project=proj,
+
+    member_keys, theta0, sigmas, lrs = seed_fleet(k_dfo, f, d, config)
+    result = run_fleet(
+        loss_fn, theta0, member_keys, config.dfo, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
+    )
+    thetas = result.theta  # (F, d+1)
+    # Selection: all fleet members + the zero (predict-the-mean) guard go
+    # through ONE final query. The guard keeps theta=0 if the frozen-hash
+    # noise drove every member to a worse-than-trivial model.
+    cand = jnp.concatenate(
+        [thetas, proj(jnp.zeros((1, d + 1), jnp.float32))], axis=0
+    )
+    vals = loss_fn(cand)
+    fleet_vals = vals[:f]
+    best_member = jnp.argmin(fleet_vals)
+    if f > 1 and config.restart_select == "average":
+        # Basin average: mean the members whose final loss sits within
+        # (1 + tol) of the best — averaging across one basin cuts frozen-hash
+        # noise, while argmin-gating keeps stray basins out of the mean. The
+        # best member rides in the runoff so an average straddling two basins
+        # can never displace a strictly better single iterate.
+        best = jnp.min(fleet_vals)
+        keep = (fleet_vals <= best * (1.0 + config.restart_basin_tol) + 1e-12)
+        avg = proj(
+            jnp.sum(jnp.where(keep[:, None], thetas, 0.0), axis=0)
+            / jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
         )
-    # Guard: at tiny sketches the frozen hash noise can drive the iterate to
-    # a worse-than-zero model; keep theta=0 (predict-the-mean) if the sketch
-    # itself prefers it.
-    both = jnp.stack([theta_tilde, proj(theta0)])
-    keep = jnp.argmin(loss_fn(both))
-    theta_tilde = both[keep]
+        runoff = jnp.stack([avg, thetas[best_member], cand[-1]])
+        runoff_vals = loss_fn(runoff)
+        # Break exact ties toward the average (index 0): jnp.argmin already
+        # prefers the lowest index, so the noise-reduced mean wins a draw.
+        theta_tilde = runoff[jnp.argmin(runoff_vals)]
+        trace = result.losses[best_member]
+    else:
+        idx = jnp.argmin(vals)
+        theta_tilde = cand[idx]
+        # Trace follows the selected member; if the zero guard won, report
+        # the best member's trace (the run the selection measured it against).
+        trace = result.losses[jnp.where(idx < f, idx, best_member)]
     theta_std = theta_tilde[:d]
 
     # Un-standardize: y' = x' @ th  with x' = (x - xm)/xs, y' = (y - ym)/ys.
@@ -163,11 +308,12 @@ def fit(
         theta_std=theta_std,
         sketch=sk,
         params=params,
-        losses=result.losses,
+        losses=trace,
         x_mean=xm,
         x_scale=xsc,
         y_mean=ym,
         y_scale=ysc,
+        fleet_losses=fleet_vals,
     )
 
 

@@ -57,6 +57,10 @@ class Sketch:
 
 
 def init_sketch(rows: int, buckets: int, dtype: jnp.dtype = jnp.int32) -> Sketch:
+    """Zeroed sketch. ``dtype`` may be a narrow integer type (``int16``,
+    ``uint16``, even ``int8``) — the paper's "tiny array of integer counters"
+    footprint claim — in which case every insert path saturates at the dtype
+    max instead of wrapping (DESIGN.md §6)."""
     return Sketch(
         counts=jnp.zeros((rows, buckets), dtype=dtype),
         n=jnp.zeros((), dtype=jnp.int32),
@@ -68,6 +72,31 @@ def _row_ids(codes: Array) -> Array:
     return jnp.broadcast_to(jnp.arange(codes.shape[-1], dtype=jnp.int32), codes.shape)
 
 
+def _is_narrow(dtype) -> bool:
+    return jnp.dtype(dtype).itemsize < 4
+
+
+def saturating_cast(counts32: Array, dtype) -> Array:
+    """Cast int32 counts to ``dtype``, clamping at the representable range.
+
+    Counters only ever grow, so clamping per batch equals clamping the final
+    total: once a cell pins at the max it stays there — the estimator's
+    gathered count degrades gracefully (an undercount) instead of the
+    catastrophic sign-flip of two's-complement wraparound.
+    """
+    info = jnp.iinfo(jnp.dtype(dtype))
+    return jnp.clip(counts32, info.min, info.max).astype(dtype)
+
+
+def _widen(counts: Array) -> Array:
+    """Lift narrow counters to int32 so a batch of scatter-adds cannot wrap."""
+    return counts.astype(jnp.int32) if _is_narrow(counts.dtype) else counts
+
+
+def _narrow_back(counts32: Array, dtype) -> Array:
+    return saturating_cast(counts32, dtype) if _is_narrow(dtype) else counts32
+
+
 def update(sketch: Sketch, codes: Array) -> Sketch:
     """Insert a batch of pre-hashed points.
 
@@ -75,18 +104,22 @@ def update(sketch: Sketch, codes: Array) -> Sketch:
       sketch: current sketch.
       codes: ``(batch, R)`` int32 bucket codes.
     """
-    counts = sketch.counts.at[_row_ids(codes), codes].add(
-        jnp.ones((), dtype=sketch.counts.dtype)
-    )
-    return Sketch(counts=counts, n=sketch.n + jnp.int32(codes.shape[0]))
+    dtype = sketch.counts.dtype
+    wide = _widen(sketch.counts)
+    wide = wide.at[_row_ids(codes), codes].add(jnp.ones((), wide.dtype))
+    return Sketch(counts=_narrow_back(wide, dtype),
+                  n=sketch.n + jnp.int32(codes.shape[0]))
 
 
 def prp_update(sketch: Sketch, codes_pos: Array, codes_neg: Array) -> Sketch:
     """Paired insert: one logical point increments two buckets per row."""
-    ones = jnp.ones((), dtype=sketch.counts.dtype)
-    counts = sketch.counts.at[_row_ids(codes_pos), codes_pos].add(ones)
-    counts = counts.at[_row_ids(codes_neg), codes_neg].add(ones)
-    return Sketch(counts=counts, n=sketch.n + jnp.int32(codes_pos.shape[0]))
+    dtype = sketch.counts.dtype
+    wide = _widen(sketch.counts)
+    ones = jnp.ones((), wide.dtype)
+    wide = wide.at[_row_ids(codes_pos), codes_pos].add(ones)
+    wide = wide.at[_row_ids(codes_neg), codes_neg].add(ones)
+    return Sketch(counts=_narrow_back(wide, dtype),
+                  n=sketch.n + jnp.int32(codes_pos.shape[0]))
 
 
 def insert(sketch: Sketch, params: lsh.LSHParams, x: Array) -> Sketch:
@@ -191,7 +224,7 @@ def sketch_dataset(
             from repro.kernels import ops as kernel_ops  # deferred: ops imports us
 
             sk = kernel_ops.sketch_stream(params, z, batch=batch, paired=paired)
-            return Sketch(counts=sk.counts.astype(dtype), n=sk.n)
+            return Sketch(counts=saturating_cast(sk.counts, dtype), n=sk.n)
     n, dim = z.shape
     n_pad = (-n) % batch
     zp = jnp.concatenate([z, jnp.zeros((n_pad, dim), z.dtype)], axis=0)
@@ -223,10 +256,15 @@ def sketch_dataset(
             counts = flat_add(s.counts, codes, mb)
         return Sketch(counts=counts, n=s.n + jnp.sum(mb).astype(jnp.int32)), None
 
-    init = init_sketch(rows, buckets, dtype)
+    # Narrow output dtypes accumulate the scan carry in int32 (a stream can
+    # exceed a 16-bit cell mid-scan) and saturate once at the end — counters
+    # are monotone, so this equals per-batch saturation (DESIGN.md §6).
+    init = init_sketch(rows, buckets, jnp.int32 if _is_narrow(dtype) else dtype)
     if vary_axes:
         from repro import compat
 
         init = jax.tree.map(lambda t: compat.pvary(t, tuple(vary_axes)), init)
     out, _ = jax.lax.scan(step, init, (zp, maskp))
+    if _is_narrow(dtype):
+        out = Sketch(counts=saturating_cast(out.counts, dtype), n=out.n)
     return out

@@ -116,6 +116,29 @@ def build_sketch(
 
 
 @functools.partial(jax.jit, static_argnames=("paired", "mode"))
+def query_theta_with_weights(
+    sk: sketch_lib.Sketch,
+    w: Array,
+    theta_tilde: Array,
+    paired: bool = True,
+    mode: str = "auto",
+) -> Array:
+    """Fused surrogate-risk estimate with pre-transposed kernel weights.
+
+    ``w`` is the plane-major ``(p, d, R)`` layout from :func:`from_lsh_params`.
+    Sessions that issue many queries against one frozen hash (a ``fit`` run's
+    scanned DFO steps, a serve loop) convert the layout ONCE and thread ``w``
+    through their loss closure, so no ``(R, p, d) -> (p, d, R)`` transpose
+    appears inside the per-step trace (asserted at jaxpr level in tests).
+    """
+    q = lsh.augment_query(lsh.normalize_query(theta_tilde))
+    mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)
+    denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * (2.0 if paired else 1.0)
+    est = mean_count / denom
+    return est[0] if theta_tilde.ndim == 1 else est
+
+
+@functools.partial(jax.jit, static_argnames=("paired", "mode"))
 def query_theta(
     sk: sketch_lib.Sketch,
     params: lsh.LSHParams,
@@ -123,13 +146,14 @@ def query_theta(
     paired: bool = True,
     mode: str = "auto",
 ) -> Array:
-    """Fused surrogate-risk estimate at a batch of parameters ``(m, d)``."""
-    w = from_lsh_params(params)
-    q = lsh.augment_query(lsh.normalize_query(theta_tilde))
-    mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)
-    denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * (2.0 if paired else 1.0)
-    est = mean_count / denom
-    return est[0] if theta_tilde.ndim == 1 else est
+    """Fused surrogate-risk estimate at a batch of parameters ``(m, d)``.
+
+    One-shot convenience: converts the weight layout per call. Hot loops
+    should hoist the conversion via :func:`query_theta_with_weights`.
+    """
+    return query_theta_with_weights(
+        sk, from_lsh_params(params), theta_tilde, paired=paired, mode=mode
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("batch", "paired", "mode"))

@@ -190,6 +190,37 @@ def opt_state_specs(opt_state: Any, pspecs: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Fleet-vectorized optimization (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def fleet_specs(axis: str = "fleet") -> Tuple[P, P]:
+    """PartitionSpecs for fleet training against one replicated sketch.
+
+    Single owner of the fleet-sharding convention used by
+    ``core.distributed.fleet_fit``: every per-member array (iterates ``(F, d)``,
+    PRNG keys ``(F, 2)``, σ/lr ladders ``(F,)``, loss traces ``(F, steps)``)
+    shards its LEADING fleet axis over ``axis``; the sketch counters, hash
+    params, and scalars replicate. Counters are read-only during optimization,
+    so this layout needs zero per-step communication.
+
+    Returns:
+      ``(fleet, replicated)`` PartitionSpecs.
+    """
+    return P(axis), P()
+
+
+def check_fleet_divisible(f: int, mesh: Mesh, axis: str) -> None:
+    """Fail fast when the fleet cannot split evenly over the mesh axis."""
+    size = mesh.shape[axis]
+    if f % size:
+        raise ValueError(
+            f"fleet size {f} not divisible by mesh axis {axis!r} ({size} "
+            f"devices); pad the fleet or choose F as a multiple"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Inputs / activations / caches
 # ---------------------------------------------------------------------------
 

@@ -122,3 +122,65 @@ class TestEstimator:
     def test_memory_bytes(self):
         sk = sketch.init_sketch(128, 16, dtype=jnp.int16)
         assert sk.memory_bytes() == 128 * 16 * 2 + 4
+
+
+class TestNarrowCounters:
+    """Narrow counter dtypes (paper's tiny-integer-array footprint claim):
+    inserts saturate at the dtype max instead of two's-complement wrapping."""
+
+    def test_int16_update_saturates_not_wraps(self):
+        sk = sketch.Sketch(counts=jnp.full((2, 4), 32760, jnp.int16),
+                           n=jnp.int32(0))
+        codes = jnp.zeros((100, 2), jnp.int32)  # 100 hits on bucket 0, per row
+        out = sketch.update(sk, codes)
+        assert out.counts.dtype == jnp.int16
+        assert int(out.counts[0, 0]) == 32767  # saturated at iinfo(int16).max
+        assert int(out.counts[1, 0]) == 32767
+        assert int(out.counts[0, 1]) == 32760  # untouched cells unchanged
+        assert int(jnp.min(out.counts)) >= 0   # nothing wrapped negative
+
+    def test_prp_update_saturates(self):
+        sk = sketch.Sketch(counts=jnp.full((1, 4), 127, jnp.int8),
+                           n=jnp.int32(0))
+        cp = jnp.zeros((5, 1), jnp.int32)
+        cn = jnp.ones((5, 1), jnp.int32)
+        out = sketch.prp_update(sk, cp, cn)
+        assert int(out.counts[0, 0]) == 127 and int(out.counts[0, 1]) == 127
+
+    def test_uint16_matches_int32_below_range(self):
+        params = _params(rows=8, planes=2, dim=4, seed=3)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(7), (60, 4))
+        wide = sketch.sketch_dataset(params, z, batch=16, paired=False)
+        narrow = sketch.sketch_dataset(params, z, batch=16, paired=False,
+                                       dtype=jnp.uint16)
+        assert narrow.counts.dtype == jnp.uint16
+        np.testing.assert_array_equal(np.asarray(narrow.counts, np.int32),
+                                      np.asarray(wide.counts))
+        assert int(narrow.n) == int(wide.n)
+        assert narrow.memory_bytes() < wide.memory_bytes()
+
+    def test_sketch_dataset_saturates_midstream(self):
+        """A stream that overflows an int8 cell mid-scan pins at the max —
+        the int32 carry means no intermediate wraparound either."""
+        params = _params(rows=4, planes=1, dim=3, seed=5)
+        z = jnp.broadcast_to(jnp.asarray([0.2, 0.1, 0.05]), (300, 3))
+        sk = sketch.sketch_dataset(params, z, batch=32, paired=False,
+                                   dtype=jnp.int8)
+        counts = np.asarray(sk.counts, np.int32)
+        assert counts.max() == 127  # 300 identical inserts saturate the cell
+        assert counts.min() >= 0
+        assert int(sk.n) == 300
+
+    def test_query_reads_narrow_counters(self):
+        params = _params(rows=16, planes=2, dim=5, seed=6)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(8), (50, 3))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        wide = sketch.sketch_dataset(params, zs, batch=25, paired=True)
+        narrow = sketch.sketch_dataset(params, zs, batch=25, paired=True,
+                                       dtype=jnp.int16)
+        q = jax.random.normal(jax.random.PRNGKey(9), (3, 3))
+        np.testing.assert_allclose(
+            np.asarray(sketch.query_theta(narrow, params, q)),
+            np.asarray(sketch.query_theta(wide, params, q)),
+            rtol=1e-6,
+        )
