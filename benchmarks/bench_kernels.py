@@ -15,10 +15,12 @@ Paired-insert rows benchmark the antithetic PRP hot loop: one-pass
 derived field is one-pass/two-pass (< 1 is a win, ~0.5-0.6 measured).
 Large-m query rows track the tiled batched query at DFO/quadratic-refine
 batch sizes; fleet rows use the fused fleet-step shape ``m = F*(2k+1)``
-(k=8, DESIGN.md §8). The ``fit/*`` rows time the end-to-end fleet training
-claim: ``fit(restarts=8)`` against a Python loop of 8 sequential fits —
-the ``fit/fleet8_speedup`` derived field is loop-time/fleet-time (> 1 is a
-win; acceptance bar is >= 2).
+(k=8, DESIGN.md §8), including classification- (raw feature dim, p=1) and
+probe-shaped (dim = d_model + 1) driver rows (§8.4). The ``fit/*`` rows time
+the end-to-end fleet training claim: ``regression.fit(restarts=8)`` against
+a Python loop of 8 sequential fits — the ``fit/fleet8_speedup`` derived
+field is loop-time/fleet-time (> 1 is a win; acceptance bar is >= 2) — and
+the ``cfit/*`` rows repeat the A/B on the max-margin classification driver.
 
 ``run(smoke=True)`` shrinks every shape/iter for the CI harness-smoke job.
 """
@@ -48,6 +50,15 @@ QUERY_M_SMOKE = (64,)
 FLEET_K = 8                # DFO num_queries: fleet step batch = F*(2k+1)
 FLEET_F = (8, 32, 128)
 FLEET_F_SMOKE = (4,)
+
+# Driver-shaped fleet steps (DESIGN.md §8.4): tag, query dim, R, p.
+# Classification queries at the raw feature dim (paper UCI scale, p=1);
+# probes query at dim = d_model + 1 (the homogeneous value-head iterate) —
+# the shape where large-m query economics matter most.
+DRIVER_FLEET_SHAPES = [("cls", 16, 512, 1), ("probe", 1025, 2048, 4)]
+DRIVER_FLEET_SHAPES_SMOKE = [("cls", 8, 64, 1), ("probe", 33, 64, 3)]
+DRIVER_FLEET_F = (8, 32)
+DRIVER_FLEET_F_SMOKE = (4,)
 
 
 def _time(fn: Callable[..., jax.Array], *args, iters: int = 8) -> float:
@@ -102,6 +113,28 @@ def _paired_two_sided(z, wa, mask):
             + ref.hash_histogram(lsh.augment_data(-z), wa, mask))
 
 
+def _ab_fleet_rows(rows: List[str], prefix: str, tag: str, f: int,
+                   iters: int, loop_fn, fleet_fn) -> None:
+    """Shared loop-vs-fleet A/B harness: interleaved best-of-N timing and
+    row emission, so every driver's ``*/fleetF_speedup`` is measured
+    identically."""
+    best_loop = best_fleet = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        loop_fn()
+        best_loop = min(best_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fleet_fn()
+        best_fleet = min(best_fleet, time.perf_counter() - t0)
+    us_loop, us_fleet = best_loop * 1e6, best_fleet * 1e6
+    rows.append(f"{prefix}/loop{f}/{tag},{us_loop:.0f},"
+                f"{f * 1e6 / us_loop:.2f}")
+    rows.append(f"{prefix}/fleet{f}/{tag},{us_fleet:.0f},"
+                f"{f * 1e6 / us_fleet:.2f}")
+    rows.append(f"{prefix}/fleet{f}_speedup/{tag},{us_fleet:.0f},"
+                f"{us_loop / us_fleet:.2f}")
+
+
 def _bench_fleet_fit(rows: List[str], smoke: bool) -> None:
     """End-to-end fleet training: fit(restarts=8) vs a Python loop of fits.
 
@@ -115,7 +148,6 @@ def _bench_fleet_fit(rows: List[str], smoke: bool) -> None:
 
     f = 8
     n, d, r, steps = (256, 4, 64, 12) if smoke else (1024, 6, 256, 100)
-    iters = 1 if smoke else 3
     x, y, _ = datasets.make_regression(
         jax.random.PRNGKey(0), n, d, noise=0.2, condition=3
     )
@@ -139,20 +171,47 @@ def _bench_fleet_fit(rows: List[str], smoke: bool) -> None:
             regression.fit(jax.random.PRNGKey(0), x, y, fleet_cfg).theta
         )
 
-    best_loop = best_fleet = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        loop_of_fits()
-        best_loop = min(best_loop, time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        fleet_fit()
-        best_fleet = min(best_fleet, time.perf_counter() - t0)
-    us_loop, us_fleet = best_loop * 1e6, best_fleet * 1e6
-    tag = f"n{n}_d{d}_R{r}_s{steps}"
-    rows.append(f"fit/loop{f}/{tag},{us_loop:.0f},{f * 1e6 / us_loop:.2f}")
-    rows.append(f"fit/fleet{f}/{tag},{us_fleet:.0f},{f * 1e6 / us_fleet:.2f}")
-    rows.append(f"fit/fleet{f}_speedup/{tag},{us_fleet:.0f},"
-                f"{us_loop / us_fleet:.2f}")
+    _ab_fleet_rows(rows, "fit", f"n{n}_d{d}_R{r}_s{steps}", f,
+                   1 if smoke else 3, loop_of_fits, fleet_fit)
+
+
+def _bench_fleet_fit_classification(rows: List[str], smoke: bool) -> None:
+    """End-to-end classification fleet: fit(restarts=8) vs a loop of fits.
+
+    Same A/B as ``_bench_fleet_fit`` but on the max-margin driver: the loop
+    is F sequential single-restart ``classification.fit`` calls (each with
+    its own trace and per-step single-sided queries); the fleet run advances
+    all F members on ONE fused F*(2k+1)-point margin query per step.
+    """
+    from repro.core import classification, dfo as dfo_lib
+    from repro.data import datasets
+
+    f = 8
+    n, d, r, steps = (256, 4, 64, 12) if smoke else (1024, 6, 256, 100)
+    x, y, _ = datasets.make_classification(jax.random.PRNGKey(0), n, d,
+                                           margin=0.7)
+    cfg = classification.StormClassifierConfig(
+        rows=r, planes=1,
+        dfo=dfo_lib.DFOConfig(steps=steps, num_queries=FLEET_K, sigma=0.5,
+                              learning_rate=1.0, decay=0.995,
+                              average_tail=0.5),
+    )
+    fleet_cfg = dataclasses.replace(cfg, restarts=f)
+
+    def loop_of_fits():
+        thetas = [
+            classification.fit(jax.random.PRNGKey(s), x, y, cfg).theta
+            for s in range(f)
+        ]
+        jax.block_until_ready(thetas[-1])
+
+    def fleet_fit():
+        jax.block_until_ready(
+            classification.fit(jax.random.PRNGKey(0), x, y, fleet_cfg).theta
+        )
+
+    _ab_fleet_rows(rows, "cfit", f"n{n}_d{d}_R{r}_s{steps}", f,
+                   1 if smoke else 3, loop_of_fits, fleet_fit)
 
 
 def run(print_fn=print, smoke: bool = False) -> List[str]:
@@ -205,7 +264,22 @@ def run(print_fn=print, smoke: bool = False) -> List[str]:
         rows.append(f"kern/sketch_query/ref/fleetF{f}_m{m}_d{d}_R{r},"
                     f"{us:.0f},{m * r / us:.2f}")
 
+    # Classification- and probe-shaped fleet steps (§8.4): the margin loss
+    # queries at the raw feature dim, the value-head probe at d_model + 1 —
+    # one fused m = F*(2k+1) call per DFO step in both drivers.
+    for (tag, d, r, p) in (DRIVER_FLEET_SHAPES_SMOKE if smoke
+                           else DRIVER_FLEET_SHAPES):
+        w = jax.random.normal(jax.random.PRNGKey(13 + d), (p, d, r))
+        counts = jnp.ones((r, 1 << p), jnp.int32)
+        for f in (DRIVER_FLEET_F_SMOKE if smoke else DRIVER_FLEET_F):
+            m = f * (2 * FLEET_K + 1)
+            q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
+            us = _time(_sketch_query, q, w, counts)
+            rows.append(f"kern/sketch_query/ref/{tag}F{f}_m{m}_d{d}_R{r},"
+                        f"{us:.0f},{m * r / us:.2f}")
+
     _bench_fleet_fit(rows, smoke)
+    _bench_fleet_fit_classification(rows, smoke)
     for row in rows:
         print_fn(row)
     return rows

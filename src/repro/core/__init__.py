@@ -5,6 +5,7 @@ from repro.core import (  # noqa: F401
     classification,
     dfo,
     distributed,
+    fleet,
     losses,
     lsh,
     privacy,

@@ -5,6 +5,19 @@ collision probability of the asymmetric inner-product hash applied to
 ``-y x``; inserting ``-y_i x_i`` (scaled into the unit ball, then
 asymmetrically augmented) makes the sketch query at ``theta`` an estimator of
 the mean margin loss.
+
+The driver is fleet-native (DESIGN.md §8.4): ``fit(restarts=F)`` seeds F
+optimizers with diversified inits and σ/lr ladders against the ONE sketch via
+the shared ``core.fleet`` machinery, advances them all with a single fused
+``F*(2k+1)``-point query per DFO step, and selects by final sketch-loss.
+``restarts=1`` is the single-iterate fit, bit-for-bit. The margin loss rides
+the hoisted-weight query path (``ops.query_theta_with_weights`` on the kernel
+engine), so no per-step weight-layout transpose appears in the scanned step.
+
+PRNG discipline: the fit key splits into ``k_hash`` (hash draws) and a rest
+key that splits again into ``k_init`` (theta0 noise) and ``k_dfo`` (DFO step
+streams) — the init draw and the sphere-direction streams never share a key
+(pre-PR-3 they did, correlating the starting point with step-1 directions).
 """
 
 from __future__ import annotations
@@ -15,7 +28,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, lsh, sketch as sketch_lib
+from repro.core import dfo, fleet, lsh, sketch as sketch_lib
 
 Array = jax.Array
 
@@ -27,6 +40,16 @@ class StormClassifierConfig:
     batch: int = 512
     norm_slack: float = 1.05
     count_dtype: str = "int32"
+    engine: str = "auto"          # insert/query path: scan | kernel | auto
+    init_scale: float = 0.01      # theta0 noise radius (breaks sign symmetry)
+    restarts: int = 1             # F — fleet size (one fused query serves all)
+    restart_select: str = "best"  # best | average (basin average, DESIGN.md §8)
+    restart_basin_tol: float = 0.05
+    restart_sigma_spread: float = 2.0
+    restart_lr_spread: float = 2.0
+    restart_init_scale: float = 0.3
+    refine_steps: int = 0         # optional quadratic polish passes (ref [13])
+    refine_radius: float = 0.3
     dfo: dfo.DFOConfig = dataclasses.field(
         default_factory=lambda: dfo.DFOConfig(
             steps=300, num_queries=8, sigma=0.5, learning_rate=1.0, decay=0.995
@@ -39,6 +62,7 @@ class FittedClassifier(NamedTuple):
     sketch: sketch_lib.Sketch
     params: lsh.LSHParams
     losses: Array
+    fleet_losses: Optional[Array] = None  # (F,) final sketch-loss per member
 
     def decision(self, x: Array) -> Array:
         return x @ self.theta
@@ -48,6 +72,20 @@ class FittedClassifier(NamedTuple):
 
     def accuracy(self, x: Array, y: Array) -> Array:
         return jnp.mean((self.predict(x) == y).astype(jnp.float32))
+
+
+def make_margin_loss_fn(
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    planes: int,
+    engine: str = "auto",
+):
+    """Batched Thm-3 margin-loss closure: ``2^p`` times the single-sided
+    RACE estimate, on the session-hoisted weight path (``fleet.make_loss_fn``
+    with ``paired=False`` — the ``(R, p, d) -> (p, d, R)`` transpose runs
+    once per fit, never inside the scanned DFO step)."""
+    return fleet.make_loss_fn(sk, params, paired=False, scale=2.0 ** planes,
+                              engine=engine)
 
 
 def fit(
@@ -61,10 +99,21 @@ def fit(
     Args:
       x: ``(n, d)`` features.
       y: ``(n,)`` labels in ``{-1, +1}``.
+      config: hyperparameters. ``config.restarts=F`` trains an F-member fleet
+        against the one sketch — every DFO step is a single fused
+        ``F*(2k+1)``-point query — and selects by final sketch-loss. No zero
+        guard rides in the selection: the decision rule is scale-free, so
+        ``theta = 0`` is meaningless rather than a safe fallback.
     """
     config = config or StormClassifierConfig()
-    k_hash, k_dfo = jax.random.split(key)
+    fleet.validate_select(config.restart_select)
+    k_hash, k_rest = jax.random.split(key)
+    # Distinct keys for the init draw and the DFO step streams (bugfix: the
+    # pre-PR-3 driver reused one key for both, so the starting point and the
+    # step-1 sphere directions were drawn from the same PRNG state).
+    k_init, k_dfo = jax.random.split(k_rest)
     d = x.shape[-1]
+    f = max(1, config.restarts)
 
     z = -y[:, None] * x                                  # Thm 3 premultiplication
     z_scaled, _ = lsh.scale_to_unit_ball(z, config.norm_slack)
@@ -73,18 +122,27 @@ def fit(
     params = lsh.init_srp(k_hash, config.rows, config.planes, d + 2)
     sk = sketch_lib.sketch_dataset(
         params, z_aug, batch=config.batch, paired=False,
-        dtype=jnp.dtype(config.count_dtype),
+        dtype=jnp.dtype(config.count_dtype), engine=config.engine,
     )
 
-    scale = 2.0 ** config.planes
+    loss_fn = make_margin_loss_fn(sk, params, config.planes,
+                                  engine=config.engine)
 
-    def loss_fn(thetas: Array) -> Array:  # (q, d) -> (q,)
-        q_aug = lsh.augment_query(lsh.normalize_query(thetas))
-        codes = lsh.srp_codes(params, q_aug)
-        return scale * sketch_lib.query(sk, codes, paired=False)
-
-    theta0 = jax.random.normal(k_dfo, (d,)) * 0.01
-    result = dfo.minimize(jax.jit(loss_fn), theta0, k_dfo, config.dfo)
+    theta0 = config.init_scale * jax.random.normal(k_init, (d,))
+    member_keys, inits, sigmas, lrs = fleet.seed_fleet(
+        k_dfo, f, d, config.dfo, fleet.config_from_restarts(config),
+        theta0=theta0,
+    )
+    result = fleet.run_fleet(
+        loss_fn, inits, member_keys, config.dfo,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
+    )
+    theta_tilde, trace, fleet_vals = fleet.select_theta(
+        loss_fn, result.theta, result.losses,
+        select=config.restart_select, basin_tol=config.restart_basin_tol,
+    )
     return FittedClassifier(
-        theta=result.theta, sketch=sk, params=params, losses=result.losses
+        theta=theta_tilde, sketch=sk, params=params, losses=trace,
+        fleet_losses=fleet_vals,
     )

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import dfo, lsh, sketch as sketch_lib
+from repro.core import dfo, fleet, lsh, sketch as sketch_lib
 
 Array = jax.Array
 
@@ -135,23 +135,22 @@ def fleet_fit(
     Returns:
       ``FleetDFOResult`` with ``(F, dim)`` thetas and ``(F, steps)`` traces.
     """
-    from repro.core import regression  # deferred: regression imports core.dfo
-
     f = theta0.shape[0]
     proj = dfo.pin_last_coordinate(-1.0) if project_last else None
     sig = dfo._fleet_param(sigma, config.sigma, f)
     lr = dfo._fleet_param(learning_rate, config.learning_rate, f)
 
     def local(counts, n, projections, th, ks, sg, lr_):
-        loss_fn = regression.make_loss_fn(
+        loss_fn = fleet.make_loss_fn(
             sketch_lib.Sketch(counts=counts, n=n),
             lsh.LSHParams(projections=projections),
+            paired=True,
             l2=l2,
             engine=engine,
         )
         # Shared optimize-then-refine loop: fleet_fit members advance exactly
-        # like fit() restarts (same refine-key/radius schedule).
-        res = regression.run_fleet(
+        # like fit() / fit_probe() restarts (same refine-key/radius schedule).
+        res = fleet.run_fleet(
             loss_fn, th, ks, config, project=proj, sigma=sg,
             learning_rate=lr_, refine_steps=refine_steps,
             refine_radius=refine_radius,

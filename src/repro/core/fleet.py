@@ -1,0 +1,283 @@
+"""Shared fleet machinery for every STORM driver (DESIGN.md §8.4).
+
+One fleet loop, one refine-key convention, one selection path. The three
+sketch-training drivers — ``regression.fit``, ``classification.fit``,
+``probes.fit_probe`` — all train ``restarts=F`` optimizers against ONE frozen
+sketch by delegating here:
+
+* :func:`make_loss_fn` — the batched sketch-loss closure with session-hoisted
+  kernel weights (the ``(R, p, d) -> (p, d, R)`` transpose runs once per fit,
+  never inside the scanned DFO step). Paired (PRP regression / probes) and
+  single-sided (classification margin) sessions share the same builder.
+* :func:`seed_fleet` — the restart-diversity schedule: member 0 is the
+  driver's deterministic baseline (``restarts=1`` reproduces the single fit
+  bit-for-bit); members ``i >= 1`` draw random-ball inits and walk geometric
+  σ/lr ladders.
+* :func:`run_fleet` — optimize-then-refine, the single owner of the
+  refine-key convention (``fold_in(member_key, pass+1)``).
+* :func:`select_theta` — fused final selection (all members + an optional
+  zero-guard in one query), with the basin-average mode.
+
+Keeping these in one module is what stops the drivers from growing three
+hand-rolled fleet variants that drift apart (the pre-PR-3 state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfo, lsh, sketch as sketch_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Restart-diversity and selection knobs shared by all drivers.
+
+    The fleet *size* is not here — each driver exposes its own ``restarts``
+    so ``FleetConfig()`` defaults never change a single-fit call's meaning.
+    """
+
+    select: str = "best"          # best | average (basin average, §8.2)
+    basin_tol: float = 0.05       # average: keep members within (1+tol)·best
+    sigma_spread: float = 2.0     # geometric σ ladder across members
+    lr_spread: float = 2.0        # geometric lr ladder (reverse-paired)
+    init_scale: float = 0.3       # random-ball init radius, members >= 1
+
+
+def config_from_restarts(config) -> FleetConfig:
+    """Adapt a driver config's flat ``restart_*`` fields to a FleetConfig.
+
+    Duck-typed over the field names every driver config shares
+    (``restart_select``, ``restart_basin_tol``, ``restart_sigma_spread``,
+    ``restart_lr_spread``, ``restart_init_scale``) — one adapter, so a new
+    fleet knob lands in every driver or none.
+    """
+    return FleetConfig(
+        select=config.restart_select,
+        basin_tol=config.restart_basin_tol,
+        sigma_spread=config.restart_sigma_spread,
+        lr_spread=config.restart_lr_spread,
+        init_scale=config.restart_init_scale,
+    )
+
+
+def validate_select(select: str) -> None:
+    """Fail fast on a selection-mode typo, before minutes of training."""
+    if select not in ("best", "average"):
+        raise ValueError(f"unknown restart_select {select!r}; "
+                         "use best | average")
+
+
+def make_loss_fn(
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    paired: bool = True,
+    scale: float = 1.0,
+    l2: float = 0.0,
+    engine: str = "auto",
+    d: Optional[int] = None,
+) -> Callable[[Array], Array]:
+    """Batched sketch-loss closure with session-hoisted kernel weights.
+
+    The kernel path's ``(R, p, d) -> (p, d, R)`` weight transpose
+    (``ops.from_lsh_params``) runs ONCE here, outside every query; the
+    returned closure threads the converted array through each call, so the
+    scanned DFO step contains no per-step transpose of the projection tensor
+    (jaxpr-asserted in tests). The kernel's m-tiled query grid accepts any
+    batch size, so DFO sphere blocks, fleet blocks of ``F*(2k+1)`` points,
+    and O(d^2) quadratic-refine batches all stay on the fused path.
+
+    Args:
+      sk: the (frozen) sketch to query.
+      params: hash parameters.
+      paired: PRP sketch (regression/probes) vs single-sided (classification
+        margin loss) — controls the ``2n`` vs ``n`` estimator denominator.
+      scale: constant multiplier on the estimate (classification's Thm-3
+        ``2**p`` factor); 1.0 leaves the estimate untouched.
+      l2: optional ridge on the first ``d`` coordinates (paper §6).
+      engine: ``scan | kernel | auto`` query path (DESIGN.md §3.4).
+      d: feature dimension for the ridge term; defaults to ``params.dim - 3``
+        (params hash the augmented ``[x, y]`` space of ``d + 1 + 2`` dims).
+
+    Returns:
+      A jitted ``(q, dim) -> (q,)`` loss callable.
+    """
+    d = params.dim - 3 if d is None else d
+    use_kernel = sketch_lib.resolve_engine(engine) == "kernel"
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops  # deferred: ops imports core
+
+        w = kernel_ops.from_lsh_params(params)  # hoisted: once per session
+
+        def estimate(thetas: Array) -> Array:
+            return kernel_ops.query_theta_with_weights(sk, w, thetas,
+                                                       paired=paired)
+    else:
+
+        def estimate(thetas: Array) -> Array:
+            return sketch_lib.query_theta(sk, params, thetas, paired=paired)
+
+    def loss_fn(thetas: Array) -> Array:  # (q, dim) -> (q,)
+        est = estimate(thetas)
+        if scale != 1.0:
+            est = scale * est
+        if l2 > 0.0:
+            est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
+        return est
+
+    return jax.jit(loss_fn)
+
+
+def seed_fleet(
+    key: Array,
+    f: int,
+    dim: int,
+    base: dfo.DFOConfig,
+    config: Optional[FleetConfig] = None,
+    theta0: Optional[Array] = None,
+) -> Tuple[Array, Array, Array, Array]:
+    """Restart-diversity schedule (DESIGN.md §8.2), shared by all drivers.
+
+    Member 0 is the driver's deterministic baseline — ``theta0`` (the
+    driver's single-fit init; zeros when omitted) with the configured σ/lr
+    and ``key`` itself — so ``restarts=1`` reproduces the single-iterate fit
+    bit-for-bit. Members ``i >= 1`` draw random-ball inits around ``theta0``
+    and walk geometric σ/lr ladders (reverse-paired so aggressive radii meet
+    conservative rates and vice versa), covering basins and noise regimes the
+    baseline member misses.
+
+    Args:
+      key: the driver's DFO key (member 0 uses it verbatim).
+      f: fleet size F.
+      dim: full iterate dimension (regression/probes: ``d + 1``;
+        classification: ``d``).
+      base: the shared DFO config (σ/lr for member 0).
+      config: diversity knobs (spreads, init radius).
+      theta0: ``(dim,)`` baseline init; defaults to zeros.
+
+    Returns:
+      ``(keys (F,), theta0 (F, dim), sigmas (F,), lrs (F,))``.
+    """
+    config = config or FleetConfig()
+    base_theta = (jnp.zeros((dim,), jnp.float32) if theta0 is None
+                  else theta0.astype(jnp.float32))
+    keys = [key]
+    inits = [base_theta]
+    sigmas = [jnp.float32(base.sigma)]
+    lrs = [jnp.float32(base.learning_rate)]
+    for i in range(1, f):
+        # Offset past the refine-pass fold_in indices (1..refine_steps).
+        ki = jax.random.fold_in(key, 7919 + i)
+        keys.append(ki)
+        u = -1.0 + 2.0 * (i - 1) / max(1, f - 2) if f > 2 else 0.0
+        sigmas.append(jnp.float32(base.sigma * config.sigma_spread ** u))
+        lrs.append(jnp.float32(base.learning_rate
+                               * config.lr_spread ** (-u)))
+        inits.append(
+            base_theta
+            + config.init_scale
+            * jax.random.normal(jax.random.fold_in(ki, 0), (dim,), jnp.float32)
+        )
+    return (jnp.stack(keys), jnp.stack(inits), jnp.stack(sigmas),
+            jnp.stack(lrs))
+
+
+def run_fleet(
+    loss_fn: Callable[[Array], Array],
+    theta0: Array,
+    keys: Array,
+    config: dfo.DFOConfig,
+    project: Optional[Callable[[Array], Array]] = None,
+    sigma: Optional[Array] = None,
+    learning_rate: Optional[Array] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+) -> dfo.FleetDFOResult:
+    """Optimize-then-refine fleet loop shared by every driver and
+    ``distributed.fleet_fit`` — the single owner of the refine-key convention
+    (``fold_in(member_key, pass+1)``) and the radius-halving schedule, so the
+    sharded and restart paths cannot drift apart.
+
+    Returns the refined ``(F, dim)`` thetas with the minimize-phase loss
+    traces.
+    """
+    res = dfo.minimize_fleet(loss_fn, theta0, keys, config, project=project,
+                             sigma=sigma, learning_rate=learning_rate)
+    thetas = res.theta
+    for i in range(refine_steps):
+        refine_keys = jax.vmap(lambda mk: jax.random.fold_in(mk, i + 1))(keys)
+        thetas = dfo.quadratic_refine_fleet(
+            loss_fn, thetas, refine_keys,
+            radius=refine_radius / (2.0 ** i), project=project,
+        )
+    return dfo.FleetDFOResult(theta=thetas, losses=res.losses)
+
+
+def select_theta(
+    loss_fn: Callable[[Array], Array],
+    thetas: Array,
+    traces: Array,
+    select: str = "best",
+    basin_tol: float = 0.05,
+    guard: Optional[Array] = None,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> Tuple[Array, Array, Array]:
+    """Fused final selection: all members (+ optional guard) in ONE query.
+
+    Args:
+      loss_fn: the fused sketch loss.
+      thetas: ``(F, dim)`` final fleet iterates.
+      traces: ``(F, steps)`` per-member loss traces.
+      select: ``best`` (arg-min) or ``average`` (basin average: mean the
+        members within ``(1 + basin_tol)``·best — averaging across one basin
+        cuts frozen-hash noise, while the arg-min gate keeps stray basins
+        out; the best member rides in the runoff so an average straddling
+        two basins can never displace a strictly better single iterate).
+      guard: optional ``(dim,)`` fallback candidate (regression/probes use
+        the projected zero — keep theta=0 if frozen-hash noise drove every
+        member to a worse-than-trivial model). ``None`` for scale-free
+        drivers (classification) where theta=0 is meaningless.
+      project: projection for the basin average (kept on the constraint set).
+
+    Returns:
+      ``(theta_tilde, trace, fleet_vals)`` — the selected iterate, the loss
+      trace of the member the selection measured against, and the ``(F,)``
+      final sketch-loss per member.
+    """
+    f = thetas.shape[0]
+    proj = project if project is not None else (lambda t: t)
+    cand = thetas if guard is None else jnp.concatenate(
+        [thetas, guard[None, :]], axis=0
+    )
+    vals = loss_fn(cand)
+    fleet_vals = vals[:f]
+    best_member = jnp.argmin(fleet_vals)
+    if f > 1 and select == "average":
+        best = jnp.min(fleet_vals)
+        keep = (fleet_vals <= best * (1.0 + basin_tol) + 1e-12)
+        avg = proj(
+            jnp.sum(jnp.where(keep[:, None], thetas, 0.0), axis=0)
+            / jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+        )
+        runoff_rows = [avg, thetas[best_member]]
+        if guard is not None:
+            runoff_rows.append(cand[-1])
+        runoff = jnp.stack(runoff_rows)
+        runoff_vals = loss_fn(runoff)
+        # Break exact ties toward the average (index 0): jnp.argmin already
+        # prefers the lowest index, so the noise-reduced mean wins a draw.
+        theta_tilde = runoff[jnp.argmin(runoff_vals)]
+        trace = traces[best_member]
+    else:
+        idx = jnp.argmin(vals)
+        theta_tilde = cand[idx]
+        # Trace follows the selected member; if the guard won, report the
+        # best member's trace (the run the selection measured it against).
+        trace = traces[jnp.where(idx < f, idx, best_member)]
+    return theta_tilde, trace, fleet_vals

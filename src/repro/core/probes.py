@@ -4,7 +4,16 @@ This is the paper's regression running at `d_model` scale inside the LM
 framework: pooled hidden states from a frozen model are streamed into a PRP
 sketch together with scalar targets, the states are discarded, and a linear
 value-head is recovered from the counters alone. Each data-parallel shard
-sketches locally; the merge is the usual integer psum.
+sketches locally; the merge is the usual integer psum for the counters plus
+an n-weighted pool of the normalization moments (heterogeneous shards see
+different feature statistics — first-shard stats would bias the recovered
+head, DESIGN.md §8.4).
+
+Training is fleet-native: ``fit_probe(restarts=F)`` drives F diversified
+restarts through the shared ``core.fleet`` loop — one fused ``F*(2k+1)``-point
+query per DFO step at ``d_model + 1`` dims, exactly where the large-m query
+economics bite hardest — and ``fit_probe_sharded`` shards the fleet axis over
+a mesh against the replicated merged sketch (``distributed.fleet_fit``).
 
 At d_model = 4096 the hashing matmul is the hot loop — exactly what the
 Pallas kernels accelerate on TPU (`kernels/ops.build_sketch`).
@@ -13,12 +22,12 @@ Pallas kernels accelerate on TPU (`kernels/ops.build_sketch`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, lsh, regression, sketch as sketch_lib
+from repro.core import dfo, fleet, lsh, sketch as sketch_lib
 from repro.models import model
 from repro.models.config import ModelConfig
 
@@ -31,9 +40,8 @@ class ProbeConfig:
     planes: int = 4
     pool: str = "mean"            # mean | last
     batch: int = 256
-    regressor: regression.StormRegressorConfig = dataclasses.field(
-        default_factory=lambda: regression.StormRegressorConfig(rows=2048)
-    )
+    norm_slack: float = 1.05      # unit-ball scaling slack (quantile-based)
+    engine: str = "auto"          # insert path: scan | kernel | auto
 
 
 class ProbeState(NamedTuple):
@@ -46,6 +54,13 @@ class ProbeState(NamedTuple):
     y_mean: Array
     y_scale: Array
     scale: Array                  # unit-ball scale factor
+    count: Optional[Array] = None  # shard-local n (moment-merge weights)
+
+    @property
+    def n(self) -> Array:
+        """Shard-local example count; falls back to the sketch's insert
+        counter for states built before ``count`` existed."""
+        return self.count if self.count is not None else self.sketch.n
 
 
 def pool_hidden(hidden: Array, pool: str) -> Array:
@@ -65,6 +80,9 @@ def extract_features(
     return pool_hidden(hidden.astype(jnp.float32), pool)
 
 
+_MOMENT_EPS = 1e-8  # std guard, shared with the merge's strip/re-apply
+
+
 def sketch_features(
     key: Array,
     feats: Array,          # (N, d_model) pooled features
@@ -73,31 +91,83 @@ def sketch_features(
 ) -> ProbeState:
     """One-pass PRP sketch of (features, target) pairs; data discardable after."""
     config = config or ProbeConfig()
-    xm, xs = feats.mean(0), feats.std(0) + 1e-8
-    ym, ys = targets.mean(), targets.std() + 1e-8
+    xm, xs = feats.mean(0), feats.std(0) + _MOMENT_EPS
+    ym, ys = targets.mean(), targets.std() + _MOMENT_EPS
     z = jnp.concatenate(
         [(feats - xm) / xs, ((targets - ym) / ys)[:, None]], axis=-1
     )
-    zs, c = lsh.scale_to_unit_ball(z)
+    zs, c = lsh.scale_to_unit_ball(z, config.norm_slack)
     params = lsh.init_srp(key, config.rows, config.planes, z.shape[1] + 2)
-    sk = sketch_lib.sketch_dataset(params, zs, batch=config.batch, paired=True)
+    sk = sketch_lib.sketch_dataset(params, zs, batch=config.batch, paired=True,
+                                   engine=config.engine)
     return ProbeState(sketch=sk, params=params, x_mean=xm, x_scale=xs,
-                      y_mean=ym, y_scale=ys, scale=c)
+                      y_mean=ym, y_scale=ys, scale=c,
+                      count=jnp.asarray(feats.shape[0], jnp.int32))
 
 
 def merge_probe_states(states) -> ProbeState:
-    """Merge shard-local probe sketches (statistics from the first shard;
-    production code would psum moments too — counters merge exactly)."""
+    """Merge shard-local probe sketches: counters add exactly, moments pool
+    n-weighted.
+
+    Means pool exactly (``sum_i n_i mean_i / N``); stds pool through the
+    exact population-variance law ``var = sum_i w_i (var_i + (mean_i -
+    mean)^2)`` (the ``+eps`` guard is stripped and re-applied). The unit-ball
+    ``scale`` is a norm *quantile*, which has no exact merge from shard
+    summaries — the n-weighted mean is the standard approximation and is
+    exact for homogeneous shards. Pre-PR-3 this function kept the FIRST
+    shard's moments, which biased the recovered head's un-standardization
+    whenever shards saw different feature distributions.
+
+    Scope of the fix: the pooled moments make the head's
+    un-standardization (and any later re-sketch) use the GLOBAL statistics.
+    The merged *counters* were still built under each shard's local
+    standardization, so on heterogeneous shards the counter union remains an
+    approximation of a single globally-standardized sketch — exact only when
+    shards share stats (the production pattern: broadcast global moments,
+    then sketch, as ``tests/test_probes.py::test_shard_merge_equals_union``
+    does).
+    """
     base = states[0]
     merged = base.sketch
     for s in states[1:]:
         merged = sketch_lib.merge(merged, s.sketch)
-    return base._replace(sketch=merged)
+
+    ns = jnp.stack([jnp.asarray(s.n, jnp.float32) for s in states])  # (S,)
+    w = ns / jnp.sum(ns)
+
+    def pool_mean(vals):
+        return jnp.einsum("s,s...->...", w, jnp.stack(vals))
+
+    def pool_std(means, scales, pooled_mean):
+        # Centered pooling law: var = sum_i w_i (var_i + (mean_i - mean)^2)
+        # — algebraically equal to the raw-moment form but without the
+        # large-mean cancellation.
+        var = jnp.stack([(sc - _MOMENT_EPS) ** 2 + (m - pooled_mean) ** 2
+                         for m, sc in zip(means, scales)])
+        pooled_var = jnp.einsum("s,s...->...", w, var)
+        return jnp.sqrt(jnp.clip(pooled_var, 0.0, None)) + _MOMENT_EPS
+
+    x_mean = pool_mean([s.x_mean for s in states])
+    y_mean = pool_mean([s.y_mean for s in states])
+    return ProbeState(
+        sketch=merged,
+        params=base.params,
+        x_mean=x_mean,
+        x_scale=pool_std([s.x_mean for s in states],
+                         [s.x_scale for s in states], x_mean),
+        y_mean=y_mean,
+        y_scale=pool_std([s.y_mean for s in states],
+                         [s.y_scale for s in states], y_mean),
+        scale=pool_mean([s.scale for s in states]),
+        count=jnp.sum(ns).astype(jnp.int32),
+    )
 
 
 class FittedProbe(NamedTuple):
     theta: Array
     intercept: Array
+    losses: Optional[Array] = None        # DFO trace of the selected member
+    fleet_losses: Optional[Array] = None  # (F,) final sketch-loss per member
 
     def predict(self, feats: Array) -> Array:
         return feats @ self.theta + self.intercept
@@ -106,10 +176,44 @@ class FittedProbe(NamedTuple):
         return jnp.mean((self.predict(feats) - targets) ** 2)
 
 
+_PROBE_DFO = dfo.DFOConfig(
+    steps=300, num_queries=8, sigma=0.5, sigma_decay=0.995,
+    learning_rate=2.0, decay=0.995, average_tail=0.5,
+)
+
+
+def _finish_probe(
+    state: ProbeState, d_model: int, loss_fn, result: dfo.FleetDFOResult,
+    fleet_config: fleet.FleetConfig, proj,
+) -> FittedProbe:
+    """Shared selection + un-standardization tail of both fit entry points.
+
+    Selection runs all members plus the zero guard through ONE fused query
+    (sketch-validated fallback to theta=0 — keep the mean predictor if
+    frozen-hash noise drove every member below it), then maps the winner
+    back to the raw feature space.
+    """
+    theta_tilde, trace, fleet_vals = fleet.select_theta(
+        loss_fn, result.theta, result.losses,
+        select=fleet_config.select, basin_tol=fleet_config.basin_tol,
+        guard=proj(jnp.zeros((d_model + 1,), jnp.float32)), project=proj,
+    )
+    theta_std = theta_tilde[:d_model]
+    theta = state.y_scale * theta_std / state.x_scale
+    intercept = state.y_mean - jnp.dot(state.x_mean, theta)
+    return FittedProbe(theta=theta, intercept=intercept, losses=trace,
+                       fleet_losses=fleet_vals)
+
+
 def fit_probe(
     key: Array, state: ProbeState, d_model: int,
     dfo_config: Optional[dfo.DFOConfig] = None,
     l2: float = 3e-2,
+    restarts: int = 1,
+    fleet_config: Optional[fleet.FleetConfig] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+    engine: str = "auto",
 ) -> FittedProbe:
     """Recover the linear value-head from counters only (Algorithm 2).
 
@@ -119,27 +223,72 @@ def fit_probe(
     mse minimum — so the high-d probe needs the ridge term to recover a
     usable readout (measured: without it the probe loses to the mean
     predictor at d_model = 64, R = 4096).
+
+    ``restarts=F`` trains an F-member diversity fleet through the shared
+    ``core.fleet`` loop — one fused ``F*(2k+1)``-point query per DFO step at
+    ``d_model + 1`` dims — and selects by final sketch-loss; ``restarts=1``
+    is the single-iterate fit bit-for-bit. ``refine_steps`` adds
+    ``quadratic_refine_fleet`` polish passes (O(d^2) queries each — cheap at
+    small probe dims, measurable at d_model scale).
     """
-    cfg_d = dfo_config or dfo.DFOConfig(
-        steps=300, num_queries=8, sigma=0.5, sigma_decay=0.995,
-        learning_rate=2.0, decay=0.995, average_tail=0.5,
-    )
+    cfg_d = dfo_config or _PROBE_DFO
+    f = max(1, restarts)
+    fc = fleet_config or fleet.FleetConfig()
+    fleet.validate_select(fc.select)
 
-    def loss_fn(thetas: Array) -> Array:
-        est = sketch_lib.query_theta(state.sketch, state.params, thetas,
-                                     paired=True)
-        if l2 > 0.0:
-            est = est + l2 * jnp.sum(thetas[..., :d_model] ** 2, axis=-1)
-        return est
-
+    loss_fn = fleet.make_loss_fn(state.sketch, state.params, paired=True,
+                                 l2=l2, engine=engine, d=d_model)
     proj = dfo.pin_last_coordinate(-1.0)
-    jloss = jax.jit(loss_fn)
-    result = dfo.minimize(jloss, jnp.zeros((d_model + 1,)), key, cfg_d,
-                          project=proj)
-    # sketch-validated fallback to theta=0 (see regression.fit)
-    both = jnp.stack([result.theta, proj(jnp.zeros((d_model + 1,)))])
-    theta_tilde = both[jnp.argmin(jloss(both))]
-    theta_std = theta_tilde[:d_model]
-    theta = state.y_scale * theta_std / state.x_scale
-    intercept = state.y_mean - jnp.dot(state.x_mean, theta)
-    return FittedProbe(theta=theta, intercept=intercept)
+    member_keys, theta0, sigmas, lrs = fleet.seed_fleet(
+        key, f, d_model + 1, cfg_d, fc
+    )
+    result = fleet.run_fleet(
+        loss_fn, theta0, member_keys, cfg_d, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=refine_steps, refine_radius=refine_radius,
+    )
+    return _finish_probe(state, d_model, loss_fn, result, fc, proj)
+
+
+def fit_probe_sharded(
+    key: Array, state: ProbeState, d_model: int,
+    mesh=None,
+    axis: str = "fleet",
+    restarts: int = 8,
+    dfo_config: Optional[dfo.DFOConfig] = None,
+    l2: float = 3e-2,
+    fleet_config: Optional[fleet.FleetConfig] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+    engine: str = "auto",
+) -> FittedProbe:
+    """``fit_probe`` with the restart fleet sharded over a device mesh.
+
+    The ``distributed.fleet_fit`` topology (DESIGN.md §8.3): the merged probe
+    sketch REPLICATES (read-only counters) and the fleet axis shards over
+    ``axis`` — zero per-step communication; each device advances its restart
+    shard on local fused queries. ``mesh=None`` runs the identical program
+    unsharded. Seeding, refine keys, and selection are the same shared
+    ``core.fleet`` conventions as :func:`fit_probe`, so the sharded and local
+    paths cannot drift apart.
+    """
+    from repro.core import distributed  # deferred: distributed imports core
+
+    cfg_d = dfo_config or _PROBE_DFO
+    f = max(1, restarts)
+    fc = fleet_config or fleet.FleetConfig()
+    fleet.validate_select(fc.select)
+
+    member_keys, theta0, sigmas, lrs = fleet.seed_fleet(
+        key, f, d_model + 1, cfg_d, fc
+    )
+    result = distributed.fleet_fit(
+        state.sketch, state.params, theta0, member_keys, cfg_d,
+        mesh=mesh, axis=axis, sigma=sigmas, learning_rate=lrs,
+        refine_steps=refine_steps, refine_radius=refine_radius,
+        l2=l2, engine=engine,
+    )
+    loss_fn = fleet.make_loss_fn(state.sketch, state.params, paired=True,
+                                 l2=l2, engine=engine, d=d_model)
+    proj = dfo.pin_last_coordinate(-1.0)
+    return _finish_probe(state, d_model, loss_fn, result, fc, proj)

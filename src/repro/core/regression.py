@@ -22,7 +22,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, lsh, sketch as sketch_lib
+from repro.core import dfo, fleet, lsh, sketch as sketch_lib
 
 Array = jax.Array
 
@@ -96,115 +96,27 @@ def make_loss_fn(
     engine: str = "auto",
     d: Optional[int] = None,
 ) -> Callable[[Array], Array]:
-    """Batched sketch-loss closure with session-hoisted kernel weights.
-
-    The kernel path's ``(R, p, d) -> (p, d, R)`` weight transpose
-    (``ops.from_lsh_params``) runs ONCE here, outside every query; the
-    returned closure threads the converted array through each call, so the
-    scanned DFO step contains no per-step transpose of the projection tensor
-    (jaxpr-asserted in tests). The kernel's m-tiled query grid accepts any
-    batch size, so DFO sphere blocks, fleet blocks of ``F*(2k+1)`` points,
-    and O(d^2) quadratic-refine batches all stay on the fused path.
-
-    Args:
-      sk: the (frozen) sketch to query.
-      params: hash parameters.
-      l2: optional ridge on the first ``d`` coordinates (paper §6).
-      engine: ``scan | kernel | auto`` query path (DESIGN.md §3.4).
-      d: feature dimension for the ridge term; defaults to ``params.dim - 3``
-        (params hash the augmented ``[x, y]`` space of ``d + 1 + 2`` dims).
-
-    Returns:
-      A jitted ``(q, dim) -> (q,)`` loss callable.
-    """
-    d = params.dim - 3 if d is None else d
-    use_kernel = sketch_lib.resolve_engine(engine) == "kernel"
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops  # deferred: ops imports core
-
-        w = kernel_ops.from_lsh_params(params)  # hoisted: once per session
-
-        def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
-            est = kernel_ops.query_theta_with_weights(sk, w, thetas, paired=True)
-            if l2 > 0.0:
-                est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
-            return est
-    else:
-
-        def loss_fn(thetas: Array) -> Array:  # (q, d+1) -> (q,)
-            est = sketch_lib.query_theta(sk, params, thetas, paired=True)
-            if l2 > 0.0:
-                est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
-            return est
-
-    return jax.jit(loss_fn)
+    """Regression's PRP sketch-loss closure — ``fleet.make_loss_fn`` with
+    ``paired=True`` (see that docstring for the hoisted-weight contract)."""
+    return fleet.make_loss_fn(sk, params, paired=True, l2=l2, engine=engine,
+                              d=d)
 
 
-def run_fleet(
-    loss_fn: Callable[[Array], Array],
-    theta0: Array,
-    keys: Array,
-    config: dfo.DFOConfig,
-    project: Optional[Callable[[Array], Array]] = None,
-    sigma: Optional[Array] = None,
-    learning_rate: Optional[Array] = None,
-    refine_steps: int = 0,
-    refine_radius: float = 0.3,
-) -> dfo.FleetDFOResult:
-    """Optimize-then-refine fleet loop shared by ``fit`` and
-    ``distributed.fleet_fit`` — the single owner of the refine-key convention
-    (``fold_in(member_key, pass+1)``) and the radius-halving schedule, so the
-    sharded and restart paths cannot drift apart.
-
-    Returns the refined ``(F, dim)`` thetas with the minimize-phase loss
-    traces.
-    """
-    res = dfo.minimize_fleet(loss_fn, theta0, keys, config, project=project,
-                             sigma=sigma, learning_rate=learning_rate)
-    thetas = res.theta
-    for i in range(refine_steps):
-        refine_keys = jax.vmap(lambda mk: jax.random.fold_in(mk, i + 1))(keys)
-        thetas = dfo.quadratic_refine_fleet(
-            loss_fn, thetas, refine_keys,
-            radius=refine_radius / (2.0 ** i), project=project,
-        )
-    return dfo.FleetDFOResult(theta=thetas, losses=res.losses)
+# Canonical home of the shared fleet loop: repro.core.fleet (DESIGN.md §8.4).
+run_fleet = fleet.run_fleet
 
 
 def seed_fleet(
     key: Array, f: int, d: int, config: StormRegressorConfig
 ):
-    """Restart-diversity schedule (DESIGN.md §8).
-
-    Member 0 is the paper's deterministic baseline — zero init with the
-    configured σ/lr and ``key`` itself — so ``restarts=1`` reproduces the
-    single-iterate fit bit-for-bit. Members ``i >= 1`` draw random-ball inits
-    and walk geometric σ/lr ladders (reverse-paired so aggressive radii meet
-    conservative rates and vice versa), covering basins and noise regimes the
-    baseline member misses.
+    """Regression's restart-diversity schedule — ``fleet.seed_fleet`` over
+    the ``(d + 1)``-dim homogeneous iterate with a zero baseline init.
 
     Returns:
       ``(keys (F,), theta0 (F, d+1), sigmas (F,), lrs (F,))``.
     """
-    base = config.dfo
-    keys = [key]
-    theta0 = [jnp.zeros((d + 1,), jnp.float32)]
-    sigmas = [jnp.float32(base.sigma)]
-    lrs = [jnp.float32(base.learning_rate)]
-    for i in range(1, f):
-        # Offset past the refine-pass fold_in indices (1..refine_steps).
-        ki = jax.random.fold_in(key, 7919 + i)
-        keys.append(ki)
-        u = -1.0 + 2.0 * (i - 1) / max(1, f - 2) if f > 2 else 0.0
-        sigmas.append(jnp.float32(base.sigma * config.restart_sigma_spread ** u))
-        lrs.append(jnp.float32(base.learning_rate
-                               * config.restart_lr_spread ** (-u)))
-        theta0.append(
-            config.restart_init_scale
-            * jax.random.normal(jax.random.fold_in(ki, 0), (d + 1,), jnp.float32)
-        )
-    return (jnp.stack(keys), jnp.stack(theta0), jnp.stack(sigmas),
-            jnp.stack(lrs))
+    return fleet.seed_fleet(key, f, d + 1, config.dfo,
+                            fleet.config_from_restarts(config))
 
 
 def fit(
@@ -228,9 +140,7 @@ def fit(
         standardization statistics and are never re-read.
     """
     config = config or StormRegressorConfig()
-    if config.restart_select not in ("best", "average"):
-        raise ValueError(f"unknown restart_select {config.restart_select!r}; "
-                         "use best | average")
+    fleet.validate_select(config.restart_select)
     k_hash, k_dfo = jax.random.split(key)
     d = x.shape[-1]
     f = max(1, config.restarts)
@@ -263,40 +173,14 @@ def fit(
         sigma=sigmas, learning_rate=lrs,
         refine_steps=config.refine_steps, refine_radius=config.refine_radius,
     )
-    thetas = result.theta  # (F, d+1)
     # Selection: all fleet members + the zero (predict-the-mean) guard go
     # through ONE final query. The guard keeps theta=0 if the frozen-hash
     # noise drove every member to a worse-than-trivial model.
-    cand = jnp.concatenate(
-        [thetas, proj(jnp.zeros((1, d + 1), jnp.float32))], axis=0
+    theta_tilde, trace, fleet_vals = fleet.select_theta(
+        loss_fn, result.theta, result.losses,
+        select=config.restart_select, basin_tol=config.restart_basin_tol,
+        guard=proj(jnp.zeros((d + 1,), jnp.float32)), project=proj,
     )
-    vals = loss_fn(cand)
-    fleet_vals = vals[:f]
-    best_member = jnp.argmin(fleet_vals)
-    if f > 1 and config.restart_select == "average":
-        # Basin average: mean the members whose final loss sits within
-        # (1 + tol) of the best — averaging across one basin cuts frozen-hash
-        # noise, while argmin-gating keeps stray basins out of the mean. The
-        # best member rides in the runoff so an average straddling two basins
-        # can never displace a strictly better single iterate.
-        best = jnp.min(fleet_vals)
-        keep = (fleet_vals <= best * (1.0 + config.restart_basin_tol) + 1e-12)
-        avg = proj(
-            jnp.sum(jnp.where(keep[:, None], thetas, 0.0), axis=0)
-            / jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
-        )
-        runoff = jnp.stack([avg, thetas[best_member], cand[-1]])
-        runoff_vals = loss_fn(runoff)
-        # Break exact ties toward the average (index 0): jnp.argmin already
-        # prefers the lowest index, so the noise-reduced mean wins a draw.
-        theta_tilde = runoff[jnp.argmin(runoff_vals)]
-        trace = result.losses[best_member]
-    else:
-        idx = jnp.argmin(vals)
-        theta_tilde = cand[idx]
-        # Trace follows the selected member; if the zero guard won, report
-        # the best member's trace (the run the selection measured it against).
-        trace = result.losses[jnp.where(idx < f, idx, best_member)]
     theta_std = theta_tilde[:d]
 
     # Un-standardize: y' = x' @ th  with x' = (x - xm)/xs, y' = (y - ym)/ys.

@@ -130,6 +130,10 @@ def query_theta_with_weights(
     scanned DFO steps, a serve loop) convert the layout ONCE and thread ``w``
     through their loss closure, so no ``(R, p, d) -> (p, d, R)`` transpose
     appears inside the per-step trace (asserted at jaxpr level in tests).
+    ``core.fleet.make_loss_fn`` is the canonical builder of such sessions —
+    PRP regression/probe losses with ``paired=True``, the single-sided
+    classification margin loss with ``paired=False`` (the ``2^p`` Thm-3
+    factor is applied by the caller on top of this estimate).
     """
     q = lsh.augment_query(lsh.normalize_query(theta_tilde))
     mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)

@@ -51,3 +51,51 @@ class TestFit:
         preds1 = fit.predict(x)
         scaled = fit._replace(theta=fit.theta * 13.0)
         assert jnp.array_equal(preds1, scaled.predict(x))
+
+
+class TestKeySplit:
+    """Bugfix regression: the init draw and the DFO step-key stream must use
+    DISTINCT keys. Pre-PR-3 ``fit`` drew ``theta0`` from the same ``k_dfo``
+    that seeded the sphere-direction stream, so the starting point and the
+    step-1 directions came from one PRNG state."""
+
+    def test_init_draw_uses_split_key_not_step_key(self, blobs):
+        """losses[0] is the loss at theta0: it must match the draw from the
+        split-off init key and NOT the pre-fix draw from the step key."""
+        import numpy as np
+        from repro.core import sketch as sketch_lib
+        from repro.core import lsh
+
+        x, y, _ = blobs
+        cfg = _fast_config()
+        key = jax.random.PRNGKey(11)
+        fit = classification.fit(key, x, y, cfg)
+
+        k_hash, k_rest = jax.random.split(key)
+        k_init, k_dfo = jax.random.split(k_rest)
+        loss = classification.make_margin_loss_fn(
+            fit.sketch, fit.params, cfg.planes, engine="scan"
+        )
+        d = x.shape[-1]
+        theta0_fixed = cfg.init_scale * jax.random.normal(k_init, (d,))
+        theta0_buggy = cfg.init_scale * jax.random.normal(k_rest, (d,))
+        np.testing.assert_array_equal(
+            np.asarray(fit.losses[0]), np.asarray(loss(theta0_fixed[None])[0])
+        )
+        assert float(fit.losses[0]) != float(loss(theta0_buggy[None])[0])
+
+    def test_init_and_step_keys_distinct(self):
+        """The init key and every step key in the member-0 stream are
+        pairwise distinct — init noise and sphere directions are independent
+        draws, not reuses of one PRNG state."""
+        import numpy as np
+
+        key = jax.random.PRNGKey(0)
+        _, k_rest = jax.random.split(key)
+        k_init, k_dfo = jax.random.split(k_rest)
+        steps = 8
+        step_keys = jax.random.split(k_dfo, steps)
+        all_keys = np.asarray(jnp.concatenate(
+            [k_init[None], k_dfo[None], step_keys], axis=0
+        ))
+        assert len({tuple(k) for k in all_keys}) == all_keys.shape[0]

@@ -73,3 +73,94 @@ class TestProbePipeline:
         merged = probes.merge_probe_states(halves)
         assert int(merged.sketch.n) == int(full.sketch.n)
         assert bool(jnp.array_equal(merged.sketch.counts, full.sketch.counts))
+        # Homogeneous shards (identical stats): the n-weighted pool is a
+        # no-op on the moments.
+        assert bool(jnp.allclose(merged.x_mean, full.x_mean))
+        assert bool(jnp.allclose(merged.x_scale, full.x_scale, rtol=1e-5))
+
+
+class TestHeterogeneousMerge:
+    """Bugfix regression: ``merge_probe_states`` must pool the normalization
+    moments n-weighted, not keep the first shard's (which silently biased
+    the recovered head whenever shards saw different distributions)."""
+
+    def _shards(self, d=5):
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        # Two deliberately different feature/target distributions, and
+        # different shard sizes so uniform averaging would also be wrong.
+        feats_a = 2.0 + 1.5 * jax.random.normal(k1, (96, d))
+        feats_b = -1.0 + 0.5 * jax.random.normal(k2, (32, d))
+        targets_a = feats_a @ jnp.ones((d,)) + jax.random.normal(k3, (96,))
+        targets_b = 5.0 + jax.random.normal(k4, (32,))
+        return (feats_a, targets_a), (feats_b, targets_b)
+
+    def test_moments_match_single_sketch_of_concatenation(self):
+        (fa, ta), (fb, tb) = self._shards()
+        cfg = probes.ProbeConfig(rows=128, batch=16)
+        key = jax.random.PRNGKey(5)
+        sa = probes.sketch_features(key, fa, ta, cfg)
+        sb = probes.sketch_features(key, fb, tb, cfg)
+        full = probes.sketch_features(key, jnp.concatenate([fa, fb]),
+                                      jnp.concatenate([ta, tb]), cfg)
+        merged = probes.merge_probe_states([sa, sb])
+
+        # Means and stds pool exactly (population-variance law).
+        assert bool(jnp.allclose(merged.x_mean, full.x_mean, atol=1e-5))
+        assert bool(jnp.allclose(merged.y_mean, full.y_mean, atol=1e-5))
+        assert bool(jnp.allclose(merged.x_scale, full.x_scale, rtol=1e-4))
+        assert bool(jnp.allclose(merged.y_scale, full.y_scale, rtol=1e-4))
+        # The unit-ball scale is a norm quantile — the n-weighted mean is an
+        # approximation; it must at least land near the global quantile.
+        assert bool(jnp.allclose(merged.scale, full.scale, rtol=0.3))
+        assert int(merged.count) == 96 + 32
+        # Counters still merge exactly.
+        assert int(merged.sketch.n) == int(full.sketch.n)
+
+    def test_first_shard_stats_would_be_wrong(self):
+        """The pre-fix behavior (keep shard 0's moments) is measurably
+        different on heterogeneous shards — the bias this fix removes."""
+        (fa, ta), (fb, tb) = self._shards()
+        cfg = probes.ProbeConfig(rows=128, batch=16)
+        key = jax.random.PRNGKey(5)
+        sa = probes.sketch_features(key, fa, ta, cfg)
+        sb = probes.sketch_features(key, fb, tb, cfg)
+        merged = probes.merge_probe_states([sa, sb])
+        assert not bool(jnp.allclose(merged.x_mean, sa.x_mean, atol=1e-3))
+        assert not bool(jnp.allclose(merged.y_mean, sa.y_mean, atol=1e-3))
+
+    def test_merge_order_invariant_moments(self):
+        (fa, ta), (fb, tb) = self._shards()
+        cfg = probes.ProbeConfig(rows=128, batch=16)
+        key = jax.random.PRNGKey(5)
+        sa = probes.sketch_features(key, fa, ta, cfg)
+        sb = probes.sketch_features(key, fb, tb, cfg)
+        ab = probes.merge_probe_states([sa, sb])
+        ba = probes.merge_probe_states([sb, sa])
+        assert bool(jnp.allclose(ab.x_mean, ba.x_mean, atol=1e-6))
+        assert bool(jnp.allclose(ab.x_scale, ba.x_scale, rtol=1e-5))
+        assert bool(jnp.array_equal(ab.sketch.counts, ba.sketch.counts))
+
+
+class TestProbeConfigWiring:
+    """Bugfix regression: config fields must be load-bearing. The dead
+    ``regressor`` field is gone; ``norm_slack`` actually reaches
+    ``scale_to_unit_ball``."""
+
+    def test_dead_regressor_field_deleted(self):
+        assert not hasattr(probes.ProbeConfig(), "regressor")
+
+    def test_norm_slack_is_threaded(self):
+        kf, kt = jax.random.split(jax.random.PRNGKey(2))
+        feats = jax.random.normal(kf, (64, 4))
+        targets = jax.random.normal(kt, (64,))
+        key = jax.random.PRNGKey(3)
+        tight = probes.sketch_features(
+            key, feats, targets, probes.ProbeConfig(rows=64, norm_slack=1.05))
+        loose = probes.sketch_features(
+            key, feats, targets, probes.ProbeConfig(rows=64, norm_slack=2.1))
+        # The unit-ball scale is quantile * slack: exactly proportional.
+        assert bool(jnp.allclose(loose.scale, tight.scale * (2.1 / 1.05),
+                                 rtol=1e-5))
+        # And the scaled data (hence the counters) actually change.
+        assert not bool(jnp.array_equal(tight.sketch.counts,
+                                        loose.sketch.counts))
