@@ -22,6 +22,14 @@ a Python loop of 8 sequential fits — the ``fit/fleet8_speedup`` derived
 field is loop-time/fleet-time (> 1 is a win; acceptance bar is >= 2) — and
 the ``cfit/*`` rows repeat the A/B on the max-margin classification driver.
 
+Banked rows (DESIGN.md §9): ``kern/sketch_query_banked`` times ONE fused
+S-tenant call of ``m = F*(2k+1)`` points against the loop of S per-sketch
+calls of ``m/S`` points it replaces (``banked_ratio`` derived field is
+banked/loop, < 1 is a win), over S ∈ {4, 16} × fleet shapes; the ``mfit/*``
+rows run the tenant-batched end-to-end A/B — ``regression.fit_many`` over S
+tenants vs a Python loop of S independent ``fit`` calls (the
+``mfit/fleet{S}_speedup`` acceptance bar is >= 2).
+
 ``run(smoke=True)`` shrinks every shape/iter for the CI harness-smoke job.
 """
 
@@ -59,6 +67,11 @@ DRIVER_FLEET_SHAPES = [("cls", 16, 512, 1), ("probe", 1025, 2048, 4)]
 DRIVER_FLEET_SHAPES_SMOKE = [("cls", 8, 64, 1), ("probe", 33, 64, 3)]
 DRIVER_FLEET_F = (8, 32)
 DRIVER_FLEET_F_SMOKE = (4,)
+
+BANK_S = (4, 16)           # tenants per banked query row (DESIGN.md §9)
+BANK_S_SMOKE = (4,)
+BANK_FLEET_F = (8, 32)     # restarts per tenant in the banked fleet shape
+BANK_FLEET_F_SMOKE = (4,)
 
 
 def _time(fn: Callable[..., jax.Array], *args, iters: int = 8) -> float:
@@ -111,6 +124,104 @@ def _paired_one_pass(z, wa, mask):
 def _paired_two_sided(z, wa, mask):
     return (ref.hash_histogram(lsh.augment_data(z), wa, mask)
             + ref.hash_histogram(lsh.augment_data(-z), wa, mask))
+
+
+@jax.jit
+def _sketch_query_banked(q, w, counts, idx):
+    return ref.sketch_query_banked(q, w, counts, idx)
+
+
+def _bench_banked_query(rows: List[str], smoke: bool) -> None:
+    """Banked fused query vs the loop of per-sketch calls it replaces.
+
+    One call of m = F*(2k+1) points spread over S tenants' tables against S
+    ``sketch_query`` calls of m/S points each — the serving-side claim that
+    the bank axis batches like the fleet axis (one hashed pass, S gathers).
+    """
+    n, d, r, p = (SHAPES_SMOKE if smoke else SHAPES)[0]
+    del n
+    for s in (BANK_S_SMOKE if smoke else BANK_S):
+        counts = jnp.ones((s, r, 1 << p), jnp.int32)
+        for f in (BANK_FLEET_F_SMOKE if smoke else BANK_FLEET_F):
+            m = f * (2 * FLEET_K + 1)
+            m -= m % s  # equal per-tenant loop splits
+            q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
+            idx = (jnp.arange(m, dtype=jnp.int32) * s) // m  # tenant-major
+            w = jax.random.normal(jax.random.PRNGKey(17), (p, d, r))
+            per = m // s
+            q_split = q.reshape(s, per, d)
+
+            def banked():
+                jax.block_until_ready(_sketch_query_banked(q, w, counts, idx))
+
+            def loop():
+                outs = [
+                    _sketch_query(q_split[t], w, counts[t]) for t in range(s)
+                ]
+                jax.block_until_ready(outs[-1])
+
+            jax.block_until_ready(_sketch_query_banked(q, w, counts, idx))
+            loop()  # warm both traces before the interleaved timing
+            best_b = best_l = float("inf")
+            for _ in range(3 if smoke else 10):
+                t0 = time.perf_counter()
+                banked()
+                best_b = min(best_b, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                loop()
+                best_l = min(best_l, time.perf_counter() - t0)
+            us_b, us_l = best_b * 1e6, best_l * 1e6
+            tag = f"S{s}F{f}_m{m}_d{d}_R{r}"
+            rows.append(f"kern/sketch_query_banked/ref/{tag},{us_b:.0f},"
+                        f"{m * r / us_b:.2f}")
+            rows.append(f"kern/sketch_query_banked_loop/ref/{tag},"
+                        f"{us_l:.0f},{m * r / us_l:.2f}")
+            rows.append(f"kern/sketch_query_banked_ratio/ref/{tag},"
+                        f"{us_b:.0f},{us_b / us_l:.3f}")
+
+
+def _bench_fit_many(rows: List[str], smoke: bool) -> None:
+    """Tenant-batched end-to-end A/B: fit_many(S) vs a loop of S fits.
+
+    The loop is the pre-bank alternative a gateway has today — S independent
+    ``fit`` calls, each drawing its own hash, tracing its own DFO scan, and
+    issuing its own per-step queries. ``fit_many`` sketches every tenant
+    under ONE hash family and advances all S*F members on one fused banked
+    query per step (acceptance bar: >= 2x at the smoke shapes).
+    """
+    from repro.core import dfo as dfo_lib, regression
+    from repro.data import datasets
+
+    s, f = 4, 2
+    n, d, r, steps = (256, 4, 64, 12) if smoke else (1024, 6, 256, 100)
+    tenants = [
+        datasets.make_regression(jax.random.PRNGKey(t), n, d, noise=0.2,
+                                 condition=3)[:2]
+        for t in range(s)
+    ]
+    xs = jnp.stack([t[0] for t in tenants])
+    ys = jnp.stack([t[1] for t in tenants])
+    cfg = regression.StormRegressorConfig(
+        rows=r, restarts=f,
+        dfo=dfo_lib.DFOConfig(steps=steps, num_queries=FLEET_K, sigma=0.5,
+                              sigma_decay=0.995, learning_rate=2.0,
+                              decay=0.995, average_tail=0.5),
+    )
+
+    def loop_of_fits():
+        thetas = [
+            regression.fit(jax.random.PRNGKey(t), xs[t], ys[t], cfg).theta
+            for t in range(s)
+        ]
+        jax.block_until_ready(thetas[-1])
+
+    def fit_many():
+        jax.block_until_ready(
+            regression.fit_many(jax.random.PRNGKey(0), xs, ys, cfg).theta
+        )
+
+    _ab_fleet_rows(rows, "mfit", f"S{s}xF{f}_n{n}_d{d}_R{r}_s{steps}", s,
+                   1 if smoke else 3, loop_of_fits, fit_many)
 
 
 def _ab_fleet_rows(rows: List[str], prefix: str, tag: str, f: int,
@@ -278,8 +389,10 @@ def run(print_fn=print, smoke: bool = False) -> List[str]:
             rows.append(f"kern/sketch_query/ref/{tag}F{f}_m{m}_d{d}_R{r},"
                         f"{us:.0f},{m * r / us:.2f}")
 
+    _bench_banked_query(rows, smoke)
     _bench_fleet_fit(rows, smoke)
     _bench_fleet_fit_classification(rows, smoke)
+    _bench_fit_many(rows, smoke)
     for row in rows:
         print_fn(row)
     return rows

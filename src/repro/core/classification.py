@@ -146,3 +146,124 @@ def fit(
         theta=theta_tilde, sketch=sk, params=params, losses=trace,
         fleet_losses=fleet_vals,
     )
+
+
+# ---------------------------------------------------------------------------
+# Tenant-batched fitting: S classifiers against one SketchBank (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class FittedClassifierMany(NamedTuple):
+    """S per-tenant max-margin classifiers from one fused banked fleet."""
+
+    theta: Array          # (S, d)
+    bank: sketch_lib.SketchBank
+    params: lsh.LSHParams
+    losses: Array         # (S, steps)
+    fleet_losses: Array   # (S, F)
+
+    @property
+    def tenants(self) -> int:
+        return self.theta.shape[0]
+
+    def select(self, i: int) -> FittedClassifier:
+        """Tenant ``i`` as a standalone :class:`FittedClassifier`."""
+        return FittedClassifier(
+            theta=self.theta[i], sketch=self.bank.select(i),
+            params=self.params, losses=self.losses[i],
+            fleet_losses=self.fleet_losses[i],
+        )
+
+    def decision(self, x: Array) -> Array:
+        """Per-tenant decision values for ``x: (S, n, d)`` -> ``(S, n)``."""
+        return jnp.einsum("snd,sd->sn", x, self.theta)
+
+    def predict(self, x: Array) -> Array:
+        return jnp.sign(self.decision(x))
+
+    def accuracy(self, x: Array, y: Array) -> Array:
+        return jnp.mean((self.predict(x) == y).astype(jnp.float32), axis=-1)
+
+
+def fit_many(
+    key: Array,
+    x,
+    y,
+    config: Optional[StormClassifierConfig] = None,
+) -> FittedClassifierMany:
+    """Train S per-tenant hyperplane classifiers on one banked query stream.
+
+    Every tenant's ``-y x`` stream is sketched under ONE shared hash family
+    into a :class:`~.sketch.SketchBank`; an ``S*F``-member fleet advances on
+    a single fused banked margin query of ``S·F·(2k+1)`` points per DFO step
+    (DESIGN.md §9). ``S = 1`` is bit-identical to ``fit(restarts=F)`` —
+    tenant 0 keys verbatim via ``fleet.tenant_key`` — and, like :func:`fit`,
+    no zero-guard rides in the per-tenant selection.
+
+    Args:
+      x: ``(S, n, d)`` stacked features or a sequence of ``(n_s, d)`` arrays.
+      y: ``(S, n)`` stacked ±1 labels or a matching sequence.
+    """
+    config = config or StormClassifierConfig()
+    fleet.validate_select(config.restart_select)
+    k_hash, k_rest = jax.random.split(key)
+    xs_list = list(x)
+    ys_list = list(y)
+    s = len(xs_list)
+    if s == 0 or len(ys_list) != s:
+        raise ValueError(f"need matching non-empty x/y stacks; got "
+                         f"{s} and {len(ys_list)} tenants")
+    d = xs_list[0].shape[-1]
+    f = max(1, config.restarts)
+
+    params = lsh.init_srp(k_hash, config.rows, config.planes, d + 2)
+    sketches = []
+    theta0 = []
+    key_parts = []
+    for t, (xt, yt) in enumerate(zip(xs_list, ys_list)):
+        z = -yt[:, None] * xt                            # Thm 3 premultiplication
+        z_scaled, _ = lsh.scale_to_unit_ball(z, config.norm_slack)
+        z_aug = lsh.augment_data(z_scaled)               # (n, d + 2)
+        sketches.append(sketch_lib.sketch_dataset(
+            params, z_aug, batch=config.batch, paired=False,
+            dtype=jnp.dtype(config.count_dtype), engine=config.engine,
+        ))
+        # Tenant t's init/step keys follow fit()'s split discipline under
+        # the shared tenant_key convention (tenant 0 == fit verbatim).
+        k_init_t, k_dfo_t = jax.random.split(fleet.tenant_key(k_rest, t))
+        theta0.append(config.init_scale * jax.random.normal(k_init_t, (d,)))
+        key_parts.append(k_dfo_t)
+    bank = sketch_lib.bank_of(sketches)
+
+    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
+    loss_fn = fleet.make_loss_fn(bank, params, paired=False,
+                                 scale=2.0 ** config.planes,
+                                 engine=config.engine,
+                                 member_map=member_map)
+    seeded = [
+        fleet.seed_fleet(key_parts[t], f, d, config.dfo,
+                         fleet.config_from_restarts(config),
+                         theta0=theta0[t])
+        for t in range(s)
+    ]
+    member_keys, inits, sigmas, lrs = (
+        jnp.concatenate([p[i] for p in seeded], axis=0) for i in range(4)
+    )
+    result = fleet.run_fleet(
+        loss_fn, inits, member_keys, config.dfo,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
+    )
+    sel_loss = fleet.make_loss_fn(bank, params, paired=False,
+                                  scale=2.0 ** config.planes,
+                                  engine=config.engine,
+                                  member_map=jnp.arange(s, dtype=jnp.int32))
+    theta, trace, fleet_vals = fleet.select_theta_many(
+        sel_loss, result.theta.reshape(s, f, d),
+        result.losses.reshape(s, f, -1),
+        select=config.restart_select, basin_tol=config.restart_basin_tol,
+    )
+    return FittedClassifierMany(
+        theta=theta, bank=bank, params=params, losses=trace,
+        fleet_losses=fleet_vals,
+    )

@@ -185,6 +185,116 @@ def fleet_fit(
     return dfo.FleetDFOResult(theta=thetas, losses=traces)
 
 
+def fleet_fit_banked(
+    bank: sketch_lib.SketchBank,
+    params: lsh.LSHParams,
+    theta0: Array,
+    keys: Array,
+    config: dfo.DFOConfig,
+    restarts_per_sketch: int,
+    mesh: Optional[Mesh] = None,
+    axis: str = "bank",
+    sigma: Optional[Union[float, Array]] = None,
+    learning_rate: Optional[Union[float, Array]] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+    l2: float = 0.0,
+    engine: str = "auto",
+    paired: bool = True,
+    scale: float = 1.0,
+    project_last: bool = True,
+) -> dfo.FleetDFOResult:
+    """Train S tenants × F restarts with the BANK axis sharded over a mesh.
+
+    The banked extension of :func:`fleet_fit` (DESIGN.md §9): instead of one
+    replicated sketch, each device owns a contiguous slice of the counter
+    bank *and* exactly the fleet members mapped to those sketches
+    (``sharding.specs.bank_specs`` — member-major ``(S*F, ...)`` arrays and
+    the ``(S, R, B)`` bank shard the same leading axis). Members only ever
+    query their own tenant's table, so after placement there is zero
+    per-step communication; each device advances its tenants with one local
+    fused banked query per DFO step.
+
+    Args:
+      bank: the sketch bank, shardable on its leading (sketch) axis.
+      params: the shared hash family (replicated).
+      theta0: ``(S*F, dim)`` member-major initial iterates (tenant t's F
+        members at rows ``[t*F, (t+1)*F)`` — ``fleet.seed_fleet_many``'s
+        layout).
+      keys: ``(S*F,)`` stacked member PRNG keys.
+      config: shared DFO hyperparameters.
+      restarts_per_sketch: F — members per tenant (the member→sketch map is
+        ``repeat(arange(S_local), F)`` on every device, which is what makes
+        the sharded map a pure reindex of the global one).
+      mesh: device mesh; ``None`` runs the identical program unsharded.
+      axis: mesh axis carrying the bank shards.
+      sigma / learning_rate: optional per-member ``(S*F,)`` hyperparameters.
+      refine_steps / refine_radius / l2 / engine: as :func:`fleet_fit`.
+      paired / scale: loss estimator shape (PRP regression/probes vs the
+        single-sided ``2**p``-scaled classification margin).
+      project_last: pin ``theta[..., -1] = -1`` (Algorithm 2's constraint).
+
+    Returns:
+      ``FleetDFOResult`` with ``(S*F, dim)`` thetas and traces.
+    """
+    s = bank.n.shape[0]
+    f_total = theta0.shape[0]
+    if f_total != s * restarts_per_sketch:
+        raise ValueError(
+            f"theta0 carries {f_total} members for {s} sketches x "
+            f"{restarts_per_sketch} restarts"
+        )
+    proj = dfo.pin_last_coordinate(-1.0) if project_last else None
+    sig = dfo._fleet_param(sigma, config.sigma, f_total)
+    lr = dfo._fleet_param(learning_rate, config.learning_rate, f_total)
+
+    def local(counts, n, projections, th, ks, sg, lr_):
+        s_local = counts.shape[0]
+        member_map = jnp.repeat(jnp.arange(s_local, dtype=jnp.int32),
+                                restarts_per_sketch)
+        loss_fn = fleet.make_loss_fn(
+            sketch_lib.SketchBank(counts=counts, n=n),
+            lsh.LSHParams(projections=projections),
+            paired=paired,
+            scale=scale,
+            l2=l2,
+            engine=engine,
+            member_map=member_map,
+        )
+        res = fleet.run_fleet(
+            loss_fn, th, ks, config, project=proj, sigma=sg,
+            learning_rate=lr_, refine_steps=refine_steps,
+            refine_radius=refine_radius,
+        )
+        return res.theta, res.losses
+
+    if mesh is None:
+        thetas, traces = jax.jit(local)(bank.counts, bank.n,
+                                        params.projections,
+                                        theta0, keys, sig, lr)
+        return dfo.FleetDFOResult(theta=thetas, losses=traces)
+
+    from repro.sharding import specs as sharding_specs
+
+    bank_spec, replicated = sharding_specs.bank_specs(axis)
+    sharding_specs.check_bank_divisible(s, mesh, axis)
+    fn = compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(bank_spec, bank_spec, replicated,
+                  bank_spec, bank_spec, bank_spec, bank_spec),
+        out_specs=(bank_spec, bank_spec),
+    )
+    put = NamedSharding(mesh, bank_spec)
+    thetas, traces = fn(
+        jax.device_put(bank.counts, put), jax.device_put(bank.n, put),
+        params.projections,
+        jax.device_put(theta0, put), jax.device_put(keys, put),
+        jax.device_put(sig, put), jax.device_put(lr, put),
+    )
+    return dfo.FleetDFOResult(theta=thetas, losses=traces)
+
+
 @partial(jax.jit, static_argnames=("paired",))
 def replicated_query(
     sk: sketch_lib.Sketch, params: lsh.LSHParams, thetas: Array, paired: bool = True

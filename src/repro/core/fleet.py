@@ -75,13 +75,14 @@ def validate_select(select: str) -> None:
 
 
 def make_loss_fn(
-    sk: sketch_lib.Sketch,
+    sk,
     params: lsh.LSHParams,
     paired: bool = True,
     scale: float = 1.0,
     l2: float = 0.0,
     engine: str = "auto",
     d: Optional[int] = None,
+    member_map: Optional[Array] = None,
 ) -> Callable[[Array], Array]:
     """Batched sketch-loss closure with session-hoisted kernel weights.
 
@@ -94,8 +95,10 @@ def make_loss_fn(
     and O(d^2) quadratic-refine batches all stay on the fused path.
 
     Args:
-      sk: the (frozen) sketch to query.
-      params: hash parameters.
+      sk: the (frozen) sketch to query — a lone :class:`~.sketch.Sketch`, or
+        a :class:`~.sketch.SketchBank` for *banked* sessions (DESIGN.md §9)
+        where the fleet spans S tenants' sketches at once.
+      params: hash parameters (one family — shared by the whole bank).
       paired: PRP sketch (regression/probes) vs single-sided (classification
         margin loss) — controls the ``2n`` vs ``n`` estimator denominator.
       scale: constant multiplier on the estimate (classification's Thm-3
@@ -104,23 +107,63 @@ def make_loss_fn(
       engine: ``scan | kernel | auto`` query path (DESIGN.md §3.4).
       d: feature dimension for the ridge term; defaults to ``params.dim - 3``
         (params hash the augmented ``[x, y]`` space of ``d + 1 + 2`` dims).
+      member_map: required with a ``SketchBank`` — ``(F,)`` int32 mapping
+        fleet member ``f`` to its sketch index. The closure then requires
+        member-major batches whose size is a multiple of ``F`` (every fused
+        caller — ``minimize_fleet``'s ``(F, 2k+1)`` flatten,
+        ``quadratic_refine_fleet``'s ``(F, m)`` and ``(F, 2)`` blocks,
+        :func:`select_theta_many`'s ``(S, C)`` candidates — already is) and
+        routes each point to ``member_map[row // (batch // F)]``.
 
     Returns:
       A jitted ``(q, dim) -> (q,)`` loss callable.
     """
     d = params.dim - 3 if d is None else d
+    banked = isinstance(sk, sketch_lib.SketchBank)
+    if banked != (member_map is not None):
+        raise ValueError("member_map must be given iff sk is a SketchBank")
+    if banked and sk.counts.shape[0] == 1:
+        # A 1-sketch bank runs the lone-sketch program LITERALLY — the
+        # "S = 1 is a bit-identical slice of today's API" guarantee
+        # (DESIGN.md §9). The banked gather's identical values survive, but
+        # its different graph shape lets XLA fuse the downstream (inexact)
+        # gradient einsum differently inside the scanned DFO step — ~1-ULP
+        # trace drift per step. Slicing keeps the compiled program itself
+        # unchanged, and skips the pointless per-point index.
+        sk = sk.select(0)
+        banked = False
+        member_map = None
     use_kernel = sketch_lib.resolve_engine(engine) == "kernel"
+
+    def point_idx(thetas: Array) -> Array:
+        """Per-point sketch index for a member-major (q, dim) batch."""
+        if thetas.ndim != 2:
+            raise ValueError("banked loss closures need (q, dim) batches")
+        q, f = thetas.shape[0], member_map.shape[0]
+        if q % f:
+            raise ValueError(
+                f"banked batch of {q} points is not member-major over "
+                f"{f} fleet members"
+            )
+        return jnp.repeat(member_map, q // f)
+
     if use_kernel:
         from repro.kernels import ops as kernel_ops  # deferred: ops imports core
 
         w = kernel_ops.from_lsh_params(params)  # hoisted: once per session
 
         def estimate(thetas: Array) -> Array:
+            idx = point_idx(thetas) if banked else None
             return kernel_ops.query_theta_with_weights(sk, w, thetas,
-                                                       paired=paired)
+                                                       paired=paired,
+                                                       sketch_idx=idx)
     else:
 
         def estimate(thetas: Array) -> Array:
+            if banked:
+                return sketch_lib.query_theta_banked(
+                    sk, params, thetas, point_idx(thetas), paired=paired
+                )
             return sketch_lib.query_theta(sk, params, thetas, paired=paired)
 
     def loss_fn(thetas: Array) -> Array:  # (q, dim) -> (q,)
@@ -186,6 +229,47 @@ def seed_fleet(
         )
     return (jnp.stack(keys), jnp.stack(inits), jnp.stack(sigmas),
             jnp.stack(lrs))
+
+
+def tenant_key(key: Array, s: int) -> Array:
+    """Per-tenant PRNG convention for banked fits (DESIGN.md §9).
+
+    Tenant 0 uses the driver's key VERBATIM — so ``fit_many`` with ``S = 1``
+    seeds exactly like the single-tenant ``fit`` — and tenant ``s >= 1``
+    folds in ``s``. One owner, so every ``fit_many`` driver keys its tenants
+    identically.
+    """
+    return key if s == 0 else jax.random.fold_in(key, s)
+
+
+def seed_fleet_many(
+    key: Array,
+    s: int,
+    f: int,
+    dim: int,
+    base: dfo.DFOConfig,
+    config: Optional[FleetConfig] = None,
+    theta0: Optional[Array] = None,
+) -> Tuple[Array, Array, Array, Array]:
+    """Seed S per-tenant restart fleets into one member-major block.
+
+    Tenant ``t`` runs :func:`seed_fleet` under :func:`tenant_key` — its F
+    members occupy rows ``[t*F, (t+1)*F)`` (member-major, matching the
+    ``member_map = repeat(arange(S), F)`` convention of banked loss
+    closures). ``theta0`` may be ``(S, dim)`` for per-tenant baseline inits
+    (classification) or ``None`` for the shared zero baseline.
+
+    Returns:
+      ``(keys (S*F,), theta0 (S*F, dim), sigmas (S*F,), lrs (S*F,))``.
+    """
+    parts = [
+        seed_fleet(tenant_key(key, t), f, dim, base, config,
+                   theta0=None if theta0 is None else theta0[t])
+        for t in range(s)
+    ]
+    return tuple(
+        jnp.concatenate([p[i] for p in parts], axis=0) for i in range(4)
+    )
 
 
 def run_fleet(
@@ -281,3 +365,68 @@ def select_theta(
         # best member's trace (the run the selection measured it against).
         trace = traces[jnp.where(idx < f, idx, best_member)]
     return theta_tilde, trace, fleet_vals
+
+
+def select_theta_many(
+    loss_fn: Callable[[Array], Array],
+    thetas: Array,
+    traces: Array,
+    select: str = "best",
+    basin_tol: float = 0.05,
+    guard: Optional[Array] = None,
+    project: Optional[Callable[[Array], Array]] = None,
+) -> Tuple[Array, Array, Array]:
+    """Per-tenant :func:`select_theta` for a banked fleet, fully fused.
+
+    All S tenants' candidates (each tenant's F members + its optional guard
+    row) go through ONE banked loss call — ``loss_fn`` must be a banked
+    closure built with ``member_map = arange(S)`` so each tenant's candidate
+    block reads that tenant's own sketch. ``S = 1`` reproduces
+    :func:`select_theta` bit-for-bit (same candidate batch, same values,
+    same arg-min).
+
+    Args:
+      loss_fn: banked selection loss (``member_map = arange(S)``).
+      thetas: ``(S, F, dim)`` final fleet iterates, tenant-major.
+      traces: ``(S, F, steps)`` per-member loss traces.
+      select / basin_tol / guard / project: as :func:`select_theta`; the
+        guard is one shared ``(dim,)`` fallback evaluated per tenant.
+
+    Returns:
+      ``(theta (S, dim), trace (S, steps), fleet_vals (S, F))``.
+    """
+    s, f, dim = thetas.shape
+    proj = project if project is not None else (lambda t: t)
+    rows = jnp.arange(s)
+    if guard is None:
+        cand = thetas
+    else:
+        cand = jnp.concatenate(
+            [thetas, jnp.broadcast_to(guard, (s, 1, dim))], axis=1
+        )
+    vals = loss_fn(cand.reshape(s * cand.shape[1], dim))
+    vals = vals.reshape(s, cand.shape[1])
+    fleet_vals = vals[:, :f]
+    best_member = jnp.argmin(fleet_vals, axis=1)  # (S,)
+    if f > 1 and select == "average":
+        best = jnp.min(fleet_vals, axis=1, keepdims=True)
+        keep = fleet_vals <= best * (1.0 + basin_tol) + 1e-12  # (S, F)
+        avg = proj(
+            jnp.sum(jnp.where(keep[:, :, None], thetas, 0.0), axis=1)
+            / jnp.maximum(jnp.sum(keep.astype(jnp.float32), axis=1,
+                                  keepdims=True), 1.0)
+        )
+        runoff_rows = [avg, thetas[rows, best_member]]
+        if guard is not None:
+            runoff_rows.append(cand[:, -1])
+        runoff = jnp.stack(runoff_rows, axis=1)  # (S, 2 or 3, dim)
+        runoff_vals = loss_fn(runoff.reshape(-1, dim))
+        runoff_vals = runoff_vals.reshape(s, runoff.shape[1])
+        # Ties break toward the average (index 0), as in select_theta.
+        theta = runoff[rows, jnp.argmin(runoff_vals, axis=1)]
+        trace = traces[rows, best_member]
+    else:
+        idx = jnp.argmin(vals, axis=1)  # (S,)
+        theta = cand[rows, idx]
+        trace = traces[rows, jnp.where(idx < f, idx, best_member)]
+    return theta, trace, fleet_vals

@@ -292,3 +292,122 @@ def fit_probe_sharded(
                                  l2=l2, engine=engine, d=d_model)
     proj = dfo.pin_last_coordinate(-1.0)
     return _finish_probe(state, d_model, loss_fn, result, fc, proj)
+
+
+# ---------------------------------------------------------------------------
+# Tenant-batched probes: S value-heads against one SketchBank (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class FittedProbeMany(NamedTuple):
+    """S per-tenant value-heads recovered from one fused banked fleet."""
+
+    theta: Array          # (S, d_model)
+    intercept: Array      # (S,)
+    losses: Array         # (S, steps)
+    fleet_losses: Array   # (S, F)
+
+    @property
+    def tenants(self) -> int:
+        return self.theta.shape[0]
+
+    def select(self, i: int) -> FittedProbe:
+        """Tenant ``i`` as a standalone :class:`FittedProbe`."""
+        return FittedProbe(theta=self.theta[i], intercept=self.intercept[i],
+                           losses=self.losses[i],
+                           fleet_losses=self.fleet_losses[i])
+
+    def predict(self, feats: Array) -> Array:
+        """Per-tenant predictions for ``feats: (S, n, d_model)`` -> (S, n)."""
+        return jnp.einsum("snd,sd->sn", feats, self.theta) \
+            + self.intercept[:, None]
+
+    def mse(self, feats: Array, targets: Array) -> Array:
+        return jnp.mean((self.predict(feats) - targets) ** 2, axis=-1)
+
+
+def fit_probe_many(
+    key: Array,
+    states,
+    d_model: int,
+    dfo_config: Optional[dfo.DFOConfig] = None,
+    l2: float = 3e-2,
+    restarts: int = 1,
+    fleet_config: Optional[fleet.FleetConfig] = None,
+    refine_steps: int = 0,
+    refine_radius: float = 0.3,
+    engine: str = "auto",
+) -> FittedProbeMany:
+    """Recover S per-tenant value-heads from S probe sketches in one fleet.
+
+    The gateway probe path (DESIGN.md §9): the states' counter tables stack
+    into a :class:`~.sketch.SketchBank` and an ``S*F``-member fleet (F
+    restarts per tenant) trains with one fused banked ``S·F·(2k+1)``-point
+    query per DFO step at ``d_model + 1`` dims — exactly where the large-m
+    query economics bite hardest. Each head un-standardizes through its OWN
+    state's moments, so heterogeneous tenants recover their own readouts.
+    ``S = 1`` is bit-identical to ``fit_probe(restarts=F)``
+    (``fleet.tenant_key`` keys tenant 0 verbatim).
+
+    Args:
+      states: sequence of :class:`ProbeState` sharing ONE hash family
+        (sketch under a broadcast ``params`` — the banked query hashes every
+        point once; mismatched families are rejected).
+      d_model: feature dimension of every tenant's probe.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("fit_probe_many needs at least one ProbeState")
+    base = states[0]
+    rest = [st for st in states[1:]
+            if st.params.projections is not base.params.projections]
+    if any(st.params.projections.shape != base.params.projections.shape
+           for st in rest) or (rest and not bool(jnp.all(jnp.stack(
+               [st.params.projections for st in rest])
+               == base.params.projections[None]))):
+        raise ValueError(
+            "fit_probe_many needs states sketched under ONE shared hash "
+            "family; got differing LSHParams"
+        )
+    s = len(states)
+    cfg_d = dfo_config or _PROBE_DFO
+    f = max(1, restarts)
+    fc = fleet_config or fleet.FleetConfig()
+    fleet.validate_select(fc.select)
+
+    bank = sketch_lib.bank_of([st.sketch for st in states])
+    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
+    loss_fn = fleet.make_loss_fn(bank, base.params, paired=True, l2=l2,
+                                 engine=engine, d=d_model,
+                                 member_map=member_map)
+    proj = dfo.pin_last_coordinate(-1.0)
+    member_keys, theta0, sigmas, lrs = fleet.seed_fleet_many(
+        key, s, f, d_model + 1, cfg_d, fc
+    )
+    result = fleet.run_fleet(
+        loss_fn, theta0, member_keys, cfg_d, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=refine_steps, refine_radius=refine_radius,
+    )
+    sel_loss = fleet.make_loss_fn(bank, base.params, paired=True, l2=l2,
+                                  engine=engine, d=d_model,
+                                  member_map=jnp.arange(s, dtype=jnp.int32))
+    theta_tilde, trace, fleet_vals = fleet.select_theta_many(
+        sel_loss, result.theta.reshape(s, f, d_model + 1),
+        result.losses.reshape(s, f, -1),
+        select=fc.select, basin_tol=fc.basin_tol,
+        guard=proj(jnp.zeros((d_model + 1,), jnp.float32)), project=proj,
+    )
+    theta_std = theta_tilde[:, :d_model]
+    y_scale = jnp.stack([st.y_scale for st in states])
+    x_scale = jnp.stack([st.x_scale for st in states])
+    x_mean = jnp.stack([st.x_mean for st in states])
+    y_mean = jnp.stack([st.y_mean for st in states])
+    theta = y_scale[:, None] * theta_std / x_scale
+    # Per-tenant jnp.dot, not one einsum: the fused contraction reassociates
+    # the d-sum and drifts the S=1 intercept off fit_probe()'s by 1 ULP.
+    intercept = jnp.stack(
+        [y_mean[t] - jnp.dot(x_mean[t], theta[t]) for t in range(s)]
+    )
+    return FittedProbeMany(theta=theta, intercept=intercept, losses=trace,
+                           fleet_losses=fleet_vals)

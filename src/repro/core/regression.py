@@ -205,3 +205,150 @@ def sketch_memory_bytes(config: StormRegressorConfig) -> int:
     """Size of the persistent state the edge device ships (counters only)."""
     itemsize = jnp.dtype(config.count_dtype).itemsize
     return config.rows * (1 << config.planes) * itemsize
+
+
+# ---------------------------------------------------------------------------
+# Tenant-batched fitting: S regressions against one SketchBank (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class FittedRegressorMany(NamedTuple):
+    """S per-tenant regressors trained in one fused banked fleet."""
+
+    theta: Array          # (S, d) weights in each tenant's feature space
+    intercept: Array      # (S,)
+    theta_std: Array      # (S, d) standardized-space weights (diagnostics)
+    bank: sketch_lib.SketchBank
+    params: lsh.LSHParams
+    losses: Array         # (S, steps) trace of each tenant's selected member
+    x_mean: Array         # (S, d)
+    x_scale: Array        # (S, d)
+    y_mean: Array         # (S,)
+    y_scale: Array        # (S,)
+    fleet_losses: Array   # (S, F) final sketch-loss per tenant member
+
+    @property
+    def tenants(self) -> int:
+        return self.theta.shape[0]
+
+    def select(self, i: int) -> FittedRegressor:
+        """Tenant ``i`` as a standalone :class:`FittedRegressor`."""
+        return FittedRegressor(
+            theta=self.theta[i], intercept=self.intercept[i],
+            theta_std=self.theta_std[i], sketch=self.bank.select(i),
+            params=self.params, losses=self.losses[i],
+            x_mean=self.x_mean[i], x_scale=self.x_scale[i],
+            y_mean=self.y_mean[i], y_scale=self.y_scale[i],
+            fleet_losses=self.fleet_losses[i],
+        )
+
+    def predict(self, x: Array) -> Array:
+        """Per-tenant predictions for ``x: (S, n, d)`` -> ``(S, n)``."""
+        return jnp.einsum("snd,sd->sn", x, self.theta) \
+            + self.intercept[:, None]
+
+    def mse(self, x: Array, y: Array) -> Array:
+        return jnp.mean((self.predict(x) - y) ** 2, axis=-1)
+
+
+def fit_many(
+    key: Array,
+    x,
+    y,
+    config: Optional[StormRegressorConfig] = None,
+) -> FittedRegressorMany:
+    """Fit S per-tenant regressions from one banked sketch query stream.
+
+    The gateway entry point (DESIGN.md §9): every tenant's data is sketched
+    under ONE shared hash family into a :class:`~.sketch.SketchBank`, an
+    ``S*F``-member fleet (F restarts per tenant) trains with a single fused
+    ``S·F·(2k+1)``-point banked query per DFO step, and per-tenant selection
+    runs all ``S·(F+1)`` candidates (members + zero-guards) through one more
+    fused call. ``S = 1`` is bit-identical to ``fit(restarts=F)`` — same
+    seeds (``fleet.tenant_key``), same loss values (the banked gather with a
+    constant-zero index reads the same counters), same selection.
+
+    Args:
+      key: PRNG key; splits into the shared hash draw and the tenant-0 DFO
+        key exactly like :func:`fit`.
+      x: ``(S, n, d)`` stacked features, or a sequence of ``(n_s, d)``
+        per-tenant arrays (lengths may differ).
+      y: ``(S, n)`` stacked targets, or a matching sequence.
+      config: shared hyperparameters; ``config.restarts = F`` restarts per
+        tenant.
+
+    Returns:
+      :class:`FittedRegressorMany`; ``.select(i)`` gives tenant ``i``'s
+      standalone regressor.
+    """
+    config = config or StormRegressorConfig()
+    fleet.validate_select(config.restart_select)
+    k_hash, k_dfo = jax.random.split(key)
+    xs_list = list(x)
+    ys_list = list(y)
+    s = len(xs_list)
+    if s == 0 or len(ys_list) != s:
+        raise ValueError(f"need matching non-empty x/y stacks; got "
+                         f"{s} and {len(ys_list)} tenants")
+    d = xs_list[0].shape[-1]
+    f = max(1, config.restarts)
+
+    # Per-tenant preprocessing runs the exact single-fit pipeline (host loop
+    # over tenants — bit-identical per tenant to fit()), then the sketches
+    # stack into the bank. One hash family serves every tenant.
+    params = lsh.init_srp(
+        k_hash, config.rows, config.planes, d + 3, orthogonal=config.orthogonal
+    )
+    sketches, moments = [], []
+    for xt, yt in zip(xs_list, ys_list):
+        xs_, ys_, xm, xsc, ym, ysc = _standardize(xt, yt, config.standardize)
+        z = jnp.concatenate([xs_, ys_[:, None]], axis=-1)
+        z_scaled, _ = scale_to_unit_ball(z, config.norm_slack)
+        sketches.append(sketch_lib.sketch_dataset(
+            params, z_scaled, batch=config.batch, paired=True,
+            dtype=jnp.dtype(config.count_dtype), engine=config.engine,
+        ))
+        moments.append((xm, xsc, ym, ysc))
+    bank = sketch_lib.bank_of(sketches)
+
+    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
+    loss_fn = fleet.make_loss_fn(bank, params, paired=True, l2=config.l2,
+                                 engine=config.engine, d=d,
+                                 member_map=member_map)
+    proj = dfo.pin_last_coordinate(-1.0)
+
+    member_keys, theta0, sigmas, lrs = fleet.seed_fleet_many(
+        k_dfo, s, f, d + 1, config.dfo, fleet.config_from_restarts(config)
+    )
+    result = fleet.run_fleet(
+        loss_fn, theta0, member_keys, config.dfo, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
+    )
+    sel_loss = fleet.make_loss_fn(bank, params, paired=True, l2=config.l2,
+                                  engine=config.engine, d=d,
+                                  member_map=jnp.arange(s, dtype=jnp.int32))
+    theta_tilde, trace, fleet_vals = fleet.select_theta_many(
+        sel_loss, result.theta.reshape(s, f, d + 1),
+        result.losses.reshape(s, f, -1),
+        select=config.restart_select, basin_tol=config.restart_basin_tol,
+        guard=proj(jnp.zeros((d + 1,), jnp.float32)), project=proj,
+    )
+    theta_std = theta_tilde[:, :d]
+
+    xm = jnp.stack([m[0] for m in moments])
+    xsc = jnp.stack([m[1] for m in moments])
+    ym = jnp.stack([m[2] for m in moments])
+    ysc = jnp.stack([m[3] for m in moments])
+    theta = ysc[:, None] * theta_std / xsc
+    # Per-tenant jnp.dot, not one einsum: the fused contraction reassociates
+    # the d-sum and drifts the S=1 intercept off fit()'s by 1 ULP.
+    intercept = jnp.stack(
+        [ym[t] - jnp.dot(xm[t], theta[t]) for t in range(s)]
+    )
+    return FittedRegressorMany(
+        theta=theta, intercept=intercept, theta_std=theta_std,
+        bank=bank, params=params, losses=trace,
+        x_mean=xm, x_scale=xsc, y_mean=ym, y_scale=ysc,
+        fleet_losses=fleet_vals,
+    )

@@ -134,8 +134,15 @@ def prp_insert(sketch: Sketch, params: lsh.LSHParams, z: Array) -> Sketch:
 
 
 def merge(a: Sketch, b: Sketch) -> Sketch:
-    """Mergeable-summary property: sketch of the union is the elementwise sum."""
-    return Sketch(counts=a.counts + b.counts, n=a.n + b.n)
+    """Mergeable-summary property: sketch of the union is the elementwise sum.
+
+    Narrow counter dtypes widen to int32 for the add and saturate on the way
+    back, matching ``update``/``prp_update`` — two near-full int16 shards
+    must pin at the dtype max, not wrap to a negative count (DESIGN.md §6).
+    """
+    dtype = a.counts.dtype
+    wide = _widen(a.counts) + _widen(b.counts)
+    return Sketch(counts=_narrow_back(wide, dtype), n=a.n + b.n)
 
 
 def query(sketch: Sketch, codes: Array, paired: bool = False) -> Array:
@@ -162,6 +169,136 @@ def query_theta(
 ) -> Array:
     """Estimate the surrogate empirical risk at ``theta_tilde = [theta, -1]``."""
     return query(sketch, lsh.query_codes(params, theta_tilde), paired=paired)
+
+
+# ---------------------------------------------------------------------------
+# SketchBank: many sketches under ONE hash family, queried in one fused pass.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SketchBank:
+    """A first-class bank of S sketches sharing one hash family (DESIGN.md §9).
+
+    The serving-side unit of edge aggregation: per-tenant / per-shard counter
+    tables stacked into one ``(S, R, B)`` gather target, so a single batched
+    query with a per-point sketch index reads from S different tables in one
+    pass. Everything that makes the lone :class:`Sketch` mergeable survives
+    per-slice: ``bank.select(i)`` is an ordinary sketch, and
+    :meth:`merge_groups` folds tenant groups by (saturating) counter addition.
+
+    Attributes:
+      counts: ``(S, R, B)`` integer counters — sketch-major stack.
+      n: ``(S,)`` int32 — logical inserts per sketch.
+    """
+
+    counts: Array
+    n: Array
+
+    @property
+    def size(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def rows(self) -> int:
+        return self.counts.shape[1]
+
+    @property
+    def buckets(self) -> int:
+        return self.counts.shape[2]
+
+    def select(self, i: int) -> Sketch:
+        """The i-th sketch as a standalone :class:`Sketch` view."""
+        return Sketch(counts=self.counts[i], n=self.n[i])
+
+    def merge_groups(self, assignment, num_groups: Optional[int] = None
+                     ) -> "SketchBank":
+        """Merge sketches into groups: ``out[g] = sum over {i: a_i == g}``.
+
+        The bank analogue of :func:`merge` (gateway roll-up: collapse
+        per-edge sketches into per-tenant ones). Narrow dtypes widen to
+        int32 for the segment sum and saturate on the way back, like every
+        other insert/merge path (DESIGN.md §6).
+
+        Args:
+          assignment: ``(S,)`` int group ids in ``[0, num_groups)``.
+          num_groups: number of output sketches; defaults to
+            ``max(assignment) + 1`` (requires a concrete assignment).
+        """
+        assignment = jnp.asarray(assignment, jnp.int32)
+        g = (int(jnp.max(assignment)) + 1 if num_groups is None
+             else num_groups)
+        dtype = self.counts.dtype
+        wide = jax.ops.segment_sum(_widen(self.counts), assignment,
+                                   num_segments=g)
+        return SketchBank(
+            counts=_narrow_back(wide, dtype),
+            n=jax.ops.segment_sum(self.n, assignment, num_segments=g),
+        )
+
+    def memory_bytes(self) -> int:
+        return self.counts.size * self.counts.dtype.itemsize + 4 * self.size
+
+
+def bank_of(sketches) -> SketchBank:
+    """Stack standalone sketches (same shape/dtype) into a :class:`SketchBank`.
+
+    The sketches must come from the SAME hash family — the bank stores no
+    params, and the fused banked query hashes every point once with the
+    shared ``LSHParams``; mixing hash draws would silently gather garbage.
+    """
+    sketches = list(sketches)
+    if not sketches:
+        raise ValueError("bank_of needs at least one sketch")
+    shapes = {s.counts.shape for s in sketches}
+    dtypes = {s.counts.dtype for s in sketches}
+    if len(shapes) != 1 or len(dtypes) != 1:
+        raise ValueError(
+            f"bank_of needs homogeneous sketches; got shapes {shapes}, "
+            f"dtypes {dtypes}"
+        )
+    return SketchBank(
+        counts=jnp.stack([s.counts for s in sketches]),
+        n=jnp.stack([jnp.asarray(s.n, jnp.int32) for s in sketches]),
+    )
+
+
+def bank_query(
+    bank: SketchBank, codes: Array, sketch_idx: Array, paired: bool = False
+) -> Array:
+    """RACE estimate with a per-point sketch index (the banked :func:`query`).
+
+    Args:
+      bank: the sketch bank.
+      codes: ``(..., R)`` query codes (shared hash family).
+      sketch_idx: ``(...,)`` int32 — which sketch each point reads.
+      paired: True for PRP sketches (divide by that sketch's ``2n``).
+
+    Returns:
+      ``(...,)`` float32 estimates; point ``i`` is exactly
+      ``query(bank.select(sketch_idx[i]), codes[i], paired)``.
+    """
+    gathered = bank.counts[
+        sketch_idx[..., None], _row_ids(codes), codes
+    ].astype(jnp.float32)
+    mean_count = jnp.mean(gathered, axis=-1)
+    denom = jnp.maximum(bank.n[sketch_idx].astype(jnp.float32), 1.0)
+    if paired:
+        denom = 2.0 * denom
+    return mean_count / denom
+
+
+def query_theta_banked(
+    bank: SketchBank,
+    params: lsh.LSHParams,
+    theta_tilde: Array,
+    sketch_idx: Array,
+    paired: bool = True,
+) -> Array:
+    """Banked surrogate-risk estimate: one hashed gather serves S tenants."""
+    return bank_query(bank, lsh.query_codes(params, theta_tilde), sketch_idx,
+                      paired=paired)
 
 
 # ---------------------------------------------------------------------------
@@ -268,3 +405,28 @@ def sketch_dataset(
     if _is_narrow(dtype):
         out = Sketch(counts=saturating_cast(out.counts, dtype), n=out.n)
     return out
+
+
+def sketch_dataset_many(
+    params: lsh.LSHParams,
+    zs,
+    rows: Optional[int] = None,
+    buckets: Optional[int] = None,
+    batch: int = 1024,
+    paired: bool = True,
+    dtype: jnp.dtype = jnp.int32,
+    engine: str = "auto",
+) -> SketchBank:
+    """Sketch S datasets under ONE shared hash family into a bank.
+
+    ``zs`` is a ``(S, n, dim)`` stack or any sequence of ``(n_s, dim)``
+    arrays (per-tenant streams may differ in length). Each dataset runs the
+    ordinary :func:`sketch_dataset` — slice ``s`` of the returned bank is
+    bit-identical to the standalone build of dataset ``s`` — so the bank is
+    a pure re-layout, not a new estimator.
+    """
+    return bank_of([
+        sketch_dataset(params, z, rows=rows, buckets=buckets, batch=batch,
+                       paired=paired, dtype=dtype, engine=engine)
+        for z in zs
+    ])

@@ -72,13 +72,41 @@ def paired_hash_histogram(
     return histogram_kernel.paired_hash_histogram(z, w, mask, interpret=interpret)
 
 
-def sketch_query(q: Array, w: Array, counts: Array, mode: str = "auto") -> Array:
+def sketch_query(
+    q: Array,
+    w: Array,
+    counts: Array,
+    mode: str = "auto",
+    sketch_idx: Optional[Array] = None,
+) -> Array:
     """Batched RACE query: ``(m,)`` mean counts at the query codes.
 
     The kernel grids over query tiles, so any batch size (DFO sphere batches,
     quadratic-refine trust-region batches with m in the thousands) stays on
     the kernel path — there is no large-m reference fallback.
+
+    With ``sketch_idx`` (``(m,)`` int32) the query is *banked*: ``counts`` is
+    a ``(S, R, B)`` stack and point ``i`` gathers from table
+    ``sketch_idx[i]`` — one fused call serves S tenants (DESIGN.md §9).
     """
+    if sketch_idx is not None:
+        if counts.ndim != 3:
+            raise ValueError(
+                f"sketch_idx requires banked (S, R, B) counts; got shape "
+                f"{counts.shape}"
+            )
+        if mode == "ref" or (
+            mode == "auto" and not _on_tpu() and q.shape[-1] < 64
+        ):
+            return ref.sketch_query_banked(q, w, counts, sketch_idx)
+        interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+        return query_kernel.sketch_query_banked(q, w, counts, sketch_idx,
+                                                interpret=interpret)
+    if counts.ndim != 2:
+        raise ValueError(
+            f"banked (S, R, B) counts need a sketch_idx; got shape "
+            f"{counts.shape}"
+        )
     if mode == "ref" or (mode == "auto" and not _on_tpu() and q.shape[-1] < 64):
         return ref.sketch_query(q, w, counts)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
@@ -117,11 +145,12 @@ def build_sketch(
 
 @functools.partial(jax.jit, static_argnames=("paired", "mode"))
 def query_theta_with_weights(
-    sk: sketch_lib.Sketch,
+    sk,
     w: Array,
     theta_tilde: Array,
     paired: bool = True,
     mode: str = "auto",
+    sketch_idx: Optional[Array] = None,
 ) -> Array:
     """Fused surrogate-risk estimate with pre-transposed kernel weights.
 
@@ -134,10 +163,29 @@ def query_theta_with_weights(
     PRP regression/probe losses with ``paired=True``, the single-sided
     classification margin loss with ``paired=False`` (the ``2^p`` Thm-3
     factor is applied by the caller on top of this estimate).
+
+    ``sk`` may be a :class:`~repro.core.sketch.SketchBank` instead of a
+    single :class:`~repro.core.sketch.Sketch`; then ``sketch_idx`` (``(m,)``
+    int32, one entry per 2-D ``theta_tilde`` row) routes each point to its
+    table and the estimator denominator is that sketch's own ``n`` — one
+    fused ``F·(2k+1)``-point call serves many tenants (DESIGN.md §9).
     """
+    banked = isinstance(sk, sketch_lib.SketchBank)
+    if banked != (sketch_idx is not None):
+        raise ValueError("sketch_idx must be given iff sk is a SketchBank")
     q = lsh.augment_query(lsh.normalize_query(theta_tilde))
-    mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)
-    denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * (2.0 if paired else 1.0)
+    if banked:
+        if theta_tilde.ndim != 2:
+            raise ValueError("banked queries need a (m, dim) theta batch")
+        mean_count = sketch_query(q, w, sk.counts, mode=mode,
+                                  sketch_idx=sketch_idx)
+        n_per = sk.n[sketch_idx]
+    else:
+        mean_count = sketch_query(jnp.atleast_2d(q), w, sk.counts, mode=mode)
+        n_per = sk.n
+    denom = jnp.maximum(n_per.astype(jnp.float32), 1.0) * (
+        2.0 if paired else 1.0
+    )
     est = mean_count / denom
     return est[0] if theta_tilde.ndim == 1 else est
 

@@ -188,3 +188,31 @@ def sketch_query(q: Array, w: Array, counts: Array) -> Array:
     rows = jnp.arange(counts.shape[0], dtype=jnp.int32)
     gathered = counts[rows[None, :], codes].astype(jnp.float32)  # (m, R)
     return jnp.mean(gathered, axis=-1)
+
+
+def sketch_query_banked(
+    q: Array, w: Array, counts: Array, sketch_idx: Array
+) -> Array:
+    """Banked RACE gather: each query point reads its own counter table.
+
+    The hashing pass is shared (one projection matmul for all m points —
+    the bank's sketches use ONE hash family); only the gather fans out over
+    the ``S`` stacked tables. Point ``i`` equals
+    ``sketch_query(q[i:i+1], w, counts[sketch_idx[i]])`` bit-for-bit.
+
+    Args:
+      q: ``(m, d)`` query vectors (already normalized/augmented).
+      w: ``(p, d, R)`` hyperplane normals (shared across the bank).
+      counts: ``(S, R, 2**p)`` stacked sketch counters.
+      sketch_idx: ``(m,)`` int32 — which table each point gathers from.
+
+    Returns:
+      ``(m,)`` float32 — mean count over the R rows (caller normalizes by
+      the per-sketch n).
+    """
+    codes = srp_hash(q, w)  # (m, R)
+    rows = jnp.arange(counts.shape[1], dtype=jnp.int32)
+    gathered = counts[
+        sketch_idx[:, None], rows[None, :], codes
+    ].astype(jnp.float32)  # (m, R)
+    return jnp.mean(gathered, axis=-1)

@@ -15,6 +15,15 @@ Schedule (DESIGN.md §3.3):
   - each output block (bm, 1) is revisited across the whole (R, d) subgrid
     and initialized once at the first step, so arbitrarily large query
     batches (m >> 128) stream through without a reference fallback.
+
+The banked variant (``sketch_query_banked``, DESIGN.md §9) serves S sketches
+that share one hash family: the projection/code pipeline is untouched (one
+matmul pass for all m points) and only the epilogue changes — the counter
+input is the stacked ``(S, br, B)`` row tile and each query row one-hot
+selects its own table (``sel @ counts``, an MXU contraction) before the
+bucket gather. ``S = 1`` reduces to the unbanked epilogue exactly (the
+select matrix is all-ones), and integer counts make the f32 reductions
+order-independent, so the slice agreement is bit-for-bit.
 """
 
 from __future__ import annotations
@@ -110,4 +119,110 @@ def sketch_query(
         scratch_shapes=[pltpu.VMEM((p, bm, br), jnp.float32)],
         interpret=interpret,
     )(qp, wp, cp)
+    return out[:m, 0] / r
+
+
+def _banked_query_kernel(
+    q_ref, w_ref, c_ref, idx_ref, o_ref, acc_ref, *, planes: int, k_steps: int
+):
+    j = pl.program_id(1)  # row (R) tile
+    k = pl.program_id(2)  # feature (d) tile
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (bm, bd)
+    for p in range(planes):
+        acc_ref[p, :, :] += jnp.dot(
+            q, w_ref[p, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        s, _, buckets = c_ref.shape
+        bm = acc_ref.shape[1]
+        codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bm, br)
+        for p in range(planes):
+            codes += (acc_ref[p, :, :] > 0).astype(jnp.int32) << p
+        iota_b = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes[:, :, None] == iota_b).astype(jnp.float32)  # (bm,br,B)
+        # Per-query table select: (bm, S) one-hot against the sketch axis,
+        # contracted with the stacked (S, br*B) tile on the MXU. Counts are
+        # integers, so the extra f32 contraction is exact.
+        iota_s = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)
+        sel = (idx_ref[...] == iota_s).astype(jnp.float32)  # (bm, S)
+        counts = c_ref[...].astype(jnp.float32).reshape(s, -1)  # (S, br*B)
+        counts_m = jnp.dot(sel, counts,
+                           preferred_element_type=jnp.float32)  # (bm, br*B)
+        gathered = jnp.sum(onehot.reshape(bm, -1) * counts_m, axis=-1)
+        o_ref[...] += gathered[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_r", "block_d", "interpret")
+)
+def sketch_query_banked(
+    q: Array,
+    w: Array,
+    counts: Array,
+    sketch_idx: Array,
+    *,
+    block_m: int = 128,
+    block_r: int = 512,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Banked RACE query: per-point table select over a stacked counter bank.
+
+    See ``ref.sketch_query_banked``. The VMEM counter tile grows S-fold
+    (``(S, br, B)``), so banks with large ``S * B`` should shrink ``block_r``
+    accordingly; at the serving shapes (S ≤ 64, B = 16) the default tile is
+    ~0.5–2 MB.
+
+    Args:
+      q: ``(m, d)`` normalized/augmented query vectors; m is unrestricted.
+      w: ``(p, d, R)`` hyperplane normals (one hash family for the bank).
+      counts: ``(S, R, 2**p)`` stacked counters.
+      sketch_idx: ``(m,)`` int32 table index per query point.
+
+    Returns:
+      ``(m,)`` float32 mean count over rows of each point's own table.
+    """
+    m, d = q.shape
+    p, dw, r = w.shape
+    s = counts.shape[0]
+    assert d == dw and counts.shape == (s, r, 1 << p)
+
+    bm = min(block_m, max(8, m))
+    br = min(block_r, r)
+    bd = min(block_d, d)
+    m_pad, r_pad, d_pad = (-m) % bm, (-r) % br, (-d) % bd
+    qp = jnp.pad(q, ((0, m_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    # Padded rows must contribute 0: zero counters for padded R rows. Padded
+    # query rows read table 0 and are sliced away below.
+    cp = jnp.pad(counts, ((0, 0), (0, r_pad), (0, 0)))
+    idxp = jnp.pad(sketch_idx.astype(jnp.int32), (0, m_pad))[:, None]
+    grid = ((m + m_pad) // bm, (r + r_pad) // br, (d + d_pad) // bd)
+
+    out = pl.pallas_call(
+        functools.partial(_banked_query_kernel, planes=p, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((p, bd, br), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((s, br, 1 << p), lambda i, j, k: (0, j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, bm, br), jnp.float32)],
+        interpret=interpret,
+    )(qp, wp, cp, idxp)
     return out[:m, 0] / r

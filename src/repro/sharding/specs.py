@@ -220,6 +220,38 @@ def check_fleet_divisible(f: int, mesh: Mesh, axis: str) -> None:
         )
 
 
+def bank_specs(axis: str = "bank") -> Tuple[P, P]:
+    """PartitionSpecs for banked fleet training (DESIGN.md §9).
+
+    Single owner of the bank-sharding convention used by
+    ``core.distributed.fleet_fit_banked``: the gateway's tenants split over
+    ``axis`` — the ``(S, R, B)`` counter bank and per-sketch counts ``(S,)``
+    shard their LEADING bank axis, and every per-member array (member-major
+    ``(S*F, ...)`` iterates, keys, σ/lr ladders, traces) shards its leading
+    axis over the SAME mesh axis, so each device holds its tenants' counter
+    tables together with exactly those tenants' fleet members. Hash params
+    and scalars replicate. Counters are read-only during optimization and
+    members never query another device's tenants, so the layout needs zero
+    per-step communication — the bank axis batches exactly like the fleet
+    axis (``fleet_specs``), only the counters shard instead of replicating.
+
+    Returns:
+      ``(bank, replicated)`` PartitionSpecs; ``bank`` serves both the
+      counter stack and the member-major arrays.
+    """
+    return P(axis), P()
+
+
+def check_bank_divisible(s: int, mesh: Mesh, axis: str) -> None:
+    """Fail fast when the bank cannot split evenly over the mesh axis."""
+    size = mesh.shape[axis]
+    if s % size:
+        raise ValueError(
+            f"bank size {s} not divisible by mesh axis {axis!r} ({size} "
+            f"devices); pad the bank or choose S as a multiple"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Inputs / activations / caches
 # ---------------------------------------------------------------------------

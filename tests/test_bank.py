@@ -1,0 +1,658 @@
+"""SketchBank: multi-sketch API + banked fused queries (DESIGN.md §9).
+
+Pins the PR-4 contracts:
+
+* **Bank algebra** — ``bank_of``/``select`` round-trip, ``merge_groups``
+  (including narrow-dtype saturation), ``sketch_dataset_many`` slices
+  bit-identical to standalone builds.
+* **Banked query** — the ref oracle, the Pallas kernel (interpret), and
+  both engine paths match a loop of per-sketch queries bit-for-bit.
+* **Banked fleet** — ``fleet.make_loss_fn(bank, member_map)`` routes each
+  member-major block to its own table; duplicate tenants produce identical
+  traces inside one fused program; ``select_theta_many`` is the fused
+  per-tenant selection.
+* **fit_many** — ``S = 1`` is bit-identical to ``fit(restarts=F)`` for all
+  three drivers (the acceptance criterion), and multi-tenant fits recover
+  each tenant's model.
+* **Bank-axis sharding** — ``fleet_fit_banked`` on a 1-device mesh matches
+  the meshless run bit-for-bit; divisibility checks fail fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (classification, dfo, distributed, fleet, lsh, probes,
+                        regression, sketch as sketch_lib)
+from repro.data import datasets
+from repro.kernels import ops, ref
+from repro.kernels import sketch_query as query_kernel
+from repro.sharding import specs as sharding_specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _unit_ball(z):
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1.0)
+
+
+def _bank_problem(s=3, r=48, p=3, d=5, n0=60, paired=True, dtype=jnp.int32):
+    """S tenants' sketches under one hash family (+ the params).
+
+    ``paired=True`` PRP-inserts raw unit-ball points; ``paired=False``
+    mirrors the classification driver (pre-augmented single-sided inserts).
+    """
+    params = lsh.init_srp(jax.random.PRNGKey(0), r, p, d + 2)
+    zs = [
+        _unit_ball(0.4 * jax.random.normal(jax.random.PRNGKey(i + 1),
+                                           (n0 + 10 * i, d)))
+        for i in range(s)
+    ]
+    ins = zs if paired else [lsh.augment_data(z) for z in zs]
+    bank = sketch_lib.sketch_dataset_many(params, ins, batch=32,
+                                          paired=paired, dtype=dtype)
+    return params, zs, bank
+
+
+# ---------------------------------------------------------------------------
+# Bank algebra
+# ---------------------------------------------------------------------------
+
+
+class TestSketchBank:
+    def test_bank_of_select_roundtrip(self):
+        params, zs, bank = _bank_problem()
+        assert bank.size == 3 and bank.counts.shape[0] == 3
+        singles = [
+            sketch_lib.sketch_dataset(params, z, batch=32, paired=True)
+            for z in zs
+        ]
+        for i, sk in enumerate(singles):
+            got = bank.select(i)
+            np.testing.assert_array_equal(np.asarray(got.counts),
+                                          np.asarray(sk.counts))
+            assert int(got.n) == int(sk.n)
+
+    def test_bank_of_rejects_empty_and_heterogeneous(self):
+        with pytest.raises(ValueError):
+            sketch_lib.bank_of([])
+        a = sketch_lib.init_sketch(4, 8)
+        b = sketch_lib.init_sketch(4, 16)
+        with pytest.raises(ValueError):
+            sketch_lib.bank_of([a, b])
+
+    def test_merge_groups_equals_pairwise_merge(self):
+        _, _, bank = _bank_problem(s=4)
+        grouped = bank.merge_groups(jnp.array([0, 1, 0, 1]))
+        assert grouped.size == 2
+        want0 = sketch_lib.merge(bank.select(0), bank.select(2))
+        want1 = sketch_lib.merge(bank.select(1), bank.select(3))
+        np.testing.assert_array_equal(np.asarray(grouped.counts[0]),
+                                      np.asarray(want0.counts))
+        np.testing.assert_array_equal(np.asarray(grouped.counts[1]),
+                                      np.asarray(want1.counts))
+        assert int(grouped.n[0]) == int(want0.n)
+        assert int(grouped.n[1]) == int(want1.n)
+
+    def test_merge_groups_num_groups_keeps_empty_slot(self):
+        _, _, bank = _bank_problem(s=2)
+        grouped = bank.merge_groups(jnp.array([2, 2]), num_groups=3)
+        assert grouped.size == 3
+        np.testing.assert_array_equal(np.asarray(grouped.counts[0]),
+                                      np.zeros_like(grouped.counts[0]))
+        assert int(grouped.n[2]) == int(bank.n[0] + bank.n[1])
+
+    def test_merge_groups_saturates_narrow_dtypes(self):
+        """The satellite bugfix carried into the bank: near-full int16
+        tables must pin at the dtype max, not wrap negative."""
+        full = jnp.full((2, 2, 4), 30000, jnp.int16)
+        bank = sketch_lib.SketchBank(counts=full,
+                                     n=jnp.array([5, 7], jnp.int32))
+        merged = bank.merge_groups(jnp.array([0, 0]))
+        assert merged.counts.dtype == jnp.int16
+        np.testing.assert_array_equal(
+            np.asarray(merged.counts),
+            np.full((1, 2, 4), 32767, np.int16),
+        )
+        assert int(merged.n[0]) == 12
+
+    def test_sketch_dataset_many_matches_stacked_input(self):
+        params, zs, bank = _bank_problem(s=2, n0=50)
+        stacked = jnp.stack([zs[0], zs[1][:50]])
+        bank2 = sketch_lib.sketch_dataset_many(params, stacked, batch=32,
+                                               paired=True)
+        np.testing.assert_array_equal(np.asarray(bank2.counts[0]),
+                                      np.asarray(bank.counts[0]))
+
+
+class TestMergeSaturation:
+    def test_sketch_merge_saturates_int16(self):
+        """The pre-PR-4 ``merge`` wrapped narrow counters: 30000 + 30000 ->
+        -5536 in int16. It must saturate like update/prp_update."""
+        a = sketch_lib.Sketch(counts=jnp.full((2, 4), 30000, jnp.int16),
+                              n=jnp.int32(5))
+        merged = sketch_lib.merge(a, a)
+        assert merged.counts.dtype == jnp.int16
+        np.testing.assert_array_equal(np.asarray(merged.counts),
+                                      np.full((2, 4), 32767, np.int16))
+        assert int(merged.n) == 10
+
+    def test_sketch_merge_saturates_uint16_and_int8(self):
+        for dtype, big in ((jnp.uint16, 60000), (jnp.int8, 100)):
+            info = jnp.iinfo(dtype)
+            a = sketch_lib.Sketch(counts=jnp.full((1, 2), big, dtype),
+                                  n=jnp.int32(1))
+            merged = sketch_lib.merge(a, a)
+            assert int(merged.counts[0, 0]) == info.max
+
+    def test_sketch_merge_int32_still_exact(self):
+        a = sketch_lib.Sketch(counts=jnp.array([[1, 2]], jnp.int32),
+                              n=jnp.int32(1))
+        b = sketch_lib.Sketch(counts=jnp.array([[3, 4]], jnp.int32),
+                              n=jnp.int32(2))
+        merged = sketch_lib.merge(a, b)
+        np.testing.assert_array_equal(np.asarray(merged.counts),
+                                      np.array([[4, 6]], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Banked query: oracle, kernel, ops dispatch, scan path
+# ---------------------------------------------------------------------------
+
+
+class TestBankedQuery:
+    def _query_batch(self, m, raw_dim, seed=9):
+        q = jax.random.normal(jax.random.PRNGKey(seed), (m, raw_dim))
+        return lsh.augment_query(lsh.normalize_query(q))
+
+    def test_ref_banked_matches_per_sketch_loop(self):
+        """Acceptance: the banked query equals a loop of per-sketch
+        ``sketch_query`` calls bit-for-bit."""
+        params, _, bank = _bank_problem()
+        w = ops.from_lsh_params(params)
+        m = 23
+        qa = self._query_batch(m, params.dim - 2)
+        idx = jnp.arange(m, dtype=jnp.int32) % bank.size
+        banked = ref.sketch_query_banked(qa, w, bank.counts, idx)
+        loop = jnp.stack([
+            ref.sketch_query(qa[i:i + 1], w, bank.counts[int(idx[i])])[0]
+            for i in range(m)
+        ])
+        np.testing.assert_array_equal(np.asarray(banked), np.asarray(loop))
+
+    @pytest.mark.parametrize("m,block_m,block_r", [(17, 128, 512),
+                                                   (300, 64, 16)])
+    def test_pallas_banked_matches_ref(self, m, block_m, block_r):
+        """Interpret-mode banked kernel ≡ oracle, including m-tiling and
+        row-tile padding."""
+        params, _, bank = _bank_problem(r=40)
+        w = ops.from_lsh_params(params)
+        qa = self._query_batch(m, params.dim - 2)
+        idx = (jnp.arange(m, dtype=jnp.int32) * 7) % bank.size
+        got = query_kernel.sketch_query_banked(
+            qa, w, bank.counts, idx,
+            block_m=block_m, block_r=block_r, interpret=True,
+        )
+        want = ref.sketch_query_banked(qa, w, bank.counts, idx)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_dispatch_validates_shapes(self):
+        params, _, bank = _bank_problem()
+        w = ops.from_lsh_params(params)
+        qa = self._query_batch(4, params.dim - 2)
+        idx = jnp.zeros((4,), jnp.int32)
+        with pytest.raises(ValueError):  # banked counts need an index
+            ops.sketch_query(qa, w, bank.counts)
+        with pytest.raises(ValueError):  # index needs banked counts
+            ops.sketch_query(qa, w, bank.counts[0], sketch_idx=idx)
+
+    @pytest.mark.parametrize("paired", [True, False])
+    def test_query_theta_with_weights_banked(self, paired):
+        params, _, bank = _bank_problem(paired=paired)
+        w = ops.from_lsh_params(params)
+        m = 12
+        thetas = jax.random.normal(jax.random.PRNGKey(3),
+                                   (m, params.dim - 2))
+        idx = jnp.arange(m, dtype=jnp.int32) % bank.size
+        got = ops.query_theta_with_weights(bank, w, thetas, paired=paired,
+                                           sketch_idx=idx)
+        want = jnp.stack([
+            ops.query_theta_with_weights(bank.select(int(idx[i])), w,
+                                         thetas[i], paired=paired)
+            for i in range(m)
+        ])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_query_theta_with_weights_banked_needs_idx(self):
+        params, _, bank = _bank_problem()
+        w = ops.from_lsh_params(params)
+        thetas = jnp.ones((2, params.dim - 2))
+        with pytest.raises(ValueError):
+            ops.query_theta_with_weights(bank, w, thetas)
+
+    def test_scan_path_query_theta_banked(self):
+        params, _, bank = _bank_problem()
+        m = 9
+        thetas = jax.random.normal(jax.random.PRNGKey(4),
+                                   (m, params.dim - 2))
+        idx = jnp.arange(m, dtype=jnp.int32) % bank.size
+        got = sketch_lib.query_theta_banked(bank, params, thetas, idx,
+                                            paired=True)
+        want = jnp.stack([
+            sketch_lib.query_theta(bank.select(int(idx[i])), params,
+                                   thetas[i], paired=True)
+            for i in range(m)
+        ])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_per_sketch_denominator(self):
+        """Each point divides by ITS sketch's n (tenants differ in n here)."""
+        params, _, bank = _bank_problem(s=2, n0=40)
+        assert int(bank.n[0]) != int(bank.n[1])
+        theta = jax.random.normal(jax.random.PRNGKey(5),
+                                  (1, params.dim - 2))
+        thetas = jnp.concatenate([theta, theta])  # same point, two tenants
+        est = sketch_lib.query_theta_banked(
+            bank, params, thetas, jnp.array([0, 1], jnp.int32), paired=True
+        )
+        mean0 = float(est[0]) * 2.0 * float(bank.n[0])
+        mean1 = float(est[1]) * 2.0 * float(bank.n[1])
+        # Raw mean counts are per-table; rescaling by each n recovers them.
+        assert mean0 != pytest.approx(mean1) or \
+            float(est[0]) != pytest.approx(float(est[1]))
+
+
+# ---------------------------------------------------------------------------
+# Banked fleet: loss routing, selection, distributed
+# ---------------------------------------------------------------------------
+
+
+class TestBankedLoss:
+    def test_member_map_required_iff_bank(self):
+        params, _, bank = _bank_problem()
+        sk = bank.select(0)
+        with pytest.raises(ValueError):
+            fleet.make_loss_fn(bank, params)
+        with pytest.raises(ValueError):
+            fleet.make_loss_fn(sk, params,
+                               member_map=jnp.zeros((2,), jnp.int32))
+
+    def test_banked_routing_matches_per_tenant_raw_query(self):
+        """Routing ground truth, bit-for-bit: the (unjitted) banked query on
+        a member-major batch == each tenant's block through that tenant's
+        lone sketch. (Jitted closures compile DIFFERENT graphs for the
+        banked and lone shapes, so XLA fusion may drift them by 1 ULP —
+        the raw computation is IEEE-exact and must agree exactly.)"""
+        params, _, bank = _bank_problem(s=3)
+        f_per, t = 2, 5
+        member_map = jnp.repeat(jnp.arange(3, dtype=jnp.int32), f_per)
+        thetas = jax.random.normal(jax.random.PRNGKey(6),
+                                   (3 * f_per * t, params.dim - 2))
+        idx = jnp.repeat(member_map, t)
+        got = sketch_lib.query_theta_banked(bank, params, thetas, idx,
+                                            paired=True).reshape(3, -1)
+        blocks = thetas.reshape(3, f_per * t, -1)
+        for s_i in range(3):
+            want = sketch_lib.query_theta(bank.select(s_i), params,
+                                          blocks[s_i], paired=True)
+            np.testing.assert_array_equal(np.asarray(got[s_i]),
+                                          np.asarray(want))
+
+    @pytest.mark.parametrize("engine", ["scan", "kernel"])
+    def test_banked_closure_matches_per_tenant_closures(self, engine):
+        """A member-major (S*F*t, dim) batch through the banked jitted
+        closure == each tenant's block through that tenant's lone-sketch
+        closure, to fp tolerance (XLA fuses the two graph shapes
+        differently; the underlying gathers are exact — see the raw-query
+        test above)."""
+        params, _, bank = _bank_problem(s=3)
+        f_per, t = 2, 5
+        member_map = jnp.repeat(jnp.arange(3, dtype=jnp.int32), f_per)
+        banked = fleet.make_loss_fn(bank, params, paired=True, l2=1e-2,
+                                    engine=engine, d=params.dim - 3,
+                                    member_map=member_map)
+        thetas = jax.random.normal(jax.random.PRNGKey(6),
+                                   (3 * f_per * t, params.dim - 2))
+        got = banked(thetas).reshape(3, f_per * t)
+        blocks = thetas.reshape(3, f_per * t, -1)
+        for s_i in range(3):
+            single = fleet.make_loss_fn(bank.select(s_i), params,
+                                        paired=True, l2=1e-2, engine=engine,
+                                        d=params.dim - 3)
+            np.testing.assert_allclose(np.asarray(got[s_i]),
+                                       np.asarray(single(blocks[s_i])),
+                                       rtol=1e-6)
+
+    def test_non_member_major_batch_raises(self):
+        params, _, bank = _bank_problem(s=3)
+        loss = fleet.make_loss_fn(
+            bank, params, member_map=jnp.arange(3, dtype=jnp.int32)
+        )
+        with pytest.raises(ValueError):
+            loss(jnp.ones((4, params.dim - 2)))  # 4 % 3 != 0
+
+    def test_one_sketch_bank_is_the_lone_sketch_program(self):
+        """S = 1 slices to the unbanked closure — the bit-identity
+        guarantee is by construction, not by luck of XLA fusion."""
+        params, _, bank = _bank_problem(s=1)
+        banked = fleet.make_loss_fn(bank, params, paired=True,
+                                    member_map=jnp.zeros((2,), jnp.int32))
+        single = fleet.make_loss_fn(bank.select(0), params, paired=True)
+        thetas = jax.random.normal(jax.random.PRNGKey(8),
+                                   (6, params.dim - 2))
+        np.testing.assert_array_equal(np.asarray(banked(thetas)),
+                                      np.asarray(single(thetas)))
+
+    def test_duplicate_tenants_identical_blocks_in_one_program(self):
+        """Routing proof inside ONE compiled fleet program: two tenants with
+        identical sketches and identical member seeds produce bit-identical
+        loss traces; distinct sketches do not."""
+        params, zs, bank = _bank_problem(s=2)
+        dup = sketch_lib.bank_of([bank.select(0), bank.select(0)])
+        cfg = dfo.DFOConfig(steps=10, num_queries=4, sigma=0.4,
+                            learning_rate=0.5, decay=0.99)
+        keys1 = jax.random.split(jax.random.PRNGKey(0), 1)
+        keys = jnp.concatenate([keys1, keys1])  # same seed per tenant
+        th0 = jnp.zeros((2, params.dim - 2))
+        member_map = jnp.arange(2, dtype=jnp.int32)
+        loss_dup = fleet.make_loss_fn(dup, params, paired=True,
+                                      member_map=member_map)
+        res = dfo.minimize_fleet(loss_dup, th0, keys, cfg)
+        np.testing.assert_array_equal(np.asarray(res.losses[0]),
+                                      np.asarray(res.losses[1]))
+        loss_two = fleet.make_loss_fn(bank, params, paired=True,
+                                      member_map=member_map)
+        res2 = dfo.minimize_fleet(loss_two, th0, keys, cfg)
+        assert not np.array_equal(np.asarray(res2.losses[0]),
+                                  np.asarray(res2.losses[1]))
+
+
+class TestSelectThetaMany:
+    def _setup(self, select, guard):
+        params, _, bank = _bank_problem(s=1)
+        f, dim = 3, params.dim - 2
+        thetas = jax.random.normal(jax.random.PRNGKey(10), (f, dim))
+        traces = jax.random.uniform(jax.random.PRNGKey(11), (f, 7))
+        single_loss = fleet.make_loss_fn(bank.select(0), params, paired=True)
+        sel_loss = fleet.make_loss_fn(
+            bank, params, paired=True,
+            member_map=jnp.arange(1, dtype=jnp.int32)
+        )
+        g = jnp.zeros((dim,)) if guard else None
+        a = fleet.select_theta(single_loss, thetas, traces, select=select,
+                               basin_tol=0.5, guard=g)
+        b = fleet.select_theta_many(sel_loss, thetas[None], traces[None],
+                                    select=select, basin_tol=0.5, guard=g)
+        return a, b
+
+    @pytest.mark.parametrize("select", ["best", "average"])
+    @pytest.mark.parametrize("guard", [False, True])
+    def test_s1_matches_select_theta(self, select, guard):
+        (ta, tra, va), (tb, trb, vb) = self._setup(select, guard)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb[0]))
+        np.testing.assert_array_equal(np.asarray(tra), np.asarray(trb[0]))
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb[0]))
+
+    def test_per_tenant_argmin(self):
+        """Each tenant picks ITS own best member (different tenants pick
+        different indices here)."""
+        params, _, bank = _bank_problem(s=2)
+        sel_loss = fleet.make_loss_fn(
+            bank, params, paired=True,
+            member_map=jnp.arange(2, dtype=jnp.int32)
+        )
+        f, dim = 4, params.dim - 2
+        thetas = jax.random.normal(jax.random.PRNGKey(12), (2, f, dim))
+        traces = jnp.tile(jnp.arange(f, dtype=jnp.float32)[None, :, None],
+                          (2, 1, 3))
+        theta, trace, vals = fleet.select_theta_many(sel_loss, thetas, traces)
+        for s_i in range(2):
+            best = int(jnp.argmin(vals[s_i]))
+            np.testing.assert_array_equal(np.asarray(theta[s_i]),
+                                          np.asarray(thetas[s_i, best]))
+            np.testing.assert_array_equal(np.asarray(trace[s_i]),
+                                          np.asarray(traces[s_i, best]))
+
+
+# ---------------------------------------------------------------------------
+# fit_many: the three drivers
+# ---------------------------------------------------------------------------
+
+
+def _reg_cfg(restarts=2, steps=20):
+    return regression.StormRegressorConfig(
+        rows=64, restarts=restarts,
+        dfo=dfo.DFOConfig(steps=steps, num_queries=6, sigma=0.5,
+                          sigma_decay=0.995, learning_rate=2.0, decay=0.995,
+                          average_tail=0.5),
+    )
+
+
+class TestFitManyRegression:
+    def test_s1_bit_identical_to_fit(self):
+        """ACCEPTANCE: fit_many(S=1, restarts=F) ≡ fit(restarts=F) at trace
+        level — losses, per-member fleet losses, theta, intercept."""
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(0), 300, 4,
+                                           noise=0.2, condition=3)
+        cfg = _reg_cfg(restarts=3)
+        single = regression.fit(jax.random.PRNGKey(5), x, y, cfg)
+        many = regression.fit_many(jax.random.PRNGKey(5), x[None], y[None],
+                                   cfg)
+        np.testing.assert_array_equal(np.asarray(single.losses),
+                                      np.asarray(many.losses[0]))
+        np.testing.assert_array_equal(np.asarray(single.fleet_losses),
+                                      np.asarray(many.fleet_losses[0]))
+        np.testing.assert_array_equal(np.asarray(single.theta),
+                                      np.asarray(many.theta[0]))
+        np.testing.assert_array_equal(np.asarray(single.intercept),
+                                      np.asarray(many.intercept[0]))
+        np.testing.assert_array_equal(np.asarray(single.sketch.counts),
+                                      np.asarray(many.bank.counts[0]))
+
+    def test_s1_average_mode_bit_identical(self):
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(1), 250, 3,
+                                           noise=0.3, condition=2)
+        cfg = regression.StormRegressorConfig(
+            rows=48, restarts=3, restart_select="average",
+            dfo=_reg_cfg().dfo,
+        )
+        single = regression.fit(jax.random.PRNGKey(6), x, y, cfg)
+        many = regression.fit_many(jax.random.PRNGKey(6), x[None], y[None],
+                                   cfg)
+        np.testing.assert_array_equal(np.asarray(single.theta),
+                                      np.asarray(many.theta[0]))
+
+    def test_multi_tenant_recovers_each_model(self):
+        """Two tenants with OPPOSITE targets: each recovered model must fit
+        its own tenant (and therefore not the other's)."""
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(2), 400, 3,
+                                           noise=0.1, condition=2)
+        xs = jnp.stack([x, x])
+        ys = jnp.stack([y, -y])
+        # R=128: at R=64 frozen-hash noise can promote a worse-than-guard
+        # member (the same noise ceiling the single-fit suite calibrates to).
+        cfg = regression.StormRegressorConfig(
+            rows=128, restarts=2,
+            dfo=dfo.DFOConfig(steps=100, num_queries=6, sigma=0.5,
+                              sigma_decay=0.995, learning_rate=2.0,
+                              decay=0.995, average_tail=0.5),
+        )
+        many = regression.fit_many(jax.random.PRNGKey(7), xs, ys, cfg)
+        mses = many.mse(xs, ys)
+        var = jnp.var(ys, axis=-1)
+        assert float(mses[0]) < float(var[0])
+        assert float(mses[1]) < float(var[1])
+        # The two recovered thetas point in opposite directions.
+        cos = float(jnp.dot(many.theta[0], many.theta[1])
+                    / (jnp.linalg.norm(many.theta[0])
+                       * jnp.linalg.norm(many.theta[1]) + 1e-12))
+        assert cos < 0.0
+
+    def test_ragged_tenants_and_select(self):
+        """Sequence input with differing n per tenant; .select round-trips."""
+        k = jax.random.PRNGKey(3)
+        x0, y0, _ = datasets.make_regression(k, 200, 3, noise=0.2)
+        x1, y1, _ = datasets.make_regression(jax.random.PRNGKey(4), 150, 3,
+                                             noise=0.2)
+        many = regression.fit_many(jax.random.PRNGKey(8), [x0, x1], [y0, y1],
+                                   _reg_cfg())
+        assert int(many.bank.n[0]) == 200 and int(many.bank.n[1]) == 150
+        one = many.select(1)
+        np.testing.assert_array_equal(np.asarray(one.theta),
+                                      np.asarray(many.theta[1]))
+        assert np.isfinite(float(one.mse(x1, y1)))
+
+    def test_mismatched_stacks_raise(self):
+        x = jnp.ones((2, 10, 3))
+        y = jnp.ones((3, 10))
+        with pytest.raises(ValueError):
+            regression.fit_many(jax.random.PRNGKey(0), x, y, _reg_cfg())
+
+
+class TestFitManyClassification:
+    def _cfg(self, restarts=2, steps=25):
+        return classification.StormClassifierConfig(
+            rows=64, planes=1, restarts=restarts,
+            dfo=dfo.DFOConfig(steps=steps, num_queries=6, sigma=0.5,
+                              learning_rate=1.0, decay=0.995,
+                              average_tail=0.5),
+        )
+
+    def test_s1_bit_identical_to_fit(self):
+        x, y, _ = datasets.make_classification(jax.random.PRNGKey(0), 300, 3,
+                                               margin=0.7)
+        cfg = self._cfg(restarts=3)
+        single = classification.fit(jax.random.PRNGKey(5), x, y, cfg)
+        many = classification.fit_many(jax.random.PRNGKey(5), x[None],
+                                       y[None], cfg)
+        np.testing.assert_array_equal(np.asarray(single.losses),
+                                      np.asarray(many.losses[0]))
+        np.testing.assert_array_equal(np.asarray(single.fleet_losses),
+                                      np.asarray(many.fleet_losses[0]))
+        np.testing.assert_array_equal(np.asarray(single.theta),
+                                      np.asarray(many.theta[0]))
+
+    def test_multi_tenant_opposite_labels(self):
+        x, y, _ = datasets.make_classification(jax.random.PRNGKey(1), 300, 3,
+                                               margin=0.7)
+        xs = jnp.stack([x, -x])
+        ys = jnp.stack([y, y])
+        many = classification.fit_many(jax.random.PRNGKey(6), xs, ys,
+                                       self._cfg(steps=50))
+        accs = many.accuracy(xs, ys)
+        assert float(accs[0]) > 0.85 and float(accs[1]) > 0.85
+        one = many.select(0)
+        assert float(one.accuracy(x, y)) > 0.85
+
+
+class TestFitProbeMany:
+    def _probe_dfo(self, steps=30):
+        return dfo.DFOConfig(steps=steps, num_queries=6, sigma=0.5,
+                             sigma_decay=0.995, learning_rate=2.0,
+                             decay=0.995, average_tail=0.5)
+
+    def _tenant(self, seed, d_model=5, n=200, flip=False):
+        feats = jax.random.normal(jax.random.PRNGKey(seed), (n, d_model))
+        w = jnp.arange(1.0, d_model + 1.0)
+        targets = feats @ (-w if flip else w)
+        # ONE shared hash key across tenants (the bank's requirement).
+        state = probes.sketch_features(jax.random.PRNGKey(42), feats,
+                                       targets,
+                                       probes.ProbeConfig(rows=128))
+        return feats, targets, state
+
+    def test_s1_bit_identical_to_fit_probe(self):
+        _, _, state = self._tenant(0)
+        cfg_d = self._probe_dfo()
+        single = probes.fit_probe(jax.random.PRNGKey(9), state, 5,
+                                  dfo_config=cfg_d, restarts=2)
+        many = probes.fit_probe_many(jax.random.PRNGKey(9), [state], 5,
+                                     dfo_config=cfg_d, restarts=2)
+        np.testing.assert_array_equal(np.asarray(single.theta),
+                                      np.asarray(many.theta[0]))
+        np.testing.assert_array_equal(np.asarray(single.intercept),
+                                      np.asarray(many.intercept[0]))
+        np.testing.assert_array_equal(np.asarray(single.losses),
+                                      np.asarray(many.losses[0]))
+        np.testing.assert_array_equal(np.asarray(single.fleet_losses),
+                                      np.asarray(many.fleet_losses[0]))
+
+    def test_heterogeneous_tenants_recover_own_heads(self):
+        f0, t0, s0 = self._tenant(0)
+        f1, t1, s1 = self._tenant(1, flip=True)
+        many = probes.fit_probe_many(jax.random.PRNGKey(10), [s0, s1], 5,
+                                     dfo_config=self._probe_dfo(steps=80),
+                                     restarts=2)
+        feats = jnp.stack([f0, f1])
+        targets = jnp.stack([t0, t1])
+        mses = many.mse(feats, targets)
+        var = jnp.var(targets, axis=-1)
+        assert float(mses[0]) < float(var[0])
+        assert float(mses[1]) < float(var[1])
+
+    def test_mismatched_hash_families_rejected(self):
+        _, _, s0 = self._tenant(0)
+        feats = jax.random.normal(jax.random.PRNGKey(2), (100, 5))
+        other = probes.sketch_features(jax.random.PRNGKey(77), feats,
+                                       feats[:, 0],
+                                       probes.ProbeConfig(rows=128))
+        with pytest.raises(ValueError):
+            probes.fit_probe_many(jax.random.PRNGKey(11), [s0, other], 5)
+
+    def test_empty_states_rejected(self):
+        with pytest.raises(ValueError):
+            probes.fit_probe_many(jax.random.PRNGKey(0), [], 5)
+
+
+# ---------------------------------------------------------------------------
+# Bank-axis sharding
+# ---------------------------------------------------------------------------
+
+
+class TestFleetFitBanked:
+    def _setup(self, s=2, f=2):
+        params, _, bank = _bank_problem(s=s)
+        cfg = dfo.DFOConfig(steps=12, num_queries=4, sigma=0.5,
+                            learning_rate=1.0, decay=0.99)
+        keys, th0, sig, lr = fleet.seed_fleet_many(
+            jax.random.PRNGKey(7), s, f, params.dim - 2, cfg
+        )
+        return params, bank, cfg, keys, th0, sig, lr
+
+    def test_one_device_mesh_matches_meshless(self):
+        params, bank, cfg, keys, th0, sig, lr = self._setup()
+        a = distributed.fleet_fit_banked(
+            bank, params, th0, keys, cfg, restarts_per_sketch=2,
+            mesh=None, sigma=sig, learning_rate=lr,
+        )
+        mesh = Mesh(np.array(jax.devices()[:1]), ("bank",))
+        b = distributed.fleet_fit_banked(
+            bank, params, th0, keys, cfg, restarts_per_sketch=2,
+            mesh=mesh, sigma=sig, learning_rate=lr,
+        )
+        np.testing.assert_array_equal(np.asarray(a.losses),
+                                      np.asarray(b.losses))
+        np.testing.assert_allclose(np.asarray(a.theta), np.asarray(b.theta),
+                                   atol=1e-6)
+
+    def test_member_count_validated(self):
+        params, bank, cfg, keys, th0, sig, lr = self._setup()
+        with pytest.raises(ValueError):
+            distributed.fleet_fit_banked(
+                bank, params, th0[:3], keys[:3], cfg, restarts_per_sketch=2,
+            )
+
+    def test_bank_specs_and_divisibility(self):
+        bank_spec, replicated = sharding_specs.bank_specs("bank")
+        assert bank_spec == jax.sharding.PartitionSpec("bank")
+        assert replicated == jax.sharding.PartitionSpec()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("bank",))
+        sharding_specs.check_bank_divisible(4, mesh, "bank")  # 4 % 1 == 0
+
+        class _FakeMesh:  # a 1-device CPU host cannot build a 2-way axis
+            shape = {"bank": 2}
+
+        with pytest.raises(ValueError):
+            sharding_specs.check_bank_divisible(3, _FakeMesh(), "bank")

@@ -1,0 +1,152 @@
+"""Engine dispatch: ``resolve_engine`` and the config → sketch threading.
+
+The ``auto`` rule has one owner (``sketch.resolve_engine``: kernel on TPU,
+scan elsewhere) and the ``engine`` knob threads through
+``StormRegressorConfig`` / ``ProbeConfig`` into ``sketch_dataset`` and the
+fleet loss closures — none of which had direct tests before this file.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (dfo, fleet, lsh, probes, regression,
+                        sketch as sketch_lib)
+from repro.data import datasets
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestResolveEngine:
+    def test_auto_resolution_pinned_on_this_host(self):
+        """On a non-TPU backend ``auto`` must resolve to ``scan`` (kernel
+        interpret mode is a debugging path, not a perf path)."""
+        assert jax.default_backend() != "tpu"
+        assert sketch_lib.resolve_engine("auto") == "scan"
+
+    def test_explicit_engines_pass_through(self):
+        assert sketch_lib.resolve_engine("scan") == "scan"
+        assert sketch_lib.resolve_engine("kernel") == "kernel"
+
+    @pytest.mark.parametrize("bad", ["", "Auto", "pallas", "ref"])
+    def test_unknown_engine_raises(self, bad):
+        with pytest.raises(ValueError):
+            sketch_lib.resolve_engine(bad)
+
+    def test_kernel_engine_rejects_shape_overrides(self):
+        params = lsh.init_srp(jax.random.PRNGKey(0), 16, 2, 5)
+        z = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (40, 3))
+        with pytest.raises(ValueError):
+            sketch_lib.sketch_dataset(params, z, rows=8, engine="kernel")
+
+
+class TestCrossEngineCounts:
+    def _inputs(self, n=150, d=4, seed=3):
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+        return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True),
+                               1.0)
+
+    @pytest.mark.parametrize("dtype", [jnp.int16, jnp.uint16, jnp.int8])
+    def test_narrow_dtype_cross_engine_agreement(self, dtype):
+        """Both engines must produce the same narrow counters — including
+        the int32-carry + final-saturation discipline (DESIGN.md §6)."""
+        params = lsh.init_srp(jax.random.PRNGKey(0), 32, 2, 6)
+        z = self._inputs()
+        scan = sketch_lib.sketch_dataset(params, z, batch=32, paired=True,
+                                         dtype=dtype, engine="scan")
+        kern = sketch_lib.sketch_dataset(params, z, batch=32, paired=True,
+                                         dtype=dtype, engine="kernel")
+        assert scan.counts.dtype == jnp.dtype(dtype)
+        assert kern.counts.dtype == jnp.dtype(dtype)
+        np.testing.assert_array_equal(np.asarray(scan.counts),
+                                      np.asarray(kern.counts))
+        assert int(scan.n) == int(kern.n) == z.shape[0]
+
+    def test_int8_saturates_identically_across_engines(self):
+        """Enough single-plane inserts to overflow int8: both engines must
+        pin at +127, not wrap."""
+        params = lsh.init_srp(jax.random.PRNGKey(5), 8, 1, 6)
+        z = self._inputs(n=400)
+        scan = sketch_lib.sketch_dataset(params, z, batch=64, paired=True,
+                                         dtype=jnp.int8, engine="scan")
+        kern = sketch_lib.sketch_dataset(params, z, batch=64, paired=True,
+                                         dtype=jnp.int8, engine="kernel")
+        assert int(jnp.max(scan.counts)) == 127  # 400 paired inserts, B=2
+        np.testing.assert_array_equal(np.asarray(scan.counts),
+                                      np.asarray(kern.counts))
+
+    def test_loss_closure_engines_agree(self):
+        """fleet.make_loss_fn(engine='scan') and ('kernel') estimate the
+        same batch identically on this host (integer gathers; the kernel
+        engine dispatches to the jnp reference for small d)."""
+        params = lsh.init_srp(jax.random.PRNGKey(0), 32, 2, 6)
+        sk = sketch_lib.sketch_dataset(params, self._inputs(), batch=32,
+                                       paired=True)
+        thetas = jax.random.normal(jax.random.PRNGKey(7), (9, 4))
+        a = fleet.make_loss_fn(sk, params, paired=True, engine="scan")(thetas)
+        b = fleet.make_loss_fn(sk, params, paired=True,
+                               engine="kernel")(thetas)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestConfigEngineThreading:
+    def test_regressor_config_engine_reaches_sketch(self):
+        """fit(engine='kernel') builds its sketch on the kernel stream path;
+        the counters must equal the scan build (and 'auto' must equal 'scan'
+        bit-for-bit on this host — pinning the auto resolution through the
+        config path, not just resolve_engine)."""
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(0), 200, 3,
+                                           noise=0.2)
+        cfg = regression.StormRegressorConfig(
+            rows=32, restarts=1,
+            dfo=dfo.DFOConfig(steps=8, num_queries=4, sigma=0.5,
+                              learning_rate=1.0, decay=0.99),
+        )
+        fits = {
+            eng: regression.fit(jax.random.PRNGKey(1), x, y,
+                                dataclasses.replace(cfg, engine=eng))
+            for eng in ("scan", "kernel", "auto")
+        }
+        np.testing.assert_array_equal(
+            np.asarray(fits["scan"].sketch.counts),
+            np.asarray(fits["kernel"].sketch.counts),
+        )
+        # auto == scan on this host: identical program end to end.
+        np.testing.assert_array_equal(np.asarray(fits["auto"].theta),
+                                      np.asarray(fits["scan"].theta))
+        np.testing.assert_array_equal(np.asarray(fits["auto"].losses),
+                                      np.asarray(fits["scan"].losses))
+
+    def test_regressor_config_narrow_dtype_engines_agree(self):
+        x, y, _ = datasets.make_regression(jax.random.PRNGKey(2), 150, 3,
+                                           noise=0.2)
+        cfg = regression.StormRegressorConfig(
+            rows=32, count_dtype="int16", restarts=1,
+            dfo=dfo.DFOConfig(steps=5, num_queries=4, sigma=0.5,
+                              learning_rate=1.0, decay=0.99),
+        )
+        a = regression.fit(jax.random.PRNGKey(3), x, y, cfg)
+        b = regression.fit(jax.random.PRNGKey(3), x, y,
+                           dataclasses.replace(cfg, engine="kernel"))
+        assert a.sketch.counts.dtype == jnp.int16
+        np.testing.assert_array_equal(np.asarray(a.sketch.counts),
+                                      np.asarray(b.sketch.counts))
+
+    def test_probe_config_engine_reaches_sketch_features(self):
+        feats = jax.random.normal(jax.random.PRNGKey(4), (120, 5))
+        targets = feats @ jnp.arange(1.0, 6.0)
+        states = {
+            eng: probes.sketch_features(
+                jax.random.PRNGKey(5), feats, targets,
+                probes.ProbeConfig(rows=32, engine=eng),
+            )
+            for eng in ("scan", "kernel")
+        }
+        np.testing.assert_array_equal(
+            np.asarray(states["scan"].sketch.counts),
+            np.asarray(states["kernel"].sketch.counts),
+        )
+        assert int(states["scan"].sketch.n) == 120
