@@ -1,0 +1,153 @@
+"""Serving-gateway benchmarks: fused banked ticks vs per-request loops.
+
+Two A/Bs back the gateway's existence (DESIGN.md §10), both as
+``name,us_per_call,derived`` rows:
+
+* **Query side** — one fused gateway tick answering S concurrent tenant
+  query requests (one banked ``query_theta_with_weights`` call, including
+  the gateway's host-side packing) against the per-request loop a server
+  has without the bank: S independent jitted per-sketch query calls. The
+  ``serve/gateway_speedup`` derived field is loop-time/tick-time
+  (acceptance bar >= 3 at S=8 smoke shapes).
+* **Ingest side** — the fused banked build (``sketch_dataset_many``, one
+  vmapped/gridded program for all S tenants) against the pre-PR-5 host loop
+  of S standalone ``sketch_dataset`` calls. ``serve/insert_banked_speedup``
+  is loop/fused (bar >= 2 at S=16).
+
+``run(smoke=True)`` shrinks shapes/iters for the CI harness-smoke job.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.kernels import ops
+from repro.serve.storm_gateway import QueryRequest, StormGateway
+
+# (S, concurrent requests per tenant, points per request, dim, R, p).
+# The full run keeps the acceptance-bar smoke shape (tiny per-request
+# compute — the overhead-bound regime the gateway exists for) alongside the
+# paper-scale shape where per-point compute partially amortizes the loop's
+# per-request overhead.
+QUERY_SHAPES = [(8, 3, 8, 8, 64, 3), (8, 3, 16, 16, 512, 4)]
+QUERY_SHAPES_SMOKE = [(8, 3, 8, 8, 64, 3)]
+
+# (S, rows per tenant, dim, R, p)
+INGEST_SHAPES = [(16, 256, 8, 64, 3), (16, 2048, 16, 512, 4)]
+INGEST_SHAPES_SMOKE = [(16, 256, 8, 64, 3)]
+
+
+def _ab_rows(rows: List[str], prefix_a: str, prefix_b: str, ratio_name: str,
+             tag: str, fn_a, fn_b, iters: int, work_a: float,
+             work_b: float) -> None:
+    """Interleaved best-of-N A/B timing (same estimator as bench_kernels)."""
+    fn_a()
+    fn_b()  # warm both before timing
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    us_a, us_b = best_a * 1e6, best_b * 1e6
+    rows.append(f"{prefix_a}/{tag},{us_a:.0f},{work_a / us_a:.2f}")
+    rows.append(f"{prefix_b}/{tag},{us_b:.0f},{work_b / us_b:.2f}")
+    rows.append(f"{ratio_name}/{tag},{us_a:.0f},{us_b / us_a:.2f}")
+
+
+def _bench_gateway_query(rows: List[str], smoke: bool) -> None:
+    """One fused tick serving S tenants' concurrent queries vs the
+    per-request loop answering the same traffic one jitted call at a time.
+
+    Each tenant has ``reqs`` outstanding query requests of ``q`` points —
+    the gateway's raison d'etre is that this whole mix coalesces into ONE
+    banked call per tick, while the no-bank server pays per-request
+    dispatch + transfer ``S * reqs`` times.
+    """
+    for (s, reqs, q, d, r, p) in (QUERY_SHAPES_SMOKE if smoke
+                                  else QUERY_SHAPES):
+        params = lsh.init_srp(jax.random.PRNGKey(0), r, p, d + 2)
+        w = ops.from_lsh_params(params)
+        # A warm bank: every tenant holds a small sketched stream.
+        zs = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (s, 256, d))
+        bank = sketch_lib.sketch_dataset_many(params, zs, batch=256,
+                                              engine="scan")
+        gw = StormGateway(params, s, query_slots=reqs * q, ingest_slots=8,
+                          bank=bank)
+        sketches = [bank.select(t) for t in range(s)]
+        thetas = [
+            np.asarray(jax.random.normal(jax.random.fold_in(
+                jax.random.PRNGKey(2), i), (q, d)), np.float32)
+            for i in range(s * reqs)
+        ]
+
+        def gateway_tick():
+            for i, th in enumerate(thetas):
+                gw.submit(QueryRequest(rid=i, tenant=i % s, thetas=th))
+            rep = gw.tick()
+            assert len(rep.results) == s * reqs
+
+        def per_request_loop():
+            # The no-bank server: one jitted per-sketch call per request
+            # (requests arrive as host arrays on both sides, so each call
+            # pays its own h2d transfer, like the gateway's fused one).
+            outs = [
+                ops.query_theta_with_weights(sketches[i % s], w,
+                                             jnp.asarray(th), paired=True)
+                for i, th in enumerate(thetas)
+            ]
+            jax.block_until_ready(outs[-1])
+
+        tag = f"S{s}_r{reqs}_q{q}_d{d}_R{r}"
+        _ab_rows(rows, "serve/gateway_tick", "serve/per_request_loop",
+                 "serve/gateway_speedup", tag, gateway_tick,
+                 per_request_loop, iters=40,
+                 work_a=s * reqs * q * r, work_b=s * reqs * q * r)
+
+
+def _bench_banked_ingest(rows: List[str], smoke: bool) -> None:
+    """Fused banked insert vs the pre-PR-5 host loop over tenants."""
+    for (s, n, d, r, p) in (INGEST_SHAPES_SMOKE if smoke else INGEST_SHAPES):
+        params = lsh.init_srp(jax.random.PRNGKey(3), r, p, d + 2)
+        zs = 0.3 * jax.random.normal(jax.random.PRNGKey(4), (s, n, d))
+        z_list = [zs[t] for t in range(s)]
+        batch = min(256, n)
+
+        def fused():
+            bank = sketch_lib.sketch_dataset_many(params, zs, batch=batch,
+                                                  engine="scan")
+            jax.block_until_ready(bank.counts)
+
+        def host_loop():
+            sks = [
+                sketch_lib.sketch_dataset(params, z, batch=batch,
+                                          engine="scan")
+                for z in z_list
+            ]
+            jax.block_until_ready(sks[-1].counts)
+
+        tag = f"S{s}_n{n}_d{d}_R{r}"
+        _ab_rows(rows, "serve/insert_banked", "serve/insert_host_loop",
+                 "serve/insert_banked_speedup", tag, fused, host_loop,
+                 iters=3 if smoke else 8, work_a=s * n * r, work_b=s * n * r)
+
+
+def run(print_fn=print, smoke: bool = False) -> List[str]:
+    rows: List[str] = []
+    _bench_gateway_query(rows, smoke)
+    _bench_banked_ingest(rows, smoke)
+    for row in rows:
+        print_fn(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

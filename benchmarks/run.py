@@ -35,7 +35,8 @@ def _parse_row(row: str):
 
 def main() -> None:
     from benchmarks import (bench_classification, bench_distributed,
-                            bench_kernels, bench_regression, bench_surrogate)
+                            bench_kernels, bench_regression, bench_serve,
+                            bench_surrogate)
 
     suites = {
         "fig3": bench_surrogate.run,
@@ -43,6 +44,7 @@ def main() -> None:
         "fig5": bench_classification.run,
         "kernels": bench_kernels.run,
         "distributed": bench_distributed.run,
+        "serve": bench_serve.run,
     }
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="*",

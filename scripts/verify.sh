@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verify: full pytest suite + kernel-bench smoke with JSON output.
+# Tier-1 verify: full pytest suite + kernel/serve bench with JSON output.
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q "$@"
-python -m benchmarks.run kernels --json BENCH_kernels.json
+python -m benchmarks.run kernels serve --json BENCH_kernels.json

@@ -74,6 +74,24 @@ def validate_select(select: str) -> None:
                          "use best | average")
 
 
+def member_point_idx(member_map: Array, q: int) -> Array:
+    """Per-point sketch index for a member-major ``(q, ...)`` batch.
+
+    Single owner of the member-major routing rule (DESIGN.md §9): a batch of
+    ``q`` points laid out as F contiguous per-member blocks routes row ``i``
+    to ``member_map[i // (q // F)]``. Shared by the banked loss closures here
+    and the serving gateway's tick (``serve.storm_gateway``), whose
+    tenant-major slot layout is exactly ``member_map = arange(S)``.
+    """
+    f = member_map.shape[0]
+    if q % f:
+        raise ValueError(
+            f"banked batch of {q} points is not member-major over "
+            f"{f} fleet members"
+        )
+    return jnp.repeat(member_map, q // f)
+
+
 def make_loss_fn(
     sk,
     params: lsh.LSHParams,
@@ -139,13 +157,7 @@ def make_loss_fn(
         """Per-point sketch index for a member-major (q, dim) batch."""
         if thetas.ndim != 2:
             raise ValueError("banked loss closures need (q, dim) batches")
-        q, f = thetas.shape[0], member_map.shape[0]
-        if q % f:
-            raise ValueError(
-                f"banked batch of {q} points is not member-major over "
-                f"{f} fleet members"
-            )
-        return jnp.repeat(member_map, q // f)
+        return member_point_idx(member_map, thetas.shape[0])
 
     if use_kernel:
         from repro.kernels import ops as kernel_ops  # deferred: ops imports core

@@ -9,12 +9,24 @@ Two mechanisms, composable:
   unchanged.
 * **Private projections** — Gaussian noise added to the projection values
   *before* the sign (Kenthapadi et al. JL mechanism), giving
-  ``(eps, delta)``-DP on the attributes of each example.
+  ``(eps, delta)``-DP on the attributes of each example. The PRP insert
+  makes ONE projection pass and ONE full-rank Gaussian release of the
+  per-plane decomposition ``(s, t) = (z . w_z, pad * w_pad)`` — both
+  antithetic code sets (``sign(s + t)`` and ``sign(t - s)``, the shared-pass
+  identity of DESIGN.md §3.2) are post-processing of that single release,
+  so a paired insert costs one ``(eps, delta)``, not the 2x of two
+  independent per-side releases. The noise must be full-rank on ``(s, t)``:
+  reusing one scalar draw across the pair looks cheaper still, but the
+  antithetic combination ``v_pos + v_neg`` then cancels the noise and
+  releases the padding projection ``2t`` *noiselessly* (boundary points
+  with ``pad = 0`` become perfectly distinguishable — unbounded privacy
+  loss), see :func:`private_prp_codes`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import jax
@@ -63,8 +75,15 @@ def query_private(ps: PrivateSketch, codes: Array, paired: bool = True) -> Array
 
 
 def gaussian_sigma(epsilon: float, delta: float, sensitivity: float = 2.0) -> float:
-    """Analytic-Gaussian-style noise scale for the JL projection mechanism."""
-    return sensitivity * jnp.sqrt(2.0 * jnp.log(1.25 / delta)) / epsilon
+    """Analytic-Gaussian-style noise scale for the JL projection mechanism.
+
+    Returns a **Python float**: this is a static configuration helper —
+    callers bake the result into configs, shapes, and jit-static arguments,
+    and a traced ``jnp`` scalar here leaks tracers into those static
+    contexts (the pre-PR-5 bug). Pure host math keeps it concrete.
+    """
+    return float(sensitivity) * math.sqrt(2.0 * math.log(1.25 / float(delta))) \
+        / float(epsilon)
 
 
 def private_srp_codes(
@@ -80,11 +99,87 @@ def private_srp_codes(
     return jnp.einsum("...rp,p->...r", bits, weights)
 
 
+def private_prp_codes(
+    key: Array, params: lsh.LSHParams, z: Array, sigma: float
+) -> Tuple[Array, Array, Array]:
+    """Both antithetic code sets from ONE shared-pass Gaussian release.
+
+    The augmented pair shares its padding coordinate: with
+    ``s = z . w_z`` and ``t = pad * w_pad`` per (row, plane),
+
+        proj(aug(z)) = s + t,      proj(aug(-z)) = t - s
+
+    (DESIGN.md §3.2). The mechanism makes one projection pass, releases the
+    noisy pair ``(s~, t~) = (s + e_s, t + e_t)`` with *independent* Gaussian
+    components, and derives both code sets as post-processing:
+
+        codes_pos from  s~ + t~ > 0,      codes_neg from  t~ - s~ > 0,
+
+    so the antithetic pairing survives noise exactly as in the clean path
+    (``v_pos + v_neg = 2 t~`` — the shared-pass identity applied to the
+    noisy padding projection) and the paired insert costs ONE
+    ``(eps, delta)`` release, not the ``2x`` composition of the pre-PR-5
+    implementation (two independent draws on two separate full projections,
+    which also broke the pairing: ``v_pos + v_neg`` was not ``2 t~`` for
+    any ``t~``).
+
+    Why the release must be full-rank on ``(s, t)`` rather than one scalar
+    draw on ``proj(aug(z))`` reused for both sides: deriving the negative
+    side as ``2t - (proj + e)`` makes the pair sum ``v_pos + v_neg = 2t``
+    EXACTLY — the noise cancels out of the antithetic combination and the
+    private padding projection is released noiselessly (a boundary point
+    with ``pad = 0`` yields deterministically complementary code sets, so
+    an adversary separates it from interior points with probability 1 —
+    unbounded privacy loss). Independent noise on the two components keeps
+    every observable linear combination noisy.
+
+    Args:
+      key: PRNG key for the release (split once for the two components).
+      params: hash parameters over the augmented ``d + 2`` space.
+      z: ``(..., d)`` pre-scaled points (``|z| <= 1``; NOT augmented).
+      sigma: per-component Gaussian noise scale (:func:`gaussian_sigma`
+        at the same input-space sensitivity bound, ``|aug(z) - aug(z')| <=
+        2``, the single-sided mechanism uses).
+
+    Returns:
+      ``(codes_pos, codes_neg, noisy_t)``: the two ``(..., R)`` int32 code
+      sets and the ``(..., R*p)`` noisy padding projection ``t~`` they
+      straddle (exposed so tests can pin the pairing; callers usually
+      ignore it). At ``sigma = 0`` both sides equal ``lsh.prp_codes`` up to
+      measure-zero floating-point sign ties (the split ``s + t`` sum vs the
+      fused augmented matmul — same caveat as ``ref.paired_srp_hash``).
+    """
+    r, p, d_aug = params.projections.shape
+    d = d_aug - 2
+    if z.shape[-1] != d:
+        raise ValueError(f"z has dim {z.shape[-1]}; params hash the "
+                         f"augmented {d_aug}-dim space so z must be {d}-dim")
+    z = z.astype(jnp.float32)
+    sq = jnp.sum(z * z, axis=-1, keepdims=True)
+    pad = jnp.sqrt(jnp.clip(1.0 - sq, 0.0, None))  # (..., 1)
+    w = params.projections.reshape(r * p, d_aug)
+    s_part = jnp.einsum("...d,kd->...k", z, w[:, :d])  # (..., R*p)
+    t_part = pad * w[:, d + 1]  # (..., R*p)
+    k_s, k_t = jax.random.split(key)
+    noisy_s = s_part + sigma * jax.random.normal(k_s, s_part.shape)
+    noisy_t = t_part + sigma * jax.random.normal(k_t, t_part.shape)
+    bits_pos = (noisy_s + noisy_t > 0).astype(jnp.int32)
+    bits_neg = (noisy_t - noisy_s > 0).astype(jnp.int32)
+    weights = (2 ** jnp.arange(p, dtype=jnp.int32)).astype(jnp.int32)
+    shape = z.shape[:-1] + (r, p)
+    cpos = jnp.einsum("...rp,p->...r", bits_pos.reshape(shape), weights)
+    cneg = jnp.einsum("...rp,p->...r", bits_neg.reshape(shape), weights)
+    return cpos, cneg, noisy_t
+
+
 def private_prp_insert(
     key: Array, sk: sketch_lib.Sketch, params: lsh.LSHParams, z: Array, sigma: float
 ) -> sketch_lib.Sketch:
-    """PRP insert under the private-projection mechanism."""
-    k1, k2 = jax.random.split(key)
-    cpos = private_srp_codes(k1, params, lsh.augment_data(z), sigma)
-    cneg = private_srp_codes(k2, params, lsh.augment_data(-z), sigma)
+    """PRP insert under the private-projection mechanism.
+
+    One shared-pass Gaussian release per example (:func:`private_prp_codes`);
+    both bucket updates are post-processing of that release, so the insert's
+    privacy cost equals a single JL-mechanism release at ``sigma``.
+    """
+    cpos, cneg, _ = private_prp_codes(key, params, z, sigma)
     return sketch_lib.prp_update(sk, cpos, cneg)

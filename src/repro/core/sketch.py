@@ -21,6 +21,7 @@ matmul + one-hot histogram held in VMEM (DESIGN.md §3). ``ops.py`` dispatches.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -370,7 +371,38 @@ def sketch_dataset(
     )
     zp = zp.reshape(-1, batch, dim)
     maskp = mask.reshape(-1, batch)
+    # Narrow output dtypes accumulate the scan carry in int32 (a stream can
+    # exceed a 16-bit cell mid-scan) and saturate once at the end — counters
+    # are monotone, so this equals per-batch saturation (DESIGN.md §6).
+    carry_dtype = jnp.int32 if _is_narrow(dtype) else dtype
+    counts, cnt = _scan_insert(params, zp, maskp, rows, buckets, paired,
+                               carry_dtype, vary_axes=vary_axes)
+    if _is_narrow(dtype):
+        counts = saturating_cast(counts, dtype)
+    return Sketch(counts=counts, n=cnt)
 
+
+def _scan_insert(
+    params: lsh.LSHParams,
+    zp: Array,
+    maskp: Array,
+    rows: int,
+    buckets: int,
+    paired: bool,
+    carry_dtype,
+    vary_axes: tuple = (),
+) -> Tuple[Array, Array]:
+    """Scatter-add insert scan over pre-batched tiles — the shared program.
+
+    ``zp: (steps, batch, dim)``, ``maskp: (steps, batch)``. Single owner of
+    the per-batch step for BOTH the lone-stream build (:func:`sketch_dataset`)
+    and the banked build (:func:`sketch_dataset_many` vmaps this function
+    over the sketch axis), which is what makes per-tenant bank slices
+    bit-identical to standalone builds: same primitives, same batch
+    boundaries, and masked padding rows scatter integer zeros.
+
+    Returns ``(counts (rows, buckets) carry_dtype, n () int32)``.
+    """
     row_offset = (jnp.arange(rows, dtype=jnp.int32) * buckets)[None, :]
 
     def flat_add(counts: Array, codes: Array, mb: Array) -> Array:
@@ -381,30 +413,87 @@ def sketch_dataset(
         upd = jnp.broadcast_to(mb[:, None], codes.shape).reshape(-1)
         return flat.at[idx].add(upd).reshape(rows, buckets)
 
-    def step(s: Sketch, xs) -> Tuple[Sketch, None]:
+    def step(carry, xs):
+        counts, cnt = carry
         zb, mb = xs
-        mb = mb.astype(s.counts.dtype)
+        mb = mb.astype(counts.dtype)
         if paired:
             cpos, cneg = lsh.prp_codes(params, zb)
-            counts = flat_add(s.counts, cpos, mb)
+            counts = flat_add(counts, cpos, mb)
             counts = flat_add(counts, cneg, mb)
         else:
             codes = lsh.srp_codes(params, zb)
-            counts = flat_add(s.counts, codes, mb)
-        return Sketch(counts=counts, n=s.n + jnp.sum(mb).astype(jnp.int32)), None
+            counts = flat_add(counts, codes, mb)
+        return (counts, cnt + jnp.sum(mb).astype(jnp.int32)), None
 
-    # Narrow output dtypes accumulate the scan carry in int32 (a stream can
-    # exceed a 16-bit cell mid-scan) and saturate once at the end — counters
-    # are monotone, so this equals per-batch saturation (DESIGN.md §6).
-    init = init_sketch(rows, buckets, jnp.int32 if _is_narrow(dtype) else dtype)
+    init = (jnp.zeros((rows, buckets), carry_dtype),
+            jnp.zeros((), dtype=jnp.int32))
     if vary_axes:
         from repro import compat
 
         init = jax.tree.map(lambda t: compat.pvary(t, tuple(vary_axes)), init)
-    out, _ = jax.lax.scan(step, init, (zp, maskp))
-    if _is_narrow(dtype):
-        out = Sketch(counts=saturating_cast(out.counts, dtype), n=out.n)
-    return out
+    (counts, cnt), _ = jax.lax.scan(step, init, (zp, maskp))
+    return counts, cnt
+
+
+def stack_ragged(zs) -> Tuple[Array, Array]:
+    """Stack ragged per-tenant streams into a mask-padded sketch-major block.
+
+    ``zs`` is a ``(S, n, dim)`` stack (returned as-is with an all-ones mask)
+    or a sequence of ``(n_s, dim)`` arrays with possibly unequal ``n_s``;
+    shorter streams are zero-padded to the longest and masked out. The
+    ``(stacked (S, n_max, dim), mask (S, n_max))`` pair is the input contract
+    of every fused banked insert (:func:`sketch_dataset_many`,
+    ``kernels.ops.sketch_insert_banked``, the gateway's ingest tick).
+    """
+    if hasattr(zs, "ndim"):
+        if zs.ndim != 3:
+            raise ValueError(f"stacked streams must be (S, n, dim); got "
+                             f"shape {zs.shape}")
+        zs = jnp.asarray(zs)
+        return zs, jnp.ones(zs.shape[:2], jnp.float32)
+    arrs = [jnp.asarray(z) for z in zs]
+    if not arrs:
+        raise ValueError("need at least one tenant stream")
+    dims = {a.shape[-1] for a in arrs}
+    if len(dims) != 1 or any(a.ndim != 2 for a in arrs):
+        raise ValueError(f"tenant streams must share one (n_s, dim) shape "
+                         f"family; got dims {dims}")
+    n_max = max(a.shape[0] for a in arrs)
+    stacked = jnp.stack(
+        [jnp.pad(a, ((0, n_max - a.shape[0]), (0, 0))) for a in arrs]
+    )
+    mask = jnp.stack([
+        (jnp.arange(n_max) < a.shape[0]).astype(jnp.float32) for a in arrs
+    ])
+    return stacked, mask
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rows", "buckets", "batch", "paired")
+)
+def _sketch_banked_scan(
+    params: lsh.LSHParams,
+    zs: Array,
+    mask: Array,
+    rows: int,
+    buckets: int,
+    batch: int,
+    paired: bool,
+) -> Tuple[Array, Array]:
+    """Vmapped :func:`_scan_insert` over the sketch axis (int32 carry)."""
+    s, n, dim = zs.shape
+    n_pad = (-n) % batch
+    zp = jnp.concatenate(
+        [zs, jnp.zeros((s, n_pad, dim), zs.dtype)], axis=1
+    ).reshape(s, -1, batch, dim)
+    mp = jnp.concatenate(
+        [mask, jnp.zeros((s, n_pad), mask.dtype)], axis=1
+    ).reshape(s, -1, batch)
+    return jax.vmap(
+        lambda zb, mb: _scan_insert(params, zb, mb, rows, buckets, paired,
+                                    jnp.int32)
+    )(zp, mp)
 
 
 def sketch_dataset_many(
@@ -417,16 +506,48 @@ def sketch_dataset_many(
     dtype: jnp.dtype = jnp.int32,
     engine: str = "auto",
 ) -> SketchBank:
-    """Sketch S datasets under ONE shared hash family into a bank.
+    """Sketch S datasets under ONE shared hash family into a bank — fused.
 
     ``zs`` is a ``(S, n, dim)`` stack or any sequence of ``(n_s, dim)``
-    arrays (per-tenant streams may differ in length). Each dataset runs the
-    ordinary :func:`sketch_dataset` — slice ``s`` of the returned bank is
-    bit-identical to the standalone build of dataset ``s`` — so the bank is
-    a pure re-layout, not a new estimator.
+    arrays (per-tenant streams may differ in length; :func:`stack_ragged`
+    mask-pads them to a common block). There is no host loop over tenants:
+    the ``scan`` engine vmaps the shared scatter-add scan
+    (:func:`_scan_insert`) over the sketch axis, and the ``kernel`` engine
+    streams the stack through the grid-over-S fused histogram
+    (``kernels.ops.sketch_insert_banked``) — one program either way.
+
+    Slice ``s`` of the returned bank is bit-identical to the standalone
+    :func:`sketch_dataset` build of stream ``s`` under the same engine: the
+    per-batch step is the same function, batch boundaries align (both pad to
+    a ``batch`` multiple), mask-padding rows scatter integer zeros, and
+    narrow dtypes follow the same int32-carry + one final saturation
+    discipline (DESIGN.md §6) — so the bank stays a pure re-layout, not a
+    new estimator.
     """
-    return bank_of([
-        sketch_dataset(params, z, rows=rows, buckets=buckets, batch=batch,
-                       paired=paired, dtype=dtype, engine=engine)
-        for z in zs
-    ])
+    rows = rows if rows is not None else params.rows
+    buckets = buckets if buckets is not None else params.buckets
+    zs_stacked, mask = stack_ragged(zs)
+    resolved = resolve_engine(engine)
+    if resolved == "kernel":
+        if rows != params.rows or buckets != params.buckets:
+            if engine == "kernel":  # explicit request we cannot honor
+                raise ValueError(
+                    "engine='kernel' derives rows/buckets from params; "
+                    f"got overrides rows={rows}, buckets={buckets}"
+                )
+        else:
+            from repro.kernels import ops as kernel_ops  # deferred: ops imports us
+
+            bank = kernel_ops.sketch_insert_banked(
+                params, zs_stacked, mask, batch=batch, paired=paired
+            )
+            return SketchBank(counts=saturating_cast(bank.counts, dtype),
+                              n=bank.n)
+    counts, cnt = _sketch_banked_scan(params, zs_stacked, mask, rows=rows,
+                                      buckets=buckets, batch=batch,
+                                      paired=paired)
+    if _is_narrow(dtype):
+        counts = saturating_cast(counts, dtype)
+    elif counts.dtype != jnp.dtype(dtype):
+        counts = counts.astype(dtype)
+    return SketchBank(counts=counts, n=cnt)

@@ -72,6 +72,41 @@ def paired_hash_histogram(
     return histogram_kernel.paired_hash_histogram(z, w, mask, interpret=interpret)
 
 
+def hash_histogram_banked(
+    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+) -> Array:
+    """Banked fused insert: ``(S, R, B)`` histograms of an ``(S, n, d)`` stack.
+
+    One shared hash family serves the whole bank; slice ``s`` equals
+    ``hash_histogram(x[s], w, mask[s])`` bit-for-bit (integer counts).
+    """
+    if mask is None:
+        mask = jnp.ones(x.shape[:2], jnp.float32)
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and x.shape[-1] < 64):
+        return ref.hash_histogram_banked(x, w, mask)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return histogram_kernel.hash_histogram_banked(x, w, mask,
+                                                  interpret=interpret)
+
+
+def paired_hash_histogram_banked(
+    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+) -> Array:
+    """Banked fused antithetic PRP insert over an ``(S, n, dim)`` stack.
+
+    The grid-over-S kernel (or vmapped reference) runs every tenant's
+    projection pass in ONE launch; slice ``s`` equals
+    ``paired_hash_histogram(z[s], w, mask[s])``.
+    """
+    if mask is None:
+        mask = jnp.ones(z.shape[:2], jnp.float32)
+    if mode == "ref" or (mode == "auto" and not _on_tpu() and z.shape[-1] < 64):
+        return ref.paired_hash_histogram_banked(z, w, mask)
+    interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
+    return histogram_kernel.paired_hash_histogram_banked(z, w, mask,
+                                                         interpret=interpret)
+
+
 def sketch_query(
     q: Array,
     w: Array,
@@ -248,3 +283,66 @@ def sketch_stream(
     init = jnp.zeros((params.rows, params.buckets), jnp.int32)
     counts, _ = jax.lax.scan(step, init, (zb, mb))
     return sketch_lib.Sketch(counts=counts, n=jnp.sum(mask).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode"))
+def sketch_insert_banked(
+    params: lsh.LSHParams,
+    zs: Array,
+    mask: Optional[Array] = None,
+    batch: int = 1024,
+    paired: bool = True,
+    mode: str = "auto",
+) -> sketch_lib.SketchBank:
+    """Fused banked insert: sketch S tenant streams in one kernel stream.
+
+    The ingest half of the serving gateway (DESIGN.md §10): an ``(S, n, dim)``
+    sketch-major stack (ragged tenants mask-padded to a common ``n``) scans
+    through the banked fused histogram — each step is ONE grid-over-S kernel
+    launch (or vmapped reference call) producing an ``(S, R, B)`` tile, so the
+    bank ingests like ``sketch_stream`` ingests a single stream: no host loop
+    over tenants, each data element read exactly once. Masked rows are hashed
+    but contribute nothing; per-tenant ``n`` is the mask mass.
+
+    Slice ``s`` of the result is bit-identical to
+    ``sketch_stream(params, zs[s], mask[s], batch=batch, paired=paired)`` —
+    the batch boundaries align (both pad up to a ``batch`` multiple) and
+    integer histogram tiles add exactly.
+
+    Args:
+      params: hash parameters (ONE family shared by the whole bank).
+      zs: ``(S, n, dim)`` pre-scaled tenant streams, sketch-major.
+      mask: ``(S, n)`` validity mask in {0, 1}; ``None`` means all valid.
+      batch: stream tile size.
+      paired: PRP (regression/probes) vs single-sided inserts.
+      mode: kernel dispatch (``auto | kernel | interpret | ref``).
+
+    Returns:
+      A :class:`~repro.core.sketch.SketchBank` with int32 counts.
+    """
+    s, n, dim = zs.shape
+    w = from_lsh_params(params)
+    if mask is None:
+        mask = jnp.ones((s, n), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_pad = (-n) % batch
+    zp = jnp.concatenate([zs, jnp.zeros((s, n_pad, dim), zs.dtype)], axis=1)
+    mp = jnp.concatenate([mask, jnp.zeros((s, n_pad), jnp.float32)], axis=1)
+    # Scan over batch tiles (leading axis), keeping the bank axis inside the
+    # fused call: (steps, S, batch, dim) so each step is one banked launch.
+    zb = jnp.swapaxes(zp.reshape(s, -1, batch, dim), 0, 1)
+    mb = jnp.swapaxes(mp.reshape(s, -1, batch), 0, 1)
+
+    def step(counts: Array, xs):
+        z_t, m_t = xs
+        if paired:
+            tile = paired_hash_histogram_banked(z_t, w, m_t, mode=mode)
+        else:
+            tile = hash_histogram_banked(z_t, w, m_t, mode=mode)
+        return counts + tile, None
+
+    init = jnp.zeros((s, params.rows, params.buckets), jnp.int32)
+    counts, _ = jax.lax.scan(step, init, (zb, mb))
+    return sketch_lib.SketchBank(
+        counts=counts, n=jnp.sum(mask, axis=1).astype(jnp.int32)
+    )

@@ -173,6 +173,37 @@ def paired_hash_histogram(z: Array, w: Array, mask: Array) -> Array:
     )
 
 
+def hash_histogram_banked(x: Array, w: Array, mask: Array) -> Array:
+    """Banked fused insert oracle: S stacked histograms, one shared family.
+
+    Args:
+      x: ``(S, n, d)`` points, sketch-major.
+      w: ``(p, d, R)`` hyperplane normals (shared across the bank).
+      mask: ``(S, n)`` {0,1} validity mask (ragged-stream padding).
+
+    Returns:
+      ``(S, R, 2**p)`` int32 counts; slice ``s`` is exactly
+      ``hash_histogram(x[s], w, mask[s])`` (integer scatter-adds commute
+      with the vmap batching, so the slices are bit-identical).
+    """
+    return jax.vmap(lambda xs, ms: hash_histogram(xs, w, ms))(x, mask)
+
+
+def paired_hash_histogram_banked(z: Array, w: Array, mask: Array) -> Array:
+    """Banked antithetic PRP insert oracle: S tenants, one projection pass each.
+
+    Args:
+      z: ``(S, n, d)`` pre-scaled points (NOT augmented), sketch-major.
+      w: ``(p, d + 2, R)`` hyperplane normals (shared across the bank).
+      mask: ``(S, n)`` {0,1} validity mask.
+
+    Returns:
+      ``(S, R, 2**p)`` int32 counts; slice ``s`` is exactly
+      ``paired_hash_histogram(z[s], w, mask[s])``.
+    """
+    return jax.vmap(lambda zs, ms: paired_hash_histogram(zs, w, ms))(z, mask)
+
+
 def sketch_query(q: Array, w: Array, counts: Array) -> Array:
     """Batched RACE gather: mean over rows of counts at the query codes.
 

@@ -20,6 +20,15 @@ augmented pair ``aug(±z) = [±z, 0, pad]`` shares the padding coordinate, so
 the epilogue derives the negative-side projections from the accumulator and a
 rank-1 ``pad ⊗ w_pad`` correction — both code sets from one projection pass,
 halving MXU flops and HBM reads per insert versus two single-sided calls.
+
+The ``*_banked`` variants (DESIGN.md §10) prepend a sketch axis to the grid:
+``(S, n, d)``-stacked tenant batches produce an ``(S, R, B)`` counter stack
+in ONE kernel launch. The hash family is shared across the bank, so the
+weight blocks are reused unchanged for every ``s``; only the data/mask/output
+index maps gain the leading coordinate, and the per-``(s, r)`` output block
+is revisited across the ``(n, k)`` subgrid exactly as in the lone-sketch
+schedule — slice ``s`` of the result is the lone-sketch kernel's output for
+tenant ``s``, tile for tile.
 """
 
 from __future__ import annotations
@@ -226,3 +235,204 @@ def paired_hash_histogram(
         interpret=interpret,
     )(xp, wp, padp, w_pad, mp)
     return out[:r]
+
+
+# ---------------------------------------------------------------------------
+# Banked inserts: one launch histograms an (S, n, d) tenant stack (§10).
+# ---------------------------------------------------------------------------
+
+
+def _hash_histogram_banked_kernel(
+    x_ref, w_ref, m_ref, o_ref, acc_ref, *, planes: int, k_steps: int
+):
+    n_i = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(n_i == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (bn, bd) — this sketch's data tile
+    for j in range(planes):
+        acc_ref[j, :, :] += jnp.dot(
+            x, w_ref[j, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        buckets = o_ref.shape[-1]
+        codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
+        for j in range(planes):
+            codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+        masked = onehot * m_ref[0].astype(jnp.float32)[:, None, None]
+        o_ref[0] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+)
+def hash_histogram_banked(
+    x: Array,
+    w: Array,
+    mask: Array,
+    *,
+    block_n: int = 128,
+    block_r: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Banked fused insert: S stacked histograms in one launch.
+
+    Args:
+      x: ``(S, n, d)`` pre-scaled points, sketch-major.
+      w: ``(p, d, R)`` hyperplane normals (ONE hash family for the bank).
+      mask: ``(S, n)`` validity mask in {0, 1} (ragged-stream padding).
+
+    Returns:
+      ``(S, R, 2**p)`` int32 counts; slice ``s`` equals
+      ``hash_histogram(x[s], w, mask[s])``.
+    """
+    s, n, d = x.shape
+    p, dw, r = w.shape
+    assert d == dw, (d, dw)
+    buckets = 1 << p
+
+    bn = min(block_n, max(8, n))
+    br = min(block_r, r)
+    bd = min(block_d, d)
+    n_pad, r_pad, d_pad = (-n) % bn, (-r) % br, (-d) % bd
+    xp = jnp.pad(x, ((0, 0), (0, n_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    grid = (s, (r + r_pad) // br, (n + n_pad) // bn, (d + d_pad) // bd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _hash_histogram_banked_kernel, planes=p, k_steps=grid[3]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), lambda si, i, j, k: (si, j, k)),
+            pl.BlockSpec((p, bd, br), lambda si, i, j, k: (0, k, i)),
+            pl.BlockSpec((1, bn), lambda si, i, j, k: (si, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br, buckets), lambda si, i, j, k: (si, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, mp)
+    return out[:, :r]
+
+
+def _paired_hash_histogram_banked_kernel(
+    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, *, planes: int,
+    k_steps: int,
+):
+    n_i = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(n_i == 0, k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (bn, bd) — augmented features
+    for j in range(planes):
+        acc_ref[j, :, :] += jnp.dot(
+            x, w_ref[j, :, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        buckets = o_ref.shape[-1]
+        pad = pad_ref[0].astype(jnp.float32)  # (bn, 1)
+        codes_p = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
+        codes_n = jnp.zeros(acc_ref.shape[1:], jnp.int32)
+        for j in range(planes):
+            acc = acc_ref[j, :, :]  # proj(aug(z)) = s + t
+            t2 = 2.0 * pad * wp_ref[j, :, :].astype(jnp.float32)  # (bn, br)
+            codes_p += (acc > 0).astype(jnp.int32) << j
+            codes_n += ((t2 - acc) > 0).astype(jnp.int32) << j  # proj(aug(-z))
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
+        onehot = (codes_p[:, :, None] == iota).astype(jnp.float32)
+        onehot += (codes_n[:, :, None] == iota).astype(jnp.float32)
+        masked = onehot * m_ref[0].astype(jnp.float32)[:, None, None]
+        o_ref[0] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+)
+def paired_hash_histogram_banked(
+    z: Array,
+    w: Array,
+    mask: Array,
+    *,
+    block_n: int = 128,
+    block_r: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Banked fused antithetic PRP insert: S tenants in one launch.
+
+    Args:
+      z: ``(S, n, d)`` pre-scaled points (``|z| <= 1``; NOT augmented).
+      w: ``(p, d + 2, R)`` hyperplane normals for the augmented space.
+      mask: ``(S, n)`` validity mask in {0, 1} (ragged-stream padding).
+
+    Returns:
+      ``(S, R, 2**p)`` int32 counts; slice ``s`` equals
+      ``paired_hash_histogram(z[s], w, mask[s])``.
+    """
+    s, n, d = z.shape
+    p, d_aug, r = w.shape
+    assert d_aug == d + 2, (d_aug, d)
+    buckets = 1 << p
+
+    z = z.astype(jnp.float32)
+    sq = jnp.sum(z * z, axis=-1, keepdims=True)
+    pad_col = jnp.sqrt(jnp.clip(1.0 - sq, 0.0, None))  # (S, n, 1)
+    x_aug = jnp.concatenate([z, jnp.zeros_like(pad_col), pad_col], axis=-1)
+
+    bn = min(block_n, max(8, n))
+    br = min(block_r, r)
+    bd = min(block_d, d_aug)
+    n_pad, r_pad, d_pad = (-n) % bn, (-r) % br, (-d_aug) % bd
+    xp = jnp.pad(x_aug, ((0, 0), (0, n_pad), (0, d_pad)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad), (0, r_pad)))
+    padp = jnp.pad(pad_col, ((0, 0), (0, n_pad), (0, 0)))
+    w_pad = jnp.pad(w[:, d + 1 : d + 2, :], ((0, 0), (0, 0), (0, r_pad)))
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    grid = (s, (r + r_pad) // br, (n + n_pad) // bn, (d_aug + d_pad) // bd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _paired_hash_histogram_banked_kernel, planes=p, k_steps=grid[3]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), lambda si, i, j, k: (si, j, k)),
+            pl.BlockSpec((p, bd, br), lambda si, i, j, k: (0, k, i)),
+            pl.BlockSpec((1, bn, 1), lambda si, i, j, k: (si, j, 0)),
+            pl.BlockSpec((p, 1, br), lambda si, i, j, k: (0, 0, i)),
+            pl.BlockSpec((1, bn), lambda si, i, j, k: (si, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br, buckets), lambda si, i, j, k: (si, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, padp, w_pad, mp)
+    return out[:, :r]

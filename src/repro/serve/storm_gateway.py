@@ -1,0 +1,448 @@
+"""STORM serving gateway: one fused banked call per tick (DESIGN.md §10).
+
+The sketch — not the data — is what lives at the edge and gets queried
+online, so the serving unit is a :class:`~repro.core.sketch.SketchBank`: S
+tenants' counter tables behind one endpoint. The gateway micro-batches two
+request classes over fixed engine ticks:
+
+* **ingest** — ``(tenant, z-rows)`` appended to that tenant's counters. All
+  pending rows coalesce into ONE fused banked antithetic insert per tick
+  (``ops.paired_hash_histogram_banked`` over a mask-padded ``(S, I, dim)``
+  stack — the grid-over-S kernel on TPU, the vmapped oracle elsewhere).
+* **query** — surrogate-loss evaluation of a theta batch (a client fleet's
+  candidates) against that tenant's sketch. All pending points coalesce into
+  ONE banked ``ops.query_theta_with_weights(bank, ..., sketch_idx)`` call.
+
+Both halves run inside jitted tick programs over **jit-stable padded
+shapes**: per-tenant slot capacities (``ingest_slots`` rows, ``query_slots``
+points) fix every buffer shape, masks mark real traffic, and overflow simply
+waits for the next tick. A tick dispatches one of exactly three fixed
+programs — ingest+query, ingest-only, query-only, matching which halves
+carry traffic — so the engine never recompiles under any request mix
+(asserted via the jit caches in tests), and a read-heavy tick does not pay
+for an empty insert. Within a mixed tick, ingest applies first and queries
+read the post-ingest counters (read-your-writes). On the meshless path each
+tick ships ONE fused host buffer to the device (four tiny transfers cost
+more than the fused query itself at serving shapes).
+
+The tenant-major slot layout is deliberately the member-major contract of
+banked fleets (``fleet.member_point_idx`` with ``member_map = arange(S)``),
+so a mesh splits tenants across devices exactly like
+``distributed.fleet_fit_banked`` splits a training bank
+(``sharding.specs.gateway_specs``): each device owns its tenants' tables and
+exactly those tenants' tick slots — zero per-tick communication.
+
+Correctness contract (pinned in ``tests/test_serve_gateway.py``): a tenant's
+counters after any interleaving of gateway ticks are bit-identical to the
+standalone ``sketch_dataset`` build of its stream, and a tenant's query
+results are bit-identical to standalone ``ops.query_theta_with_weights``
+calls against its lone sketch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fleet, lsh, sketch as sketch_lib
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class IngestRequest:
+    """Append ``z`` rows to a tenant's counters. For a ``paired`` gateway
+    these are pre-scaled sketch-space points (``params.dim - 2`` wide; the
+    PRP insert augments internally); for a single-sided gateway they are
+    pre-augmented points (``params.dim`` wide — the classification
+    contract, ``lsh.augment_data`` applied by the client). Rows beyond the
+    tick capacity spill to later ticks."""
+
+    rid: int
+    tenant: int
+    z: np.ndarray
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """Evaluate the sketch loss at ``thetas`` (``(q, dim)`` iterates, e.g. a
+    client fleet's candidates) against a tenant's sketch."""
+
+    rid: int
+    tenant: int
+    thetas: np.ndarray
+
+
+@dataclasses.dataclass
+class QueryResult:
+    rid: int
+    tenant: int
+    losses: np.ndarray  # (q,) float32, row i for thetas[i]
+
+
+@dataclasses.dataclass
+class TickReport:
+    """What one engine tick did (completed queries only — a split request
+    reports once, on the tick that finishes it)."""
+
+    tick: int
+    results: List[QueryResult]
+    rows_ingested: int
+    points_served: int
+
+
+@dataclasses.dataclass
+class _PendingIngest:
+    req: IngestRequest
+    cursor: int = 0
+
+
+@dataclasses.dataclass
+class _PendingQuery:
+    req: QueryRequest
+    cursor: int = 0
+    out: Optional[np.ndarray] = None
+
+
+class StormGateway:
+    """Fixed-tick micro-batching gateway over a :class:`SketchBank`."""
+
+    def __init__(
+        self,
+        params: lsh.LSHParams,
+        tenants: int,
+        *,
+        paired: bool = True,
+        query_slots: int = 32,
+        ingest_slots: int = 128,
+        count_dtype=jnp.int32,
+        mode: str = "auto",
+        bank: Optional[sketch_lib.SketchBank] = None,
+        mesh=None,
+        axis: str = "bank",
+    ):
+        """Args:
+          params: the ONE hash family shared by every tenant's sketch.
+          tenants: bank size S (fixed for the gateway's lifetime — the
+            tick's padded shapes depend on it).
+          paired: PRP sketches (regression/probes) vs single-sided
+            (classification margin) — sets both the insert kernel and the
+            estimator denominator.
+          query_slots: per-tenant theta capacity Q per tick.
+          ingest_slots: per-tenant row capacity I per tick.
+          count_dtype: counter dtype; narrow dtypes widen per tick and
+            saturate on the way back (DESIGN.md §6).
+          mode: kernel dispatch for both halves (``auto | kernel |
+            interpret | ref``).
+          bank: optional warm-start counters (shape ``(S, R, B)``); its
+            dtype overrides ``count_dtype``.
+          mesh / axis: optional device mesh splitting tenants over ``axis``
+            (``sharding.specs.gateway_specs``); ``None`` runs the identical
+            program unsharded.
+        """
+        if tenants < 1:
+            raise ValueError(f"need at least one tenant; got {tenants}")
+        self.params = params
+        self.w = ops.from_lsh_params(params)
+        self.dim = params.dim - 2  # query iterate dim (theta_tilde rows)
+        # Paired ingest takes raw sketch-space rows (augmented internally);
+        # single-sided ingest takes pre-augmented rows at params.dim (the
+        # classification contract — clients apply lsh.augment_data).
+        self.ingest_dim = params.dim - 2 if paired else params.dim
+        self.tenants = tenants
+        self.paired = paired
+        self.query_slots = query_slots
+        self.ingest_slots = ingest_slots
+        self.mode = mode
+        self.mesh = mesh
+        self.axis = axis
+        if bank is None:
+            bank = sketch_lib.SketchBank(
+                counts=jnp.zeros((tenants, params.rows, params.buckets),
+                                 jnp.dtype(count_dtype)),
+                n=jnp.zeros((tenants,), jnp.int32),
+            )
+        if bank.counts.shape[0] != tenants:
+            raise ValueError(
+                f"bank holds {bank.counts.shape[0]} sketches for "
+                f"{tenants} tenants"
+            )
+        self.count_dtype = bank.counts.dtype
+        self._counts = bank.counts
+        self._n = bank.n
+        self._ingest_q: Deque[_PendingIngest] = deque()
+        self._query_q: Deque[_PendingQuery] = deque()
+        self.ticks = 0
+        self.rows_ingested = 0
+        self.points_served = 0
+        self._tick_full, self._tick_ingest, self._tick_query = \
+            self._build_ticks()
+
+    # -- request plumbing ---------------------------------------------------
+
+    def submit(self, req: Union[IngestRequest, QueryRequest]) -> None:
+        if not 0 <= req.tenant < self.tenants:
+            raise ValueError(f"tenant {req.tenant} out of range "
+                             f"[0, {self.tenants})")
+        if isinstance(req, IngestRequest):
+            z = np.asarray(req.z, np.float32)
+            if z.ndim != 2 or z.shape[1] != self.ingest_dim:
+                raise ValueError(
+                    f"ingest rows must be (rows, {self.ingest_dim}); got "
+                    f"{z.shape}"
+                )
+            self._ingest_q.append(_PendingIngest(dataclasses.replace(req, z=z)))
+        elif isinstance(req, QueryRequest):
+            th = np.asarray(req.thetas, np.float32)
+            if th.ndim != 2 or th.shape[1] != self.dim:
+                raise ValueError(f"query thetas must be (q, {self.dim}); "
+                                 f"got {th.shape}")
+            self._query_q.append(_PendingQuery(
+                dataclasses.replace(req, thetas=th),
+                out=np.zeros((th.shape[0],), np.float32),
+            ))
+        else:
+            raise TypeError(f"unknown request type {type(req).__name__}")
+
+    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest]]
+                    ) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    @property
+    def pending(self) -> int:
+        return len(self._ingest_q) + len(self._query_q)
+
+    @property
+    def bank(self) -> sketch_lib.SketchBank:
+        """The live counter bank (device arrays; post-last-tick state)."""
+        return sketch_lib.SketchBank(counts=self._counts, n=self._n)
+
+    def sketch_of(self, tenant: int) -> sketch_lib.Sketch:
+        """Tenant ``tenant``'s sketch as a standalone view."""
+        return self.bank.select(tenant)
+
+    @property
+    def trace_count(self) -> int:
+        """Total traces across the three tick programs (jit-stability: this
+        must stay <= 3 for any request mix over the gateway's lifetime)."""
+        return sum(f._cache_size() for f in
+                   (self._tick_full, self._tick_ingest, self._tick_query))
+
+    # -- the fused tick -----------------------------------------------------
+
+    def _build_ticks(self):
+        """Build the three fixed tick programs (full / ingest / query).
+
+        Each is its own jitted program over the same padded shapes — the
+        tick picks one by which halves carry traffic, so a read-heavy tick
+        never executes an all-masked insert (on these shapes the empty
+        paired histogram costs several times the fused query itself).
+        """
+        w = self.w
+        paired = self.paired
+        mode = self.mode
+        dtype = self.count_dtype
+        narrow = jnp.dtype(dtype).itemsize < 4
+        s, dim, in_dim = self.tenants, self.dim, self.ingest_dim
+        i_cap, q_cap = self.ingest_slots, self.query_slots
+
+        def ingest_half(counts, n, zbuf, zmask):
+            # ONE fused banked insert over the (S, I, dim) stack; widen ->
+            # add -> saturate keeps narrow counters safe (DESIGN.md §6).
+            if paired:
+                tile = ops.paired_hash_histogram_banked(zbuf, w, zmask,
+                                                        mode=mode)
+            else:
+                tile = ops.hash_histogram_banked(zbuf, w, zmask, mode=mode)
+            wide = counts.astype(jnp.int32) if narrow else counts
+            wide = wide + tile
+            new_counts = (sketch_lib.saturating_cast(wide, dtype)
+                          if narrow else wide)
+            return new_counts, n + jnp.sum(zmask, axis=1).astype(jnp.int32)
+
+        def query_half(counts, n, qbuf, qmask):
+            # ONE banked call; tenant-major slots route row i to table
+            # i // Q (the member-major contract, member_map = arange(S)).
+            idx = fleet.member_point_idx(
+                jnp.arange(counts.shape[0], dtype=jnp.int32), qbuf.shape[0]
+            )
+            est = ops.query_theta_with_weights(
+                sketch_lib.SketchBank(counts=counts, n=n),
+                w, qbuf, paired=paired, mode=mode, sketch_idx=idx,
+            )
+            return jnp.where(qmask > 0, est, 0.0)
+
+        def tick_full(counts, n, zbuf, zmask, qbuf, qmask):
+            counts, n = ingest_half(counts, n, zbuf, zmask)
+            return counts, n, query_half(counts, n, qbuf, qmask)
+
+        def tick_ingest(counts, n, zbuf, zmask):
+            return ingest_half(counts, n, zbuf, zmask)
+
+        def tick_query(counts, n, qbuf, qmask):
+            return query_half(counts, n, qbuf, qmask)
+
+        if self.mesh is None:
+            # Meshless fast path: ONE fused host->device transfer per tick.
+            # The flat buffer is [zbuf | zmask | qbuf | qmask] (the suffix a
+            # variant doesn't need is simply not shipped); slicing happens
+            # inside the compiled program.
+            z_end, zm_end = s * i_cap * in_dim, s * i_cap * (in_dim + 1)
+
+            def unpack_ingest(flat):
+                return (flat[:z_end].reshape(s, i_cap, in_dim),
+                        flat[z_end:zm_end].reshape(s, i_cap))
+
+            def unpack_query(flat, off):
+                q_end = off + s * q_cap * dim
+                return (flat[off:q_end].reshape(s * q_cap, dim),
+                        flat[q_end:q_end + s * q_cap])
+
+            return (
+                jax.jit(lambda counts, n, flat: tick_full(
+                    counts, n, *unpack_ingest(flat),
+                    *unpack_query(flat, zm_end))),
+                jax.jit(lambda counts, n, flat: tick_ingest(
+                    counts, n, *unpack_ingest(flat))),
+                jax.jit(lambda counts, n, flat: tick_query(
+                    counts, n, *unpack_query(flat, 0))),
+            )
+
+        from repro import compat
+        from repro.sharding import specs as sharding_specs
+
+        bank_spec, _ = sharding_specs.gateway_specs(self.axis)
+        sharding_specs.check_bank_divisible(self.tenants, self.mesh,
+                                            self.axis)
+
+        def shard(fn, n_in, n_out):
+            return jax.jit(compat.shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(bank_spec,) * n_in,
+                out_specs=(bank_spec,) * n_out if n_out > 1 else bank_spec,
+            ))
+
+        return (shard(tick_full, 6, 3), shard(tick_ingest, 4, 2),
+                shard(tick_query, 4, 1))
+
+    def _pack_ingest(self):
+        s, i_cap, dim = self.tenants, self.ingest_slots, self.ingest_dim
+        zbuf = np.zeros((s, i_cap, dim), np.float32)
+        zmask = np.zeros((s, i_cap), np.float32)
+        fill = [0] * s
+        taken = 0
+        for st in self._ingest_q:
+            t = st.req.tenant
+            take = min(i_cap - fill[t], st.req.z.shape[0] - st.cursor)
+            if take <= 0:
+                continue
+            zbuf[t, fill[t]:fill[t] + take] = st.req.z[
+                st.cursor:st.cursor + take]
+            zmask[t, fill[t]:fill[t] + take] = 1.0
+            st.cursor += take
+            fill[t] += take
+            taken += take
+        self._ingest_q = deque(
+            st for st in self._ingest_q if st.cursor < st.req.z.shape[0]
+        )
+        return zbuf, zmask, taken
+
+    def _pack_queries(self):
+        s, q_cap, dim = self.tenants, self.query_slots, self.dim
+        qbuf = np.zeros((s, q_cap, dim), np.float32)
+        qmask = np.zeros((s, q_cap), np.float32)
+        fill = [0] * s
+        placements = []  # (pending, req_offset, tenant, slot_offset, count)
+        for st in self._query_q:
+            t = st.req.tenant
+            take = min(q_cap - fill[t], st.req.thetas.shape[0] - st.cursor)
+            if take <= 0:
+                continue
+            qbuf[t, fill[t]:fill[t] + take] = st.req.thetas[
+                st.cursor:st.cursor + take]
+            qmask[t, fill[t]:fill[t] + take] = 1.0
+            placements.append((st, st.cursor, t, fill[t], take))
+            st.cursor += take
+            fill[t] += take
+        return qbuf, qmask, placements
+
+    def tick(self) -> TickReport:
+        """Run one engine tick: fused banked ingest, then fused banked query.
+
+        Dispatches one of the three fixed programs by which halves carry
+        traffic; an idle tick is a host-side no-op. Queries packed into a
+        mixed tick read the post-ingest counters (read-your-writes).
+        """
+        if not self._ingest_q and not self._query_q:
+            self.ticks += 1  # idle tick: nothing to pack, nothing to run
+            return TickReport(tick=self.ticks, results=[], rows_ingested=0,
+                              points_served=0)
+        zbuf, zmask, rows = self._pack_ingest()
+        qbuf, qmask, placements = self._pack_queries()
+        do_ingest, do_query = rows > 0, bool(placements)
+        est = None
+        if self.mesh is None:
+            if do_ingest and do_query:
+                flat = np.concatenate([zbuf.ravel(), zmask.ravel(),
+                                       qbuf.ravel(), qmask.ravel()])
+                self._counts, self._n, est = self._tick_full(
+                    self._counts, self._n, flat)
+            elif do_ingest:
+                flat = np.concatenate([zbuf.ravel(), zmask.ravel()])
+                self._counts, self._n = self._tick_ingest(
+                    self._counts, self._n, flat)
+            elif do_query:
+                flat = np.concatenate([qbuf.ravel(), qmask.ravel()])
+                est = self._tick_query(self._counts, self._n, flat)
+        else:
+            zargs = (jnp.asarray(zbuf), jnp.asarray(zmask))
+            qargs = (jnp.asarray(qbuf.reshape(-1, self.dim)),
+                     jnp.asarray(qmask.reshape(-1)))
+            if do_ingest and do_query:
+                self._counts, self._n, est = self._tick_full(
+                    self._counts, self._n, *zargs, *qargs)
+            elif do_ingest:
+                self._counts, self._n = self._tick_ingest(
+                    self._counts, self._n, *zargs)
+            elif do_query:
+                est = self._tick_query(self._counts, self._n, *qargs)
+        served = 0
+        results: List[QueryResult] = []
+        if do_query:
+            losses = np.asarray(est).reshape(self.tenants, self.query_slots)
+            for st, req_off, t, slot_off, take in placements:
+                st.out[req_off:req_off + take] = \
+                    losses[t, slot_off:slot_off + take]
+                served += take
+        # Completion sweep runs even on ingest-only ticks: a zero-row query
+        # request has no rows to place but must still complete and report.
+        remaining: Deque[_PendingQuery] = deque()
+        for st in self._query_q:
+            if st.cursor == st.req.thetas.shape[0]:
+                results.append(QueryResult(st.req.rid, st.req.tenant, st.out))
+            else:
+                remaining.append(st)
+        self._query_q = remaining
+        self.ticks += 1
+        self.rows_ingested += rows
+        self.points_served += served
+        return TickReport(tick=self.ticks, results=results,
+                          rows_ingested=rows, points_served=served)
+
+    def run_until_idle(self, max_ticks: int = 10_000) -> List[QueryResult]:
+        """Tick until every pending request is served; returns all results."""
+        out: List[QueryResult] = []
+        while self.pending and max_ticks > 0:
+            out.extend(self.tick().results)
+            max_ticks -= 1
+        if self.pending:
+            raise RuntimeError(f"{self.pending} requests still pending "
+                               f"after the tick budget")
+        return out

@@ -242,6 +242,25 @@ def bank_specs(axis: str = "bank") -> Tuple[P, P]:
     return P(axis), P()
 
 
+def gateway_specs(axis: str = "bank") -> Tuple[P, P]:
+    """PartitionSpecs for the serving gateway's fused tick (DESIGN.md §10).
+
+    The gateway tick is the bank layout (:func:`bank_specs`) applied to
+    *traffic* instead of fleet members: the ``(S, R, B)`` counter bank and
+    ``(S,)`` insert counts shard their leading tenant axis, and every
+    per-tick buffer — the ``(S, I, dim)`` ingest stack, its ``(S, I)`` mask,
+    and the tenant-major ``(S*Q, dim)`` query block with its ``(S*Q,)`` mask
+    — shards the SAME axis, so each device ingests and answers exactly its
+    own tenants with zero per-tick communication. Hash params and scalars
+    replicate.
+
+    Returns:
+      ``(bank, replicated)`` PartitionSpecs; ``bank`` serves the counter
+      stack and every tick buffer.
+    """
+    return bank_specs(axis)
+
+
 def check_bank_divisible(s: int, mesh: Mesh, axis: str) -> None:
     """Fail fast when the bank cannot split evenly over the mesh axis."""
     size = mesh.shape[axis]

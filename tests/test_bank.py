@@ -656,3 +656,10 @@ class TestFleetFitBanked:
 
         with pytest.raises(ValueError):
             sharding_specs.check_bank_divisible(3, _FakeMesh(), "bank")
+
+    def test_gateway_specs_are_the_bank_layout(self):
+        """The serving gateway's tick shards exactly like a training bank
+        (DESIGN.md §10): one spec serves counters and every tick buffer."""
+        gw_spec, replicated = sharding_specs.gateway_specs("bank")
+        assert (gw_spec, replicated) == sharding_specs.bank_specs("bank")
+        assert gw_spec == jax.sharding.PartitionSpec("bank")

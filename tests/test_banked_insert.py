@@ -1,0 +1,198 @@
+"""Fused banked ingest tests: sketch_insert_banked / sketch_dataset_many.
+
+The tentpole contract (DESIGN.md §10): the ``(S, n, dim)``-stacked,
+mask-padded fused insert — vmapped scan engine or grid-over-S Pallas kernel
+— must be **bit-identical per tenant slice** to the standalone per-tenant
+build it replaces, including ragged (unequal ``n_s``) stacks and
+narrow-dtype saturation on the padded path. Counts are integers, so every
+check is exact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.kernels import ops, ref
+from repro.kernels import storm_sketch as histogram_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ragged_streams(s=4, d=5, seed=0, base=37, step=17):
+    return [
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed + t),
+                                (base + step * t, d))
+        for t in range(s)
+    ]
+
+
+def _params(d=5, rows=64, planes=3, seed=0):
+    return lsh.init_srp(jax.random.PRNGKey(seed), rows, planes, d + 2)
+
+
+class TestStackRagged:
+    def test_ragged_stack_shapes_and_mask(self):
+        zs = _ragged_streams()
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        n_max = max(z.shape[0] for z in zs)
+        assert stacked.shape == (4, n_max, 5)
+        for t, z in enumerate(zs):
+            assert int(mask[t].sum()) == z.shape[0]
+            np.testing.assert_array_equal(
+                np.asarray(stacked[t, : z.shape[0]]), np.asarray(z)
+            )
+            assert float(jnp.abs(stacked[t, z.shape[0]:]).sum()) == 0.0
+
+    def test_dense_stack_passthrough(self):
+        zs = jnp.ones((3, 10, 4))
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        assert stacked.shape == (3, 10, 4)
+        assert float(mask.sum()) == 30.0
+
+    def test_mismatched_dims_rejected(self):
+        with pytest.raises(ValueError):
+            sketch_lib.stack_ragged([jnp.ones((4, 3)), jnp.ones((4, 5))])
+
+
+class TestSketchDatasetManyFused:
+    """sketch_dataset_many (no host loop) vs the per-tenant standalone loop."""
+
+    @pytest.mark.parametrize("engine", ["scan", "kernel"])
+    @pytest.mark.parametrize("paired", [True, False])
+    def test_ragged_matches_per_tenant_loop(self, engine, paired):
+        zs = _ragged_streams()
+        # Paired inserts hash the augmented d+2 space; single-sided inserts
+        # hash raw points at params.dim.
+        params = lsh.init_srp(jax.random.PRNGKey(0), 64, 3,
+                              5 + 2 if paired else 5)
+        bank = sketch_lib.sketch_dataset_many(params, zs, batch=32,
+                                              paired=paired, engine=engine)
+        for t, z in enumerate(zs):
+            sk = sketch_lib.sketch_dataset(params, z, batch=32,
+                                           paired=paired, engine=engine)
+            np.testing.assert_array_equal(
+                np.asarray(bank.counts[t]), np.asarray(sk.counts)
+            )
+            assert int(bank.n[t]) == int(sk.n) == z.shape[0]
+
+    def test_equal_lengths_match_bank_of(self):
+        """Dense stacks reproduce the old bank_of(loop) result exactly."""
+        params = _params()
+        zs = jnp.stack(_ragged_streams(base=40, step=0))
+        bank = sketch_lib.sketch_dataset_many(params, zs, batch=16)
+        want = sketch_lib.bank_of([
+            sketch_lib.sketch_dataset(params, z, batch=16) for z in zs
+        ])
+        np.testing.assert_array_equal(np.asarray(bank.counts),
+                                      np.asarray(want.counts))
+        np.testing.assert_array_equal(np.asarray(bank.n), np.asarray(want.n))
+
+    @pytest.mark.parametrize("dtype,base,step", [
+        (jnp.int16, 30_000, 8_000),  # cell masses past 32767
+        (jnp.int8, 250, 75),         # cell masses past 127
+    ])
+    def test_narrow_dtype_saturates_on_padded_path(self, dtype, base, step):
+        """Ragged + narrow counters: the padded path must saturate exactly
+        like the standalone build (int32 carry, one final clamp)."""
+        # Tiny table so cells overflow the narrow dtype: R=4, p=1 -> B=2,
+        # a paired insert adds 2 per row per point.
+        params = _params(d=2, rows=4, planes=1, seed=3)
+        zs = [
+            0.3 * jax.random.normal(jax.random.PRNGKey(10 + t),
+                                    (base + step * t, 2))
+            for t in range(3)
+        ]
+        bank = sketch_lib.sketch_dataset_many(params, zs, batch=1024,
+                                              dtype=dtype, engine="scan")
+        info = jnp.iinfo(dtype)
+        assert int(jnp.max(bank.counts)) == info.max  # saturation engaged
+        for t, z in enumerate(zs):
+            sk = sketch_lib.sketch_dataset(params, z, batch=1024,
+                                           dtype=dtype, engine="scan")
+            np.testing.assert_array_equal(
+                np.asarray(bank.counts[t]), np.asarray(sk.counts)
+            )
+
+    def test_kernel_engine_rows_override_rejected(self):
+        zs = _ragged_streams(s=2)
+        with pytest.raises(ValueError, match="rows"):
+            sketch_lib.sketch_dataset_many(_params(), zs, rows=8,
+                                           engine="kernel")
+
+
+class TestSketchInsertBanked:
+    """ops.sketch_insert_banked: the streaming fused banked engine."""
+
+    @pytest.mark.parametrize("paired", [True, False])
+    def test_slices_match_sketch_stream(self, paired):
+        zs = _ragged_streams()
+        params = lsh.init_srp(jax.random.PRNGKey(0), 64, 3,
+                              5 + 2 if paired else 5)
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        bank = ops.sketch_insert_banked(params, stacked, mask, batch=32,
+                                        paired=paired)
+        for t, z in enumerate(zs):
+            sk = ops.sketch_stream(params, z, batch=32, paired=paired)
+            np.testing.assert_array_equal(
+                np.asarray(bank.counts[t]), np.asarray(sk.counts)
+            )
+            assert int(bank.n[t]) == int(sk.n)
+
+    def test_mass_conservation_ragged(self):
+        zs = _ragged_streams()
+        params = _params()
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        bank = ops.sketch_insert_banked(params, stacked, mask, batch=32)
+        for t, z in enumerate(zs):
+            # paired insert: 2 increments per row per unmasked point
+            assert int(bank.counts[t].sum()) == 2 * z.shape[0] * params.rows
+
+
+BANKED_KERNEL_SHAPES = [
+    (2, 16, 4, 16, 2),     # minimal
+    (4, 100, 9, 64, 4),    # paper-scale d
+    (3, 57, 24, 40, 3),    # off tile boundaries
+]
+
+
+class TestBankedKernels:
+    """Grid-over-S Pallas kernels vs the vmapped reference oracles."""
+
+    @pytest.mark.parametrize("s,n,d,r,p", BANKED_KERNEL_SHAPES)
+    def test_paired_matches_oracle(self, s, n, d, r, p):
+        kz, kw, km = jax.random.split(jax.random.PRNGKey(s + n), 3)
+        z = jax.random.normal(kz, (s, n, d)) * (0.5 / jnp.sqrt(d))
+        w = jax.random.normal(kw, (p, d + 2, r))
+        mask = (jax.random.uniform(km, (s, n)) > 0.25).astype(jnp.float32)
+        got = histogram_kernel.paired_hash_histogram_banked(
+            z, w, mask, interpret=True, block_n=16, block_r=32, block_d=8
+        )
+        want = ref.paired_hash_histogram_banked(z, w, mask)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("s,n,d,r,p", BANKED_KERNEL_SHAPES)
+    def test_single_sided_matches_oracle(self, s, n, d, r, p):
+        kx, kw, km = jax.random.split(jax.random.PRNGKey(7 * s + n), 3)
+        x = jax.random.normal(kx, (s, n, d))
+        w = jax.random.normal(kw, (p, d, r))
+        mask = (jax.random.uniform(km, (s, n)) > 0.25).astype(jnp.float32)
+        got = histogram_kernel.hash_histogram_banked(
+            x, w, mask, interpret=True, block_n=16, block_r=32, block_d=8
+        )
+        want = ref.hash_histogram_banked(x, w, mask)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ref_banked_slices_equal_lone_ref(self):
+        """The vmapped oracle's slices ARE the lone oracle, bit for bit."""
+        kz, kw = jax.random.split(jax.random.PRNGKey(5))
+        z = jax.random.normal(kz, (3, 40, 6)) * 0.2
+        w = jax.random.normal(kw, (3, 8, 32))
+        mask = jnp.ones((3, 40), jnp.float32)
+        got = ref.paired_hash_histogram_banked(z, w, mask)
+        for t in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(got[t]),
+                np.asarray(ref.paired_hash_histogram(z[t], w, mask[t])),
+            )

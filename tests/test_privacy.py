@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import lsh, privacy, sketch
 
@@ -69,6 +70,23 @@ class TestGaussianProjections:
         s2 = float(privacy.gaussian_sigma(2.0, 1e-5))
         assert s1 > s2 > 0
 
+    def test_sigma_is_static_python_float(self):
+        """gaussian_sigma is a *static* config helper: it must return a
+        Python float (not a traced/device jnp scalar), so callers can bake
+        it into shapes, configs, and jit-static arguments without tracer
+        leaks (the pre-PR-5 bug returned a jnp array)."""
+        s = privacy.gaussian_sigma(1.0, 1e-5)
+        assert type(s) is float
+        # Usable where only static values are legal, even under tracing:
+        import jax.numpy as jnp2
+
+        @jax.jit
+        def build(x):
+            width = int(privacy.gaussian_sigma(0.5, 1e-6, sensitivity=8.0))
+            return x + jnp2.zeros((width,))  # shape from the helper
+
+        assert build(jnp.zeros(())).shape[0] >= 1
+
     def test_private_insert_counts_mass(self):
         params, _ = _built_sketch()
         sk = sketch.init_sketch(64, 16)
@@ -76,3 +94,144 @@ class TestGaussianProjections:
         sk = privacy.private_prp_insert(jax.random.PRNGKey(11), sk, params, z, 0.5)
         assert int(sk.counts.sum()) == 20 * 64 * 2
         assert int(sk.n) == 20
+
+
+class TestPairedPrivateCodes:
+    """The paired private insert must make ONE shared-pass, full-rank
+    Gaussian release of the per-plane (s, t) decomposition and derive both
+    antithetic code sets from it (DESIGN.md §3.2's identity applied to the
+    noisy components) — not two independent full-projection draws (breaks
+    the pairing, doubles the budget), and not one scalar draw reused across
+    the pair (the antithetic combination cancels the noise and releases the
+    padding projection 2t noiselessly)."""
+
+    def _release(self, key, params, z, sigma):
+        """Reconstruct the single (s~, t~) release the mechanism makes."""
+        r, p, d_aug = params.projections.shape
+        d = d_aug - 2
+        sq = jnp.sum(z * z, axis=-1, keepdims=True)
+        pad = jnp.sqrt(jnp.clip(1.0 - sq, 0.0, None))
+        w = params.projections.reshape(r * p, d_aug)
+        s_part = jnp.einsum("...d,kd->...k", z, w[:, :d])
+        t_part = pad * w[:, d + 1]
+        k_s, k_t = jax.random.split(key)
+        noisy_s = s_part + sigma * jax.random.normal(k_s, s_part.shape)
+        noisy_t = t_part + sigma * jax.random.normal(k_t, t_part.shape)
+        return noisy_s, noisy_t, (r, p)
+
+    def _pack(self, bits, shape):
+        r, p = shape
+        weights = (2 ** jnp.arange(p, dtype=jnp.int32)).astype(jnp.int32)
+        return jnp.einsum("...rp,p->...r",
+                          bits.reshape(bits.shape[:-1] + (r, p)), weights)
+
+    def test_paired_relation_under_noise(self):
+        """Both code sets are post-processing of the SAME release: pos from
+        s~ + t~ > 0, neg from t~ - s~ > 0, so v_pos + v_neg = 2 t~ — the
+        clean path's antithetic identity applied to the noisy pad
+        projection."""
+        params, _ = _built_sketch()
+        key = jax.random.PRNGKey(21)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(20), (30, 5))
+        sigma = 0.7
+        cpos, cneg, noisy_t = privacy.private_prp_codes(key, params, z, sigma)
+        noisy_s, want_t, shape = self._release(key, params, z, sigma)
+        np.testing.assert_array_equal(np.asarray(noisy_t), np.asarray(want_t))
+        want_pos = self._pack((noisy_s + want_t > 0).astype(jnp.int32), shape)
+        want_neg = self._pack((want_t - noisy_s > 0).astype(jnp.int32), shape)
+        assert jnp.array_equal(cpos, want_pos)
+        assert jnp.array_equal(cneg, want_neg)
+
+    def test_rejects_independent_draws(self):
+        """Regression: the pre-PR-5 two-draw implementation (independent
+        noise on two separate full projections) must NOT reproduce the
+        shared-release codes."""
+        params, _ = _built_sketch()
+        key = jax.random.PRNGKey(23)
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(22), (50, 5))
+        sigma = 0.7
+        _, cneg, _ = privacy.private_prp_codes(key, params, z, sigma)
+        k1, k2 = jax.random.split(key)
+        buggy_neg = privacy.private_srp_codes(
+            k2, params, lsh.augment_data(-z), sigma
+        )
+        assert not jnp.array_equal(cneg, buggy_neg)
+
+    def test_boundary_points_not_distinguishable(self):
+        """Regression against the noise-cancellation bug: reusing ONE
+        scalar draw for both sides makes pad = 0 (boundary) points emit
+        deterministically complementary bit sets (v_pos = -v_neg exactly —
+        the noise cancels out of the antithetic pair and 2t leaks
+        noiselessly). The full-rank release must keep boundary points
+        noisy: complementarity holds only where |t~| is small by chance."""
+        params, _ = _built_sketch()
+        z = jax.random.normal(jax.random.PRNGKey(26), (40, 5))
+        z = z / jnp.linalg.norm(z, axis=-1, keepdims=True)  # pad = 0 exactly
+        cpos, cneg, _ = privacy.private_prp_codes(
+            jax.random.PRNGKey(27), params, z, 0.5
+        )
+        p = params.planes
+        complementary = jnp.mean(
+            (cpos + cneg == (1 << p) - 1).astype(jnp.float32)
+        )
+        # The broken scheme gives exactly 1.0 here, for every key and sigma.
+        assert float(complementary) < 0.9
+
+    def test_sigma_zero_matches_clean_prp(self):
+        """At sigma = 0 both code sets equal the non-private PRP codes (up
+        to measure-zero fp sign ties between the split s + t sum and the
+        fused augmented matmul — exact on this seed)."""
+        params, _ = _built_sketch()
+        z = 0.4 * jax.random.normal(jax.random.PRNGKey(24), (40, 5))
+        cpos, cneg, _ = privacy.private_prp_codes(
+            jax.random.PRNGKey(25), params, z, 0.0
+        )
+        want_pos, want_neg = lsh.prp_codes(params, z)
+        assert jnp.array_equal(cpos, want_pos)
+        assert jnp.array_equal(cneg, want_neg)
+
+    def test_wrong_dim_rejected(self):
+        params, _ = _built_sketch()
+        with pytest.raises(ValueError, match="dim"):
+            privacy.private_prp_codes(jax.random.PRNGKey(0), params,
+                                      jnp.zeros((3, 7)), 0.1)
+
+
+class TestQueryDenominatorCrossCheck:
+    """privacy.query_private vs sketch.query vs the kernels' ref path on the
+    SAME sketch at the epsilon -> inf clean limit: the estimators must agree
+    at the bit level, or one of them carries a silent bias."""
+
+    @pytest.mark.parametrize("paired", [True, False])
+    def test_bit_level_agreement_clean_limit(self, paired):
+        params, sk = _built_sketch()
+        ps = privacy.privatize_counts(jax.random.PRNGKey(30), sk,
+                                      epsilon=float("inf"), paired=paired)
+        # Infinite epsilon -> Laplace scale exactly 0 -> float counts are
+        # the integer counts verbatim.
+        np.testing.assert_array_equal(
+            np.asarray(ps.counts), np.asarray(sk.counts).astype(np.float32)
+        )
+        q = jax.random.normal(jax.random.PRNGKey(31), (8, 5))
+        codes = lsh.query_codes(params, q)
+        private = privacy.query_private(ps, codes, paired=paired)
+        exact = sketch.query(sk, codes, paired=paired)
+        np.testing.assert_array_equal(np.asarray(private), np.asarray(exact))
+
+    def test_bit_level_agreement_with_ref_gather(self):
+        """Same denominator as the kernel ref path: gather mean counts with
+        ref.sketch_query at the same codes, normalize by 2n, compare bits."""
+        from repro.kernels import ops, ref
+
+        params, sk = _built_sketch()
+        ps = privacy.privatize_counts(jax.random.PRNGKey(32), sk,
+                                      epsilon=float("inf"))
+        q = jax.random.normal(jax.random.PRNGKey(33), (8, 5))
+        q_aug = lsh.augment_query(lsh.normalize_query(q))
+        w = ops.from_lsh_params(params)
+        codes = ref.srp_hash(q_aug, w)
+        mean_count = ref.sketch_query(q_aug, w, sk.counts)
+        denom = jnp.maximum(sk.n.astype(jnp.float32), 1.0) * 2.0
+        want = mean_count / denom
+        got = privacy.query_private(ps, codes, paired=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
