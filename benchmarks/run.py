@@ -36,7 +36,7 @@ def _parse_row(row: str):
 def main() -> None:
     from benchmarks import (bench_classification, bench_distributed,
                             bench_kernels, bench_regression, bench_serve,
-                            bench_surrogate)
+                            bench_serve_load, bench_surrogate)
 
     suites = {
         "fig3": bench_surrogate.run,
@@ -45,6 +45,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "distributed": bench_distributed.run,
         "serve": bench_serve.run,
+        "serve_load": bench_serve_load.run,
     }
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="*",

@@ -1,21 +1,131 @@
 """STORM sketch-serving launcher: micro-batched gateway over a SketchBank.
 
-Drives mixed per-tenant read/write traffic through the fixed-tick gateway
-(``serve.storm_gateway``): every tick coalesces all pending ingest rows into
-one fused banked insert and all pending query points into one banked query
-call (DESIGN.md §10).
+Two modes:
 
-    PYTHONPATH=src python -m repro.launch.storm_serve --tenants 8 --ticks 32
+* **synthetic drive** (default) — generates mixed per-tenant read/write
+  traffic and pumps it through the fixed-tick gateway in-process, either
+  synchronously (the PR-5 loop) or double-buffered (``--pipelined``: pack
+  tick t+1 on the host while tick t runs on device, DESIGN.md §11).
+
+      PYTHONPATH=src python -m repro.launch.storm_serve --tenants 8 --ticks 32
+
+* **wire front-end** (``--listen HOST:PORT``) — serves the framed
+  JSON-or-npz protocol (``serve.wire``) so real clients can submit
+  ``IngestRequest``/``QueryRequest`` over a socket; the engine thread runs
+  the double-buffered tick loop and admission control turns queue overflow
+  into explicit backpressure errors.
+
+      PYTHONPATH=src python -m repro.launch.storm_serve --tenants 8 \\
+          --listen 127.0.0.1:7077 --max-pending-rows 4096
 """
 
 import argparse
+import itertools
 import time
+from typing import Iterator, List, Union
 
 import jax
 import numpy as np
 
 from repro.core import lsh
-from repro.serve.storm_gateway import IngestRequest, QueryRequest, StormGateway
+from repro.serve.storm_gateway import (
+    IngestRequest, QueryRequest, StormGateway,
+)
+
+
+def synth_traffic(
+    rng: np.random.Generator,
+    rids: Iterator[int],
+    tenants: int,
+    dim: int,
+    ingest_rate: int,
+    query_rate: int,
+) -> List[Union[IngestRequest, QueryRequest]]:
+    """One round of mixed per-tenant traffic with collision-free rids.
+
+    ``rids`` is a single monotonic counter shared by BOTH request classes
+    (``itertools.count()``): request ids are handles that route results
+    back to callers, so they must be unique across every request the
+    gateway ever sees. (The old scheme — ``tick*1000 + t`` for ingest,
+    ``tick*1000 + 500 + t`` for queries — collided whenever
+    ``tenants >= 500`` and aliased across ticks beyond 1000 tenants;
+    pinned by ``tests/test_serve_wire.py``.)
+    """
+    reqs: List[Union[IngestRequest, QueryRequest]] = []
+    for t in range(tenants):
+        n_rows = int(rng.poisson(ingest_rate))
+        if n_rows:
+            z = rng.normal(size=(n_rows, dim)).astype(np.float32)
+            z *= 0.4 / np.sqrt(dim)
+            reqs.append(IngestRequest(rid=next(rids), tenant=t, z=z))
+        n_q = int(rng.poisson(query_rate))
+        if n_q:
+            thetas = rng.normal(size=(n_q, dim)).astype(np.float32)
+            reqs.append(QueryRequest(rid=next(rids), tenant=t,
+                                     thetas=thetas))
+    return reqs
+
+
+def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
+    rng = np.random.default_rng(args.seed)
+    rids = itertools.count()
+
+    # Warm the tick (compile) before timing the serve loop.
+    gw.tick()
+    t0 = time.perf_counter()
+    completed = 0
+    if args.pipelined:
+        from collections import deque
+
+        inflight = deque()
+        for _ in range(args.ticks):
+            gw.submit_many(synth_traffic(rng, rids, args.tenants, args.dim,
+                                         args.ingest_rate, args.query_rate))
+            inflight.append(gw.tick_start())
+            if len(inflight) >= 2:
+                completed += len(gw.tick_finish(inflight.popleft()).results)
+        while inflight:
+            completed += len(gw.tick_finish(inflight.popleft()).results)
+        completed += len(gw.run_until_idle(pipelined=True))
+    else:
+        for _ in range(args.ticks):
+            gw.submit_many(synth_traffic(rng, rids, args.tenants, args.dim,
+                                         args.ingest_rate, args.query_rate))
+            completed += len(gw.tick().results)
+        completed += len(gw.run_until_idle())
+    dt = time.perf_counter() - t0
+
+    label = "pipelined" if args.pipelined else "synchronous"
+    print(f"served {gw.ticks - 1} {label} ticks over {args.tenants} tenants "
+          f"in {dt:.2f}s: {completed} queries answered "
+          f"({gw.points_served} points, {gw.points_served / dt:.0f} pts/s), "
+          f"{gw.rows_ingested} rows ingested "
+          f"({gw.rows_ingested / dt:.0f} rows/s)")
+    print(f"tick programs traced {gw.trace_count}x total "
+          f"(jit-stable padded shapes; <= 3 programs)")
+    print(f"bank: S={gw.tenants} R={gw.params.rows} B={gw.params.buckets} "
+          f"({gw.bank.memory_bytes():,} bytes)")
+
+
+def _drive_listen(gw: StormGateway, args: argparse.Namespace) -> None:
+    from repro.serve.wire import StormWireServer
+
+    host, _, port = args.listen.rpartition(":")
+    server = StormWireServer(gw, host or "127.0.0.1", int(port),
+                             depth=args.depth).start()
+    addr = server.address
+    print(f"listening on {addr[0]}:{addr[1]} "
+          f"(S={gw.tenants}, I={gw.ingest_slots}, Q={gw.query_slots}, "
+          f"caps rows={gw.max_pending_rows} points={gw.max_pending_points})")
+    try:
+        while True:
+            time.sleep(2.0)
+            s = gw.queue_stats()
+            print(f"ticks={s['ticks']} pending={s['pending_requests']} "
+                  f"rows={s['rows_ingested']} points={s['points_served']} "
+                  f"traces={s['trace_count']}")
+    except KeyboardInterrupt:
+        server.stop()
 
 
 def main() -> None:
@@ -34,47 +144,31 @@ def main() -> None:
     ap.add_argument("--query-rate", type=int, default=16,
                     help="mean new query points per tenant per tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipelined", action="store_true",
+                    help="double-buffered tick loop (overlap host packing "
+                         "with device execution)")
+    ap.add_argument("--listen", metavar="HOST:PORT", default=None,
+                    help="serve the wire protocol instead of synthetic "
+                         "traffic (port 0 = ephemeral)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight ticks in the wire engine loop")
+    ap.add_argument("--max-pending-rows", type=int, default=None,
+                    help="per-tenant ingest-queue cap (backpressure)")
+    ap.add_argument("--max-pending-points", type=int, default=None,
+                    help="per-tenant query-queue cap (backpressure)")
     args = ap.parse_args()
 
     params = lsh.init_srp(jax.random.PRNGKey(args.seed), args.rows,
                           args.planes, args.dim + 2)
     gw = StormGateway(params, args.tenants,
                       query_slots=args.query_slots,
-                      ingest_slots=args.ingest_slots)
-    rng = np.random.default_rng(args.seed)
-
-    def traffic(tick: int) -> None:
-        for t in range(args.tenants):
-            n_rows = int(rng.poisson(args.ingest_rate))
-            if n_rows:
-                z = rng.normal(size=(n_rows, args.dim)).astype(np.float32)
-                z *= 0.4 / np.sqrt(args.dim)
-                gw.submit(IngestRequest(rid=tick * 1000 + t, tenant=t, z=z))
-            n_q = int(rng.poisson(args.query_rate))
-            if n_q:
-                thetas = rng.normal(size=(n_q, args.dim)).astype(np.float32)
-                gw.submit(QueryRequest(rid=tick * 1000 + 500 + t, tenant=t,
-                                       thetas=thetas))
-
-    # Warm the tick (compile) before timing the serve loop.
-    gw.tick()
-    t0 = time.perf_counter()
-    completed = 0
-    for tick in range(args.ticks):
-        traffic(tick)
-        completed += len(gw.tick().results)
-    completed += len(gw.run_until_idle())
-    dt = time.perf_counter() - t0
-
-    print(f"served {gw.ticks - 1} ticks over {args.tenants} tenants in "
-          f"{dt:.2f}s: {completed} queries answered "
-          f"({gw.points_served} points, {gw.points_served / dt:.0f} pts/s), "
-          f"{gw.rows_ingested} rows ingested "
-          f"({gw.rows_ingested / dt:.0f} rows/s)")
-    print(f"tick programs traced {gw.trace_count}x total "
-          f"(jit-stable padded shapes; <= 3 programs)")
-    print(f"bank: S={gw.tenants} R={params.rows} B={params.buckets} "
-          f"({gw.bank.memory_bytes():,} bytes)")
+                      ingest_slots=args.ingest_slots,
+                      max_pending_rows=args.max_pending_rows,
+                      max_pending_points=args.max_pending_points)
+    if args.listen is not None:
+        _drive_listen(gw, args)
+    else:
+        _drive_synthetic(gw, args)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,1 @@
-from repro.serve import engine, storm_gateway  # noqa: F401
+from repro.serve import engine, storm_gateway, wire  # noqa: F401

@@ -1,4 +1,4 @@
-"""STORM serving gateway: one fused banked call per tick (DESIGN.md §10).
+"""STORM serving gateway: one fused banked call per tick (DESIGN.md §10–11).
 
 The sketch — not the data — is what lives at the edge and gets queried
 online, so the serving unit is a :class:`~repro.core.sketch.SketchBank`: S
@@ -25,6 +25,28 @@ read the post-ingest counters (read-your-writes). On the meshless path each
 tick ships ONE fused host buffer to the device (four tiny transfers cost
 more than the fused query itself at serving shapes).
 
+**Double-buffered serving (DESIGN.md §11).** A tick is two host-visible
+stages: :meth:`StormGateway.tick_start` packs pending traffic and dispatches
+the fused programs WITHOUT blocking (JAX async dispatch — the returned
+counter/estimate arrays are futures), and :meth:`StormGateway.tick_finish`
+performs the only D2H readback (the loss estimates) and reports completions.
+``tick()`` is exactly ``tick_finish(tick_start())``, so the synchronous loop
+is the depth-1 special case and bit-identity of the pipelined loop is by
+construction: packing (the only queue mutation) happens at start time in
+dispatch order, the device chains tick t+1's programs on tick t's output
+arrays, and readback order equals dispatch order. A driver that keeps two
+ticks in flight (``run_until_idle(pipelined=True)``, or the wire server's
+engine thread) overlaps tick t+1's host packing with tick t's device
+execution and pays ``jax.block_until_ready``-equivalent waits only at
+result-completion time, never between ticks.
+
+Admission control: optional per-tenant ``max_pending_rows`` /
+``max_pending_points`` caps bound the queues — a submit that would exceed a
+tenant's cap raises :class:`Backpressure` (the wire front-end turns this
+into an explicit retryable response) instead of growing an unbounded deque.
+Slot capacity is per-tenant, so one tenant's flood can neither starve
+another tenant's tick slots nor, with caps set, its queue memory.
+
 The tenant-major slot layout is deliberately the member-major contract of
 banked fleets (``fleet.member_point_idx`` with ``member_map = arange(S)``),
 so a mesh splits tenants across devices exactly like
@@ -32,11 +54,13 @@ so a mesh splits tenants across devices exactly like
 (``sharding.specs.gateway_specs``): each device owns its tenants' tables and
 exactly those tenants' tick slots — zero per-tick communication.
 
-Correctness contract (pinned in ``tests/test_serve_gateway.py``): a tenant's
-counters after any interleaving of gateway ticks are bit-identical to the
-standalone ``sketch_dataset`` build of its stream, and a tenant's query
-results are bit-identical to standalone ``ops.query_theta_with_weights``
-calls against its lone sketch.
+Correctness contract (pinned in ``tests/test_serve_gateway.py`` and
+``tests/test_serve_async.py``): a tenant's counters after any interleaving
+of gateway ticks are bit-identical to the standalone ``sketch_dataset``
+build of its stream, a tenant's query results are bit-identical to
+standalone ``ops.query_theta_with_weights`` calls against its lone sketch,
+and the pipelined loop is bit-identical to the synchronous loop — reports,
+counters, and result ordering included.
 """
 
 from __future__ import annotations
@@ -53,6 +77,43 @@ from repro.core import fleet, lsh, sketch as sketch_lib
 from repro.kernels import ops
 
 Array = jax.Array
+
+
+class Backpressure(RuntimeError):
+    """A submit would exceed a tenant's bounded-queue capacity.
+
+    Explicit backpressure instead of unbounded queue growth: the caller
+    (or the wire front-end, which relays this as a retryable error frame)
+    should drain completions and resubmit.
+    """
+
+    def __init__(self, tenant: int, kind: str, pending: int, requested: int,
+                 limit: int):
+        super().__init__(
+            f"tenant {tenant} {kind} queue full: {pending} pending + "
+            f"{requested} requested > cap {limit}"
+        )
+        self.tenant = tenant
+        self.kind = kind  # "ingest" | "query"
+        self.pending = pending
+        self.requested = requested
+        self.limit = limit
+
+
+class TickBudgetExceeded(RuntimeError):
+    """``run_until_idle`` exhausted its tick budget with requests pending.
+
+    Results that DID complete within the budget are attached as
+    ``completed`` (and the number of still-queued requests as ``pending``)
+    so a caller can salvage partial progress instead of losing every
+    already-served answer.
+    """
+
+    def __init__(self, pending: int, completed: List["QueryResult"]):
+        super().__init__(f"{pending} requests still pending after the tick "
+                         f"budget ({len(completed)} results completed)")
+        self.pending = pending
+        self.completed = completed
 
 
 @dataclasses.dataclass
@@ -87,14 +148,24 @@ class QueryResult:
 
 
 @dataclasses.dataclass
+class IngestResult:
+    """An ingest request's final row reached the counters this tick."""
+
+    rid: int
+    tenant: int
+    rows: int
+
+
+@dataclasses.dataclass
 class TickReport:
-    """What one engine tick did (completed queries only — a split request
+    """What one engine tick did (completed requests only — a split request
     reports once, on the tick that finishes it)."""
 
     tick: int
     results: List[QueryResult]
     rows_ingested: int
     points_served: int
+    ingest_done: List[IngestResult] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -108,6 +179,41 @@ class _PendingQuery:
     req: QueryRequest
     cursor: int = 0
     out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class InflightTick:
+    """One dispatched-but-unread tick (DESIGN.md §11 stage contract).
+
+    Everything queue-related was resolved at :meth:`StormGateway.tick_start`
+    time; ``est`` is the only device future a finish must wait on, and
+    ``placements``/``completes``/``ingest_done`` are the host-side
+    bookkeeping that turns the readback into :class:`TickReport` entries.
+    """
+
+    tick: int
+    est: Optional[Array]  # device future of the fused query, or None
+    placements: list  # (pending, req_offset, tenant, slot_offset, count)
+    completes: List[_PendingQuery]  # finished packing; report at finish
+    ingest_done: List[IngestResult]
+    rows: int
+    points: int
+
+
+def _jit_cache_size(f) -> Optional[int]:
+    """Best-effort read of a jitted function's trace-cache size.
+
+    ``f._cache_size()`` is private jit API and has moved/broken across JAX
+    releases; returning ``None`` (instead of raising, or silently returning
+    0) routes :attr:`StormGateway.trace_count` to the gateway's own
+    trace-event counter so the jit-stability invariant stays ENFORCED
+    rather than vacuously skipped.
+    """
+    try:
+        size = f._cache_size()
+    except Exception:
+        return None
+    return size if isinstance(size, int) else None
 
 
 class StormGateway:
@@ -126,6 +232,8 @@ class StormGateway:
         bank: Optional[sketch_lib.SketchBank] = None,
         mesh=None,
         axis: str = "bank",
+        max_pending_rows: Optional[int] = None,
+        max_pending_points: Optional[int] = None,
     ):
         """Args:
           params: the ONE hash family shared by every tenant's sketch.
@@ -145,6 +253,11 @@ class StormGateway:
           mesh / axis: optional device mesh splitting tenants over ``axis``
             (``sharding.specs.gateway_specs``); ``None`` runs the identical
             program unsharded.
+          max_pending_rows: per-tenant cap on queued ingest rows; a submit
+            that would exceed it raises :class:`Backpressure`. ``None``
+            leaves the queue unbounded.
+          max_pending_points: per-tenant cap on queued query points;
+            ``None`` = unbounded.
         """
         if tenants < 1:
             raise ValueError(f"need at least one tenant; got {tenants}")
@@ -162,6 +275,8 @@ class StormGateway:
         self.mode = mode
         self.mesh = mesh
         self.axis = axis
+        self.max_pending_rows = max_pending_rows
+        self.max_pending_points = max_pending_points
         if bank is None:
             bank = sketch_lib.SketchBank(
                 counts=jnp.zeros((tenants, params.rows, params.buckets),
@@ -178,9 +293,12 @@ class StormGateway:
         self._n = bank.n
         self._ingest_q: Deque[_PendingIngest] = deque()
         self._query_q: Deque[_PendingQuery] = deque()
+        self._pending_rows = [0] * tenants
+        self._pending_points = [0] * tenants
         self.ticks = 0
         self.rows_ingested = 0
         self.points_served = 0
+        self._trace_events = 0  # fallback trace counter (see trace_count)
         self._tick_full, self._tick_ingest, self._tick_query = \
             self._build_ticks()
 
@@ -197,12 +315,26 @@ class StormGateway:
                     f"ingest rows must be (rows, {self.ingest_dim}); got "
                     f"{z.shape}"
                 )
+            if self.max_pending_rows is not None and (
+                    self._pending_rows[req.tenant] + z.shape[0]
+                    > self.max_pending_rows):
+                raise Backpressure(req.tenant, "ingest",
+                                   self._pending_rows[req.tenant],
+                                   z.shape[0], self.max_pending_rows)
+            self._pending_rows[req.tenant] += z.shape[0]
             self._ingest_q.append(_PendingIngest(dataclasses.replace(req, z=z)))
         elif isinstance(req, QueryRequest):
             th = np.asarray(req.thetas, np.float32)
             if th.ndim != 2 or th.shape[1] != self.dim:
                 raise ValueError(f"query thetas must be (q, {self.dim}); "
                                  f"got {th.shape}")
+            if self.max_pending_points is not None and (
+                    self._pending_points[req.tenant] + th.shape[0]
+                    > self.max_pending_points):
+                raise Backpressure(req.tenant, "query",
+                                   self._pending_points[req.tenant],
+                                   th.shape[0], self.max_pending_points)
+            self._pending_points[req.tenant] += th.shape[0]
             self._query_q.append(_PendingQuery(
                 dataclasses.replace(req, thetas=th),
                 out=np.zeros((th.shape[0],), np.float32),
@@ -219,6 +351,19 @@ class StormGateway:
     def pending(self) -> int:
         return len(self._ingest_q) + len(self._query_q)
 
+    def queue_stats(self) -> dict:
+        """Host-side gateway state for monitoring / the wire stats reply."""
+        return {
+            "tenants": self.tenants,
+            "ticks": self.ticks,
+            "pending_requests": self.pending,
+            "pending_rows": list(self._pending_rows),
+            "pending_points": list(self._pending_points),
+            "rows_ingested": self.rows_ingested,
+            "points_served": self.points_served,
+            "trace_count": self.trace_count,
+        }
+
     @property
     def bank(self) -> sketch_lib.SketchBank:
         """The live counter bank (device arrays; post-last-tick state)."""
@@ -231,11 +376,33 @@ class StormGateway:
     @property
     def trace_count(self) -> int:
         """Total traces across the three tick programs (jit-stability: this
-        must stay <= 3 for any request mix over the gateway's lifetime)."""
-        return sum(f._cache_size() for f in
-                   (self._tick_full, self._tick_ingest, self._tick_query))
+        must stay <= 3 for any request mix over the gateway's lifetime).
+
+        Prefers the jit caches (``_cache_size``, private API) and falls back
+        to the gateway's own trace-event counter — each tick program bumps
+        ``_trace_events`` when (and only when) its Python body is traced —
+        so the invariant survives JAX versions that rename the private
+        accessor instead of silently reporting zero.
+        """
+        sizes = [_jit_cache_size(f) for f in
+                 (self._tick_full, self._tick_ingest, self._tick_query)]
+        if any(s is None for s in sizes):
+            return self._trace_events
+        return sum(sizes)
 
     # -- the fused tick -----------------------------------------------------
+
+    def _counting(self, fn):
+        """Bump the fallback trace counter when ``fn``'s body is traced.
+
+        The increment is a Python side effect, so under ``jax.jit`` it runs
+        once per trace (cache miss), never per call — exactly the event
+        ``trace_count`` wants when ``_cache_size`` is unavailable.
+        """
+        def wrapped(*args):
+            self._trace_events += 1
+            return fn(*args)
+        return wrapped
 
     def _build_ticks(self):
         """Build the three fixed tick programs (full / ingest / query).
@@ -306,13 +473,13 @@ class StormGateway:
                         flat[q_end:q_end + s * q_cap])
 
             return (
-                jax.jit(lambda counts, n, flat: tick_full(
+                jax.jit(self._counting(lambda counts, n, flat: tick_full(
                     counts, n, *unpack_ingest(flat),
-                    *unpack_query(flat, zm_end))),
-                jax.jit(lambda counts, n, flat: tick_ingest(
-                    counts, n, *unpack_ingest(flat))),
-                jax.jit(lambda counts, n, flat: tick_query(
-                    counts, n, *unpack_query(flat, 0))),
+                    *unpack_query(flat, zm_end)))),
+                jax.jit(self._counting(lambda counts, n, flat: tick_ingest(
+                    counts, n, *unpack_ingest(flat)))),
+                jax.jit(self._counting(lambda counts, n, flat: tick_query(
+                    counts, n, *unpack_query(flat, 0)))),
             )
 
         from repro import compat
@@ -321,13 +488,19 @@ class StormGateway:
         bank_spec, _ = sharding_specs.gateway_specs(self.axis)
         sharding_specs.check_bank_divisible(self.tenants, self.mesh,
                                             self.axis)
+        # Tick buffers get explicit tenant-axis shardings at dispatch time
+        # (device_put before the call), so the h2d transfer of tick t+1 can
+        # overlap tick t's execution instead of serializing inside the
+        # sharded call (DESIGN.md §11 overlap invariant).
+        self._in_shardings = sharding_specs.named(
+            self.mesh, sharding_specs.gateway_input_specs(self.axis))
 
         def shard(fn, n_in, n_out):
-            return jax.jit(compat.shard_map(
+            return jax.jit(self._counting(compat.shard_map(
                 fn, mesh=self.mesh,
                 in_specs=(bank_spec,) * n_in,
                 out_specs=(bank_spec,) * n_out if n_out > 1 else bank_spec,
-            ))
+            )))
 
         return (shard(tick_full, 6, 3), shard(tick_ingest, 4, 2),
                 shard(tick_query, 4, 1))
@@ -338,6 +511,7 @@ class StormGateway:
         zmask = np.zeros((s, i_cap), np.float32)
         fill = [0] * s
         taken = 0
+        done: List[IngestResult] = []
         for st in self._ingest_q:
             t = st.req.tenant
             take = min(i_cap - fill[t], st.req.z.shape[0] - st.cursor)
@@ -349,10 +523,16 @@ class StormGateway:
             st.cursor += take
             fill[t] += take
             taken += take
-        self._ingest_q = deque(
-            st for st in self._ingest_q if st.cursor < st.req.z.shape[0]
-        )
-        return zbuf, zmask, taken
+            self._pending_rows[t] -= take
+        remaining: Deque[_PendingIngest] = deque()
+        for st in self._ingest_q:
+            if st.cursor < st.req.z.shape[0]:
+                remaining.append(st)
+            else:
+                done.append(IngestResult(st.req.rid, st.req.tenant,
+                                         st.req.z.shape[0]))
+        self._ingest_q = remaining
+        return zbuf, zmask, taken, done
 
     def _pack_queries(self):
         s, q_cap, dim = self.tenants, self.query_slots, self.dim
@@ -371,21 +551,40 @@ class StormGateway:
             placements.append((st, st.cursor, t, fill[t], take))
             st.cursor += take
             fill[t] += take
-        return qbuf, qmask, placements
+            self._pending_points[t] -= take
+        # Fully-packed requests leave the queue NOW (dispatch order) and
+        # report at finish time — including zero-row requests, which have
+        # no rows to place but must still complete (possibly on a tick
+        # whose query half is otherwise empty).
+        completes: List[_PendingQuery] = []
+        remaining: Deque[_PendingQuery] = deque()
+        for st in self._query_q:
+            if st.cursor == st.req.thetas.shape[0]:
+                completes.append(st)
+            else:
+                remaining.append(st)
+        self._query_q = remaining
+        return qbuf, qmask, placements, completes
 
-    def tick(self) -> TickReport:
-        """Run one engine tick: fused banked ingest, then fused banked query.
+    def tick_start(self) -> InflightTick:
+        """Pack pending traffic and dispatch the fused tick WITHOUT blocking.
 
-        Dispatches one of the three fixed programs by which halves carry
-        traffic; an idle tick is a host-side no-op. Queries packed into a
-        mixed tick read the post-ingest counters (read-your-writes).
+        All queue mutation happens here, synchronously, in dispatch order;
+        the returned :class:`InflightTick` carries the device future of the
+        loss estimates (``est``) plus the host bookkeeping
+        :meth:`tick_finish` needs. The counter/count arrays advance to the
+        dispatched programs' outputs immediately — they are futures, and
+        the next ``tick_start`` chains on them without a host sync, which
+        is what lets a depth-2 driver pack tick t+1 while tick t runs.
         """
+        self.ticks += 1
         if not self._ingest_q and not self._query_q:
-            self.ticks += 1  # idle tick: nothing to pack, nothing to run
-            return TickReport(tick=self.ticks, results=[], rows_ingested=0,
-                              points_served=0)
-        zbuf, zmask, rows = self._pack_ingest()
-        qbuf, qmask, placements = self._pack_queries()
+            # Idle tick: nothing to pack, nothing to run.
+            return InflightTick(tick=self.ticks, est=None, placements=[],
+                                completes=[], ingest_done=[], rows=0,
+                                points=0)
+        zbuf, zmask, rows, ingest_done = self._pack_ingest()
+        qbuf, qmask, placements, completes = self._pack_queries()
         do_ingest, do_query = rows > 0, bool(placements)
         est = None
         if self.mesh is None:
@@ -402,9 +601,11 @@ class StormGateway:
                 flat = np.concatenate([qbuf.ravel(), qmask.ravel()])
                 est = self._tick_query(self._counts, self._n, flat)
         else:
-            zargs = (jnp.asarray(zbuf), jnp.asarray(zmask))
-            qargs = (jnp.asarray(qbuf.reshape(-1, self.dim)),
-                     jnp.asarray(qmask.reshape(-1)))
+            sh_z, sh_zm, sh_q, sh_qm = self._in_shardings
+            zargs = (jax.device_put(zbuf, sh_z),
+                     jax.device_put(zmask, sh_zm))
+            qargs = (jax.device_put(qbuf.reshape(-1, self.dim), sh_q),
+                     jax.device_put(qmask.reshape(-1), sh_qm))
             if do_ingest and do_query:
                 self._counts, self._n, est = self._tick_full(
                     self._counts, self._n, *zargs, *qargs)
@@ -413,36 +614,74 @@ class StormGateway:
                     self._counts, self._n, *zargs)
             elif do_query:
                 est = self._tick_query(self._counts, self._n, *qargs)
-        served = 0
+        points = sum(take for *_, take in placements)
+        return InflightTick(tick=self.ticks, est=est, placements=placements,
+                            completes=completes, ingest_done=ingest_done,
+                            rows=rows, points=points)
+
+    def tick_finish(self, inflight: InflightTick) -> TickReport:
+        """Read back one dispatched tick's estimates and report completions.
+
+        The ``np.asarray(est)`` here is the ONLY device->host sync in the
+        serving loop; with another tick already dispatched it overlaps that
+        tick's execution. Finish ticks in dispatch order — results land in
+        request ``out`` buffers cumulatively across the ticks of a split
+        request.
+        """
         results: List[QueryResult] = []
-        if do_query:
-            losses = np.asarray(est).reshape(self.tenants, self.query_slots)
-            for st, req_off, t, slot_off, take in placements:
+        if inflight.est is not None:
+            losses = np.asarray(inflight.est).reshape(self.tenants,
+                                                      self.query_slots)
+            for st, req_off, t, slot_off, take in inflight.placements:
                 st.out[req_off:req_off + take] = \
                     losses[t, slot_off:slot_off + take]
-                served += take
-        # Completion sweep runs even on ingest-only ticks: a zero-row query
-        # request has no rows to place but must still complete and report.
-        remaining: Deque[_PendingQuery] = deque()
-        for st in self._query_q:
-            if st.cursor == st.req.thetas.shape[0]:
-                results.append(QueryResult(st.req.rid, st.req.tenant, st.out))
-            else:
-                remaining.append(st)
-        self._query_q = remaining
-        self.ticks += 1
-        self.rows_ingested += rows
-        self.points_served += served
-        return TickReport(tick=self.ticks, results=results,
-                          rows_ingested=rows, points_served=served)
+        for st in inflight.completes:
+            results.append(QueryResult(st.req.rid, st.req.tenant, st.out))
+        self.rows_ingested += inflight.rows
+        self.points_served += inflight.points
+        return TickReport(tick=inflight.tick, results=results,
+                          rows_ingested=inflight.rows,
+                          points_served=inflight.points,
+                          ingest_done=inflight.ingest_done)
 
-    def run_until_idle(self, max_ticks: int = 10_000) -> List[QueryResult]:
-        """Tick until every pending request is served; returns all results."""
+    def tick(self) -> TickReport:
+        """Run one engine tick synchronously: fused banked ingest, then
+        fused banked query, then block for the results.
+
+        Exactly ``tick_finish(tick_start())`` — the depth-1 degenerate case
+        of the pipelined loop, kept as the simple API and the A/B baseline.
+        Dispatches one of the three fixed programs by which halves carry
+        traffic; an idle tick is a host-side no-op. Queries packed into a
+        mixed tick read the post-ingest counters (read-your-writes).
+        """
+        return self.tick_finish(self.tick_start())
+
+    def run_until_idle(self, max_ticks: int = 10_000, *,
+                       pipelined: bool = False,
+                       depth: int = 2) -> List[QueryResult]:
+        """Tick until every pending request is served; returns all results.
+
+        ``pipelined=True`` drains with up to ``depth`` ticks in flight
+        (double-buffered: pack tick t+1 while tick t runs) — bit-identical
+        results and counters, better wall-clock. On budget exhaustion
+        raises :class:`TickBudgetExceeded` carrying the results that DID
+        complete.
+        """
         out: List[QueryResult] = []
-        while self.pending and max_ticks > 0:
-            out.extend(self.tick().results)
-            max_ticks -= 1
+        if pipelined:
+            inflight: Deque[InflightTick] = deque()
+            while self.pending or inflight:
+                while self.pending and len(inflight) < depth and \
+                        max_ticks > 0:
+                    inflight.append(self.tick_start())
+                    max_ticks -= 1
+                if not inflight:
+                    break  # pending traffic but no tick budget left
+                out.extend(self.tick_finish(inflight.popleft()).results)
+        else:
+            while self.pending and max_ticks > 0:
+                out.extend(self.tick().results)
+                max_ticks -= 1
         if self.pending:
-            raise RuntimeError(f"{self.pending} requests still pending "
-                               f"after the tick budget")
+            raise TickBudgetExceeded(self.pending, out)
         return out

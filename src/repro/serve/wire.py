@@ -1,0 +1,315 @@
+"""Framed wire protocol + socket front-end for the STORM gateway.
+
+DESIGN.md §11.4. The gateway's unit of work is host numpy arrays, so the
+wire format is deliberately array-first: every message is one frame
+
+    +----------------+----------------+----------------+---------...
+    | header_len u32 | payload_len u32|  JSON header   | raw array bytes
+    +----------------+----------------+----------------+---------...
+
+(big-endian length prefixes). The JSON header carries the message ``type``
+and routing fields (``rid``, ``tenant``); an array payload's ``shape`` and
+``dtype`` (numpy dtype string, e.g. ``"<f4"``) ride in the header and the
+payload is the raw C-order bytes — no base64, no pickling, and the server
+deserializes straight into the float32 buffers the tick packer consumes.
+Control messages (acks, errors, stats) are JSON-only frames with
+``payload_len == 0``; tiny arrays MAY instead ride inline in the header as
+a ``data`` list (the JSON path of "JSON-or-npz"), which the decoder accepts
+interchangeably.
+
+Client -> server types: ``ingest`` / ``query`` (array-carrying), ``stats``.
+Server -> client types: ``result`` (query losses, array-carrying),
+``ingest_ok`` (the request's last row reached the counters), ``error``
+(validation or — with ``"backpressure": true`` — admission rejection; the
+client should drain completions and retry), ``stats_reply``.
+
+:class:`StormWireServer` runs the double-buffered engine loop (§11.1) on a
+dedicated thread: connection handler threads deserialize and submit under
+the queue lock, while the engine thread keeps up to ``depth`` ticks in
+flight — so wire deserialization, host packing, and device execution of
+consecutive ticks all overlap. Backpressure never blocks the socket reader:
+an over-cap submit turns into an ``error`` frame on the spot.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.storm_gateway import (
+    Backpressure, IngestRequest, QueryRequest, StormGateway,
+)
+
+_PREFIX = struct.Struct("!II")
+_MAX_FRAME = 1 << 30  # sanity bound on header+payload (1 GiB)
+
+
+# -- framing ----------------------------------------------------------------
+
+
+def send_frame(sock: socket.socket, header: dict,
+               payload: bytes = b"") -> None:
+    """Serialize one message as [len(header) | len(payload) | both]."""
+    body = json.dumps(header, separators=(",", ":")).encode()
+    sock.sendall(_PREFIX.pack(len(body), len(payload)) + body + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Optional[Tuple[dict, bytes]]:
+    """Read one frame; ``None`` on clean EOF. Raises on a torn frame."""
+    prefix = _recv_exact(sock, _PREFIX.size)
+    if prefix is None:
+        return None
+    hlen, plen = _PREFIX.unpack(prefix)
+    if hlen + plen > _MAX_FRAME:
+        raise ValueError(f"frame too large: {hlen + plen} bytes")
+    body = _recv_exact(sock, hlen + plen)
+    if body is None:
+        raise ConnectionError("peer closed mid-frame")
+    return json.loads(body[:hlen]), body[hlen:]
+
+
+def encode_array(header: dict, arr: np.ndarray) -> bytes:
+    """Attach ``arr``'s shape/dtype to ``header``; return payload bytes."""
+    arr = np.ascontiguousarray(arr)
+    header["shape"] = list(arr.shape)
+    header["dtype"] = arr.dtype.str
+    return arr.tobytes()
+
+
+def decode_array(header: dict, payload: bytes) -> np.ndarray:
+    """Recover the array from a frame — raw payload or inline ``data``."""
+    if payload:
+        return np.frombuffer(payload, dtype=np.dtype(header["dtype"])
+                             ).reshape(header["shape"]).copy()
+    return np.asarray(header["data"], np.float32)
+
+
+# -- server -----------------------------------------------------------------
+
+
+class StormWireServer:
+    """Socket front-end running the double-buffered gateway engine.
+
+    One engine thread owns the tick loop (``tick_start``/``tick_finish``
+    with up to ``depth`` ticks in flight); one handler thread per
+    connection deserializes frames and submits requests. ``lock`` guards
+    the gateway queues (submit vs. pack); result readback runs OUTSIDE the
+    lock, so accepting new traffic overlaps the device wait.
+    """
+
+    def __init__(self, gateway: StormGateway, host: str = "127.0.0.1",
+                 port: int = 0, *, depth: int = 2,
+                 idle_sleep_s: float = 0.0002):
+        self.gateway = gateway
+        self.depth = depth
+        self.idle_sleep_s = idle_sleep_s
+        self._lock = threading.Lock()  # gateway queues + owner table
+        self._owners: Dict[int, "_Conn"] = {}  # rid -> submitting conn
+        self._stop = threading.Event()
+        self._listener = socket.create_server((host, port))
+        self._threads = []
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._listener.getsockname()[:2]
+
+    def start(self) -> "StormWireServer":
+        for target in (self._accept_loop, self._engine_loop):
+            th = threading.Thread(target=target, daemon=True)
+            th.start()
+            self._threads.append(th)
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for th in self._threads:
+            th.join(timeout=5)
+
+    # -- engine thread ------------------------------------------------------
+
+    def _engine_loop(self) -> None:
+        gw = self.gateway
+        inflight = deque()
+        while not self._stop.is_set():
+            with self._lock:
+                while gw.pending and len(inflight) < self.depth:
+                    inflight.append(gw.tick_start())
+            if not inflight:
+                time.sleep(self.idle_sleep_s)
+                continue
+            report = gw.tick_finish(inflight.popleft())
+            self._route(report)
+
+    def _route(self, report) -> None:
+        for res in report.results:
+            self._reply(res.rid, {"type": "result", "rid": res.rid,
+                                  "tenant": res.tenant}, res.losses)
+        for ing in report.ingest_done:
+            self._reply(ing.rid, {"type": "ingest_ok", "rid": ing.rid,
+                                  "tenant": ing.tenant, "rows": ing.rows})
+
+    def _reply(self, rid: int, header: dict,
+               arr: Optional[np.ndarray] = None) -> None:
+        with self._lock:
+            conn = self._owners.pop(rid, None)
+        if conn is not None:
+            conn.send(header, arr)
+
+    # -- connection handlers ------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            th = threading.Thread(target=self._serve_conn,
+                                  args=(_Conn(sock),), daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def _serve_conn(self, conn: "_Conn") -> None:
+        try:
+            while not self._stop.is_set():
+                frame = recv_frame(conn.sock)
+                if frame is None:
+                    return
+                self._handle(conn, *frame)
+        except (ConnectionError, OSError, ValueError):
+            return
+        finally:
+            conn.close()
+
+    def _handle(self, conn: "_Conn", header: dict, payload: bytes) -> None:
+        kind = header.get("type")
+        rid = header.get("rid")
+        if kind == "stats":
+            with self._lock:
+                stats = self.gateway.queue_stats()
+            conn.send({"type": "stats_reply", "rid": rid, "stats": stats})
+            return
+        if kind not in ("ingest", "query"):
+            conn.send({"type": "error", "rid": rid,
+                       "error": f"unknown message type {kind!r}",
+                       "backpressure": False})
+            return
+        try:
+            arr = decode_array(header, payload)
+            tenant = int(header["tenant"])
+            req = (IngestRequest(rid=rid, tenant=tenant, z=arr)
+                   if kind == "ingest"
+                   else QueryRequest(rid=rid, tenant=tenant, thetas=arr))
+            with self._lock:
+                self.gateway.submit(req)
+                self._owners[rid] = conn
+        except Backpressure as e:
+            conn.send({"type": "error", "rid": rid, "error": str(e),
+                       "backpressure": True, "tenant": e.tenant,
+                       "kind": e.kind, "limit": e.limit})
+        except (KeyError, TypeError, ValueError) as e:
+            conn.send({"type": "error", "rid": rid, "error": str(e),
+                       "backpressure": False})
+
+
+class _Conn:
+    """A client connection with serialized sends (engine + handler threads
+    both write to it)."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._wlock = threading.Lock()
+
+    def send(self, header: dict, arr: Optional[np.ndarray] = None) -> None:
+        payload = b"" if arr is None else encode_array(header, arr)
+        try:
+            with self._wlock:
+                send_frame(self.sock, header, payload)
+        except (ConnectionError, OSError):
+            pass  # peer vanished; its results are simply dropped
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# -- client -----------------------------------------------------------------
+
+
+class StormWireClient:
+    """Minimal client: non-blocking submits + a blocking ``recv`` of the
+    next server frame (the closed-loop load generator's interface). For
+    strict request/response usage see :meth:`query_sync`.
+    """
+
+    def __init__(self, host: str, port: int, timeout_s: float = 30.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout_s)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def ingest(self, rid: int, tenant: int, z: np.ndarray) -> None:
+        header = {"type": "ingest", "rid": rid, "tenant": tenant}
+        payload = encode_array(header, np.asarray(z, np.float32))
+        send_frame(self.sock, header, payload)
+
+    def query(self, rid: int, tenant: int, thetas: np.ndarray) -> None:
+        header = {"type": "query", "rid": rid, "tenant": tenant}
+        payload = encode_array(header, np.asarray(thetas, np.float32))
+        send_frame(self.sock, header, payload)
+
+    def recv(self) -> Tuple[dict, Optional[np.ndarray]]:
+        """Next server frame as (header, array-or-None); blocks."""
+        frame = recv_frame(self.sock)
+        if frame is None:
+            raise ConnectionError("server closed the connection")
+        header, payload = frame
+        arr = (decode_array(header, payload)
+               if header["type"] == "result" else None)
+        return header, arr
+
+    def query_sync(self, rid: int, tenant: int,
+                   thetas: np.ndarray) -> np.ndarray:
+        """Submit one query and block for ITS losses (single-threaded use:
+        raises if an unrelated frame arrives first)."""
+        self.query(rid, tenant, thetas)
+        header, arr = self.recv()
+        if header["type"] == "error":
+            raise RuntimeError(header["error"])
+        if header.get("rid") != rid:
+            raise RuntimeError(f"out-of-order reply {header}")
+        return arr
+
+    def stats(self) -> dict:
+        send_frame(self.sock, {"type": "stats", "rid": -1})
+        header, _ = self.recv()
+        while header["type"] != "stats_reply":
+            header, _ = self.recv()
+        return header["stats"]
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass

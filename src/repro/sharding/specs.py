@@ -261,6 +261,24 @@ def gateway_specs(axis: str = "bank") -> Tuple[P, P]:
     return bank_specs(axis)
 
 
+def gateway_input_specs(axis: str = "bank") -> Tuple[P, P, P, P]:
+    """Per-tick host-buffer specs ``(zbuf, zmask, qbuf, qmask)`` for the
+    gateway's sharded dispatch (DESIGN.md §11).
+
+    All four shard their LEADING axis over ``axis``: the ``(S, I, dim)``
+    ingest stack and ``(S, I)`` mask split per tenant, and the tenant-major
+    ``(S*Q, dim)`` query block and ``(S*Q,)`` mask split in whole-tenant
+    runs (S divides the mesh axis, so S*Q does too). The double-buffered
+    tick ``device_put``s each freshly-packed buffer with these shardings
+    BEFORE dispatch, which keeps tick t+1's h2d transfer off tick t's
+    critical path and preserves the no-aliasing overlap invariant: every
+    in-flight tick owns its own committed input arrays, so overlapping
+    dispatches can never read a buffer a later pack is writing.
+    """
+    bank, _ = bank_specs(axis)
+    return (bank, bank, bank, bank)
+
+
 def check_bank_divisible(s: int, mesh: Mesh, axis: str) -> None:
     """Fail fast when the bank cannot split evenly over the mesh axis."""
     size = mesh.shape[axis]
