@@ -1,0 +1,157 @@
+"""Tiered tenant-store benchmarks: footprint, swap latency, tick throughput.
+
+Three row families back DESIGN.md §12, all as ``name,us_per_call,derived``:
+
+* **Resident footprint** — ``tier/resident_bytes_ratio/<dtype>``: one fused
+  banked ingest timed at each counter dtype; ``derived`` is the int32
+  resident-bank bytes over the narrow bank's (the acceptance bar: >= 2x at
+  int16, >= 4x at int8). The bench ASSERTS the narrow outputs are bit-equal
+  to the saturating-cast int32 reference before reporting — a footprint win
+  that changed the counts would be a correctness bug, not a ratio.
+* **Swap latency** — ``tier/promote_demote``: one full promote cycle
+  (host->device upload of the cold table, slot swap, eviction flushed back
+  device->host) on a ping-ponging pair of tenants; ``derived`` is MB/s of
+  counter bytes moved both ways.
+* **Tick throughput** — ``tier/tick_hot_hit`` vs ``tier/tick_cold_miss``:
+  the tiered gateway draining one round of traffic that (a) only touches
+  resident tenants vs (b) round-robins through 2x capacity so every round
+  promotes; ``tier/hot_vs_cold`` is miss-time/hit-time (the price of a
+  promotion, which overlap keeps near 1 at serving shapes).
+
+``run(smoke=True)`` shrinks iterations for the CI harness-smoke job.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.core.tiered import TieredBank
+from repro.kernels import ops
+from repro.serve.storm_gateway import IngestRequest, QueryRequest
+from repro.serve.tiered_gateway import TieredStormGateway
+
+# (S, n rows per tenant, dim, R, p)
+FOOTPRINT_SHAPE = (8, 256, 8, 256, 4)
+# (hot capacity H, tenants T, rows per request, query points, dim, R, p)
+TICK_SHAPE = (4, 8, 32, 8, 8, 64, 3)
+
+
+def _best_of(fn, iters: int) -> float:
+    fn()  # warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _bench_footprint(rows: List[str], smoke: bool) -> None:
+    s, n, d, r, p = FOOTPRINT_SHAPE
+    params = lsh.init_srp(jax.random.PRNGKey(0), r, p, d + 2)
+    zs = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (s, n, d))
+    batch = min(256, n)
+    ref32 = sketch_lib.sketch_dataset_many(params, zs, batch=batch,
+                                           engine="scan")
+    bytes32 = int(ref32.memory_bytes())
+    for dtype in (jnp.int32, jnp.int16, jnp.int8):
+        bank = sketch_lib.sketch_dataset_many(params, zs, batch=batch,
+                                              engine="scan", dtype=dtype)
+        np.testing.assert_array_equal(
+            np.asarray(bank.counts),
+            np.asarray(sketch_lib.saturating_cast(ref32.counts, dtype)),
+        )
+
+        def ingest():
+            out = sketch_lib.sketch_dataset_many(params, zs, batch=batch,
+                                                 engine="scan", dtype=dtype)
+            jax.block_until_ready(out.counts)
+
+        us = _best_of(ingest, iters=2 if smoke else 6)
+        ratio = bytes32 / bank.memory_bytes()
+        name = jnp.dtype(dtype).name
+        rows.append(f"tier/resident_bytes_ratio/{name},{us:.0f},{ratio:.2f}")
+
+
+def _bench_swap(rows: List[str], smoke: bool) -> None:
+    _, _, _, r, p = FOOTPRINT_SHAPE
+    buckets = 1 << p
+    tb = TieredBank(num_tenants=2, hot_capacity=1, rows=r, buckets=buckets,
+                    dtype=jnp.int16)
+    state = list(tb.init_resident())
+    cold = itertools.cycle((1, 0))
+
+    def promote_cycle():
+        # Promote the cold tenant (evicting the hot one), then land the
+        # eviction — the full host<->device round trip of one swap.
+        counts, n, _ = tb.promote(next(cold), state[0], state[1],
+                                  tick=tb.swap_count)
+        state[0], state[1] = counts, n
+        tb.flush_evictions()
+        jax.block_until_ready(state[0])
+
+    us = _best_of(promote_cycle, iters=5 if smoke else 20)
+    moved = 2 * r * buckets * tb.dtype.itemsize  # up + down
+    rows.append(f"tier/promote_demote,{us:.0f},{moved / us:.2f}")
+
+
+def _traffic(rids, tenants, rng, rows_per, points, dim):
+    reqs = []
+    for t in tenants:
+        z = (0.1 * rng.normal(size=(rows_per, dim))).astype(np.float32)
+        reqs.append(IngestRequest(rid=next(rids), tenant=t, z=z))
+        th = rng.normal(size=(points, dim)).astype(np.float32)
+        reqs.append(QueryRequest(rid=next(rids), tenant=t, thetas=th))
+    return reqs
+
+
+def _bench_tick(rows: List[str], smoke: bool) -> None:
+    h, t, rows_per, points, d, r, p = TICK_SHAPE
+    params = lsh.init_srp(jax.random.PRNGKey(2), r, p, d + 2)
+    rng = np.random.default_rng(0)
+    rids = itertools.count()
+    gw = TieredStormGateway(params, t, h, query_slots=points,
+                            ingest_slots=rows_per, count_dtype=jnp.int16,
+                            promote_per_tick=h)
+    hot = list(range(h))
+    ring = itertools.cycle(range(t))
+
+    def hot_hit():
+        gw.submit_many(_traffic(rids, hot, rng, rows_per, points, d))
+        gw.run_until_idle(max_ticks=64)
+
+    def cold_miss():
+        targets = [next(ring) for _ in range(h)]
+        gw.submit_many(_traffic(rids, targets, rng, rows_per, points, d))
+        gw.run_until_idle(max_ticks=64)
+
+    iters = 3 if smoke else 12
+    us_hot = _best_of(hot_hit, iters)
+    us_cold = _best_of(cold_miss, iters)
+    served = h * (rows_per + points)
+    rows.append(f"tier/tick_hot_hit,{us_hot:.0f},{served / us_hot:.2f}")
+    rows.append(f"tier/tick_cold_miss,{us_cold:.0f},{served / us_cold:.2f}")
+    rows.append(f"tier/hot_vs_cold,{us_hot:.0f},{us_cold / us_hot:.2f}")
+    assert gw.trace_count <= 4, (
+        f"tiered gateway recompiled: {gw.trace_count} traces")
+
+
+def run(print_fn=print, smoke: bool = False) -> List[str]:
+    rows: List[str] = []
+    _bench_footprint(rows, smoke)
+    _bench_swap(rows, smoke)
+    _bench_tick(rows, smoke)
+    for row in rows:
+        print_fn(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -36,7 +36,7 @@ def _parse_row(row: str):
 def main() -> None:
     from benchmarks import (bench_classification, bench_distributed,
                             bench_kernels, bench_regression, bench_serve,
-                            bench_serve_load, bench_surrogate)
+                            bench_serve_load, bench_surrogate, bench_tiered)
 
     suites = {
         "fig3": bench_surrogate.run,
@@ -46,6 +46,7 @@ def main() -> None:
         "distributed": bench_distributed.run,
         "serve": bench_serve.run,
         "serve_load": bench_serve_load.run,
+        "tiered": bench_tiered.run,
     }
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="*",

@@ -6,5 +6,5 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q "$@"
-python -m benchmarks.run kernels serve --json BENCH_kernels.json
+python -m benchmarks.run kernels serve tiered --json BENCH_kernels.json
 python -m benchmarks.bench_serve_load --smoke --json "$(mktemp)"

@@ -98,6 +98,20 @@ def _narrow_back(counts32: Array, dtype) -> Array:
     return saturating_cast(counts32, dtype) if _is_narrow(dtype) else counts32
 
 
+def saturating_add(counts: Array, tile: Array) -> Array:
+    """Add a count tile into ``counts`` with widen/saturate discipline.
+
+    Both operands are lifted to int32 before the add, and the result clamps
+    back to ``counts.dtype``. Because increments are non-negative, chaining
+    per-batch saturating adds is bit-identical to one final clamp of the
+    exact int32 total (the monotone-saturation property ``saturating_cast``
+    documents) — so streaming narrow-tile ingest matches the widened
+    reference exactly, tile boundaries notwithstanding.
+    """
+    wide = _widen(counts) + _widen(tile)
+    return _narrow_back(wide, counts.dtype)
+
+
 def update(sketch: Sketch, codes: Array) -> Sketch:
     """Insert a batch of pre-hashed points.
 
@@ -361,8 +375,13 @@ def sketch_dataset(
         else:
             from repro.kernels import ops as kernel_ops  # deferred: ops imports us
 
-            sk = kernel_ops.sketch_stream(params, z, batch=batch, paired=paired)
-            return Sketch(counts=saturating_cast(sk.counts, dtype), n=sk.n)
+            # Narrow dtypes ride the kernel's native tile path: int32 VMEM
+            # scratch, one epilogue saturate — the device never holds an
+            # int32 copy of the counters (DESIGN.md §12).
+            sk = kernel_ops.sketch_stream(params, z, batch=batch,
+                                          paired=paired,
+                                          dtype=jnp.dtype(dtype))
+            return Sketch(counts=sk.counts, n=sk.n)
     n, dim = z.shape
     n_pad = (-n) % batch
     zp = jnp.concatenate([z, jnp.zeros((n_pad, dim), z.dtype)], axis=0)
@@ -539,10 +558,10 @@ def sketch_dataset_many(
             from repro.kernels import ops as kernel_ops  # deferred: ops imports us
 
             bank = kernel_ops.sketch_insert_banked(
-                params, zs_stacked, mask, batch=batch, paired=paired
+                params, zs_stacked, mask, batch=batch, paired=paired,
+                dtype=jnp.dtype(dtype)
             )
-            return SketchBank(counts=saturating_cast(bank.counts, dtype),
-                              n=bank.n)
+            return SketchBank(counts=bank.counts, n=bank.n)
     counts, cnt = _sketch_banked_scan(params, zs_stacked, mask, rows=rows,
                                       buckets=buckets, batch=batch,
                                       paired=paired)

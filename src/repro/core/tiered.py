@@ -1,0 +1,355 @@
+"""Two-tier tenant store: hot resident SketchBank + cold host spill.
+
+STORM's memory claim is that the *sketch* is the only thing whose residency
+you pay for (PAPER.md §1) — but a flat ``(S, R, B)`` bank still grows
+linearly with tenants. :class:`TieredBank` caps the device footprint at a
+fixed ``hot_capacity`` of narrow-dtype slots and spills everyone else to
+host arrays, with an explicit slot-swap promote/demote API the serving
+gateway overlaps with its tick (DESIGN.md §12).
+
+Residency contract:
+  - Tenant ids are global ``[0, num_tenants)``; slots are device indices
+    ``[0, hot_capacity)``. ``slot_of`` is the host-side source of truth and
+    is updated synchronously at dispatch time — device content catches up
+    asynchronously but is already ordered behind the update by jax's
+    d2d dependency chain, so the next packed tick reads the new table.
+  - The device arrays themselves are OWNED BY THE CALLER (the gateway keeps
+    them alongside its tick programs); every mutating method takes the
+    current ``(counts, n)`` pair and returns the replacement. The bank owns
+    only the policy state: slot maps, LRU clocks, the cold store, and
+    in-flight eviction futures.
+  - Swaps run ONE jitted program with the slot index traced, so promote and
+    demote at any slot share a single compilation — the gateway's
+    never-recompiles budget charges them one trace total.
+  - Evicted tables come back as device futures and are flushed to host
+    lazily (``flush_evictions`` — the gateway calls it in ``tick_finish``
+    where it is already synchronizing); a tenant is re-promoted only after
+    its own pending eviction has landed.
+
+Counters move between tiers bit-for-bit: the swap is a pure
+dynamic-slice/update, and cold tables are exact host copies — so a tenant
+that bounces hot→cold→hot holds exactly the sketch it would have held had
+it stayed resident (asserted in tests/test_tiered.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import (
+    Sketch,
+    SketchBank,
+    _narrow_back,
+    _widen,
+)
+
+Array = jax.Array
+
+
+def _swap_impl(counts: Array, n: Array, slot: Array,
+               in_counts: Array, in_n: Array):
+    """The one promote/demote program: read slot ``slot``, overwrite it.
+
+    ``slot`` is a traced int32 scalar, so every slot swap of a given bank
+    shape/dtype is the SAME executable — the tiered gateway's trace budget
+    charges this once, not per slot.
+    """
+    out_counts = jax.lax.dynamic_index_in_dim(counts, slot, axis=0,
+                                              keepdims=False)
+    out_n = jax.lax.dynamic_index_in_dim(n, slot, axis=0, keepdims=False)
+    counts = jax.lax.dynamic_update_index_in_dim(
+        counts, in_counts.astype(counts.dtype), slot, axis=0)
+    n = jax.lax.dynamic_update_index_in_dim(
+        n, in_n.astype(n.dtype), slot, axis=0)
+    return counts, n, out_counts, out_n
+
+
+class TieredBank:
+    """Policy + spill store for a fixed-capacity resident tenant bank.
+
+    Args:
+      num_tenants: global tenant count ``T``.
+      hot_capacity: resident slots ``H`` (``H <= T`` allowed; when
+        ``H >= T`` every tenant is resident forever and the tier is a
+        no-op wrapper — the bit-identity baseline).
+      rows / buckets: sketch shape ``(R, B)``.
+      dtype: resident counter dtype — int16/int8 for the S-folded footprint
+        (the cold store mirrors it, so spill bytes shrink too).
+
+    Initial residency is the identity prefix: tenants ``0..H-1`` occupy
+    slots ``0..H-1``; the rest start cold (all-zero tables, materialized
+    lazily on first demote).
+    """
+
+    def __init__(self, num_tenants: int, hot_capacity: int, rows: int,
+                 buckets: int, dtype=jnp.int16):
+        if hot_capacity < 1:
+            raise ValueError(f"hot_capacity must be >= 1, got {hot_capacity}")
+        if num_tenants < 1:
+            raise ValueError(f"num_tenants must be >= 1, got {num_tenants}")
+        self.num_tenants = num_tenants
+        self.hot_capacity = min(hot_capacity, num_tenants)
+        self.rows = rows
+        self.buckets = buckets
+        self.dtype = jnp.dtype(dtype)
+        # slot -> tenant (None = free), tenant -> slot.
+        self.slot_tenant: List[Optional[int]] = list(
+            range(self.hot_capacity))
+        self.slot_of: Dict[int, int] = {
+            t: s for s, t in enumerate(self.slot_tenant)}
+        # LRU clock: slot -> last tick that touched it (promotion or packed
+        # traffic). Fresh identity residents all start at tick 0.
+        self._last_touch: List[int] = [0] * self.hot_capacity
+        # Cold tier: tenant -> (counts np[dtype], n np.int32). Absent means
+        # all-zero (never demoted with content).
+        self._cold: Dict[int, Tuple[np.ndarray, np.int32]] = {}
+        # Evictions in flight: tenant -> (device counts, device n) futures.
+        self._pending: Dict[int, Tuple[Array, Array]] = {}
+        # Cold roll-up cache: (assignment tuple, groups) -> host sums.
+        self._cold_rollup_cache: Optional[tuple] = None
+        self.swap_count = 0
+        # Per-instance jit so trace_count measures THIS bank's swaps (one
+        # expected: the slot is traced). Counter fallback mirrors
+        # serve.storm_gateway for jax versions without ``_cache_size``.
+        self._trace_events = 0
+
+        def counted(*args):
+            self._trace_events += 1
+            return _swap_impl(*args)
+
+        self._swap = jax.jit(counted)
+
+    @property
+    def trace_count(self) -> int:
+        """Traces of the swap program — must stay <= 1 for the bank's life."""
+        try:
+            size = self._swap._cache_size()
+        except Exception:
+            size = None
+        return size if isinstance(size, int) else self._trace_events
+
+    # -- construction ------------------------------------------------------
+
+    def init_resident(self) -> Tuple[Array, Array]:
+        """Zeroed device arrays for the resident bank: ``(H, R, B)``, ``(H,)``."""
+        return (
+            jnp.zeros((self.hot_capacity, self.rows, self.buckets),
+                      self.dtype),
+            jnp.zeros((self.hot_capacity,), jnp.int32),
+        )
+
+    # -- residency queries -------------------------------------------------
+
+    def is_resident(self, tenant: int) -> bool:
+        return tenant in self.slot_of
+
+    def resident_tenants(self) -> List[int]:
+        return [t for t in self.slot_tenant if t is not None]
+
+    def touch(self, tenant: int, tick: int) -> None:
+        """Record packed traffic for LRU (resident tenants only)."""
+        slot = self.slot_of.get(tenant)
+        if slot is not None:
+            self._last_touch[slot] = max(self._last_touch[slot], tick)
+
+    def lru_victim(self, protect: Iterable[int] = ()) -> Optional[int]:
+        """The tenant to evict next: least-recently-touched occupied slot.
+
+        ``protect`` tenants (e.g. those with traffic packed into the
+        in-flight tick) are never chosen. Returns ``None`` if every
+        occupied slot is protected.
+        """
+        protected = set(protect)
+        best = None
+        for slot, tenant in enumerate(self.slot_tenant):
+            if tenant is None or tenant in protected:
+                continue
+            if best is None or self._last_touch[slot] < self._last_touch[best]:
+                best = slot
+        return None if best is None else self.slot_tenant[best]
+
+    def _free_slot(self) -> Optional[int]:
+        for slot, tenant in enumerate(self.slot_tenant):
+            if tenant is None:
+                return slot
+        return None
+
+    # -- the swap ----------------------------------------------------------
+
+    def _cold_table(self, tenant: int) -> Tuple[np.ndarray, np.int32]:
+        entry = self._cold.get(tenant)
+        if entry is None:
+            return (np.zeros((self.rows, self.buckets), self.dtype),
+                    np.int32(0))
+        return entry
+
+    def promote(self, tenant: int, counts: Array, n: Array, *, tick: int,
+                protect: Iterable[int] = ()
+                ) -> Tuple[Array, Array, Optional[int]]:
+        """Swap ``tenant`` into the resident bank, evicting an LRU victim.
+
+        Dispatches the swap program non-blocking (jax async dispatch) and
+        updates the residency map immediately, so the caller can pack the
+        promoted tenant into the very next tick. The victim's table is held
+        as device futures until :meth:`flush_evictions`.
+
+        Returns ``(counts, n, victim_tenant)``; victim is ``None`` when a
+        free slot absorbed the promotion (or the tenant was already
+        resident). Raises ``RuntimeError`` when every slot is protected —
+        the caller defers the promotion a tick rather than stall.
+        """
+        if tenant in self.slot_of:
+            self.touch(tenant, tick)
+            return counts, n, None
+        slot = self._free_slot()
+        victim = None
+        if slot is None:
+            victim = self.lru_victim(protect)
+            if victim is None:
+                raise RuntimeError(
+                    "promote: all resident slots are protected this tick")
+            slot = self.slot_of[victim]
+        # The tenant's own last eviction must have landed before we upload.
+        self._flush_one(tenant)
+        in_counts, in_n = self._cold_table(tenant)
+        counts, n, out_counts, out_n = self._swap(
+            counts, n, jnp.int32(slot), jnp.asarray(in_counts),
+            jnp.asarray(in_n))
+        self.swap_count += 1
+        if victim is not None:
+            del self.slot_of[victim]
+            self._pending[victim] = (out_counts, out_n)
+        self._cold.pop(tenant, None)
+        self.slot_of[tenant] = slot
+        self.slot_tenant[slot] = tenant
+        self._last_touch[slot] = tick
+        self._cold_rollup_cache = None
+        return counts, n, victim
+
+    def demote(self, tenant: int, counts: Array, n: Array
+               ) -> Tuple[Array, Array]:
+        """Explicitly spill a resident tenant, leaving its slot free.
+
+        The slot is zeroed through the same swap program (so no extra
+        trace) and the evicted table parks as a pending future.
+        """
+        slot = self.slot_of.get(tenant)
+        if slot is None:
+            return counts, n
+        zero_c = jnp.zeros((self.rows, self.buckets), self.dtype)
+        counts, n, out_counts, out_n = self._swap(
+            counts, n, jnp.int32(slot), zero_c, jnp.zeros((), jnp.int32))
+        self.swap_count += 1
+        del self.slot_of[tenant]
+        self.slot_tenant[slot] = None
+        self._pending[tenant] = (out_counts, out_n)
+        self._cold_rollup_cache = None
+        return counts, n
+
+    def _flush_one(self, tenant: int) -> None:
+        entry = self._pending.pop(tenant, None)
+        if entry is not None:
+            self._cold[tenant] = (np.asarray(entry[0]),
+                                  np.int32(np.asarray(entry[1])))
+            self._cold_rollup_cache = None
+
+    def flush_evictions(self) -> int:
+        """Land all in-flight evictions on the host. Returns how many."""
+        tenants = list(self._pending)
+        for t in tenants:
+            self._flush_one(t)
+        return len(tenants)
+
+    # -- reads -------------------------------------------------------------
+
+    def sketch_of(self, tenant: int, counts: Array, n: Array) -> Sketch:
+        """The tenant's current sketch, wherever it lives (host copy if cold)."""
+        slot = self.slot_of.get(tenant)
+        if slot is not None:
+            return Sketch(counts=counts[slot], n=n[slot])
+        self._flush_one(tenant)
+        cold_c, cold_n = self._cold_table(tenant)
+        return Sketch(counts=jnp.asarray(cold_c),
+                      n=jnp.asarray(cold_n, dtype=jnp.int32))
+
+    def rollup(self, assignment, counts: Array, n: Array,
+               num_groups: Optional[int] = None) -> SketchBank:
+        """Cohort roll-up over ALL tenants without faulting a cold table.
+
+        Resident slots fold on device via :meth:`SketchBank.merge_groups`;
+        cold tables fold on the host (cached until the cold set changes)
+        and the two partial banks add with the usual widen/saturate
+        discipline. Cold tenants therefore contribute at host-memory speed
+        but never consume a resident slot.
+
+        Args:
+          assignment: ``(num_tenants,)`` int group ids.
+          num_groups: output size; defaults to ``max(assignment) + 1``.
+        """
+        assignment = np.asarray(assignment, np.int32)
+        if assignment.shape != (self.num_tenants,):
+            raise ValueError(
+                f"assignment must be ({self.num_tenants},); "
+                f"got {assignment.shape}")
+        groups = (int(assignment.max()) + 1 if num_groups is None
+                  else num_groups)
+        # Device half: map slots -> groups; free slots route to a scratch
+        # group beyond the real ones so their (zero) content is dropped.
+        slot_assign = np.asarray(
+            [groups if t is None else assignment[t]
+             for t in self.slot_tenant], np.int32)
+        hot = SketchBank(counts=counts, n=n).merge_groups(
+            jnp.asarray(slot_assign), num_groups=groups + 1)
+        hot_counts = hot.counts[:groups]
+        hot_n = hot.n[:groups]
+        # Host half: pending evictions are part of the cold set.
+        self.flush_evictions()
+        cold_c, cold_n = self._cold_rollup(assignment, groups)
+        wide = _widen(hot_counts) + jnp.asarray(cold_c)
+        return SketchBank(
+            counts=_narrow_back(wide, self.dtype),
+            n=hot_n + jnp.asarray(cold_n),
+        )
+
+    def _cold_rollup(self, assignment: np.ndarray, groups: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        key = (assignment.tobytes(), groups)
+        if (self._cold_rollup_cache is not None
+                and self._cold_rollup_cache[0] == key):
+            return self._cold_rollup_cache[1]
+        acc = np.zeros((groups, self.rows, self.buckets), np.int32)
+        acc_n = np.zeros((groups,), np.int32)
+        for tenant, (c, cn) in self._cold.items():
+            g = int(assignment[tenant])
+            acc[g] += c.astype(np.int32)
+            acc_n[g] += int(cn)
+        self._cold_rollup_cache = (key, (acc, acc_n))
+        return acc, acc_n
+
+    # -- accounting --------------------------------------------------------
+
+    def resident_bytes(self) -> int:
+        """Device bytes held by the hot tier (counters + per-slot n)."""
+        return (self.hot_capacity * self.rows * self.buckets
+                * self.dtype.itemsize + 4 * self.hot_capacity)
+
+    def cold_bytes(self) -> int:
+        """Host bytes actually materialized by spilled tables."""
+        return sum(c.nbytes + 4 for c, _ in self._cold.values())
+
+    def stats(self) -> dict:
+        return {
+            "hot_capacity": self.hot_capacity,
+            "num_tenants": self.num_tenants,
+            "resident": len(self.slot_of),
+            "cold_materialized": len(self._cold),
+            "pending_evictions": len(self._pending),
+            "swap_count": self.swap_count,
+            "resident_bytes": self.resident_bytes(),
+            "cold_bytes": self.cold_bytes(),
+        }

@@ -44,66 +44,81 @@ def srp_hash(x: Array, w: Array, mode: str = "auto") -> Array:
 
 
 def hash_histogram(
-    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto",
+    out_dtype=jnp.int32,
 ) -> Array:
-    """Fused insert: ``(R, B)`` histogram of codes over the masked batch."""
+    """Fused insert: ``(R, B)`` histogram of codes over the masked batch.
+
+    ``out_dtype`` selects the counter tile dtype. Narrow dtypes (int16/int8)
+    accumulate in int32 scratch and saturating-cast once in the epilogue —
+    bit-equal to casting the int32 histogram (DESIGN.md §12).
+    """
     if mask is None:
         mask = jnp.ones((x.shape[0],), jnp.float32)
     if mode == "ref" or (mode == "auto" and not _on_tpu() and x.shape[-1] < 64):
-        return ref.hash_histogram(x, w, mask)
+        return ref.hash_histogram(x, w, mask, out_dtype=out_dtype)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
-    return histogram_kernel.hash_histogram(x, w, mask, interpret=interpret)
+    return histogram_kernel.hash_histogram(x, w, mask, out_dtype=out_dtype,
+                                           interpret=interpret)
 
 
 def paired_hash_histogram(
-    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto",
+    out_dtype=jnp.int32,
 ) -> Array:
     """Fused antithetic PRP insert: one projection pass, both code sets.
 
     ``z`` is pre-scaled but NOT augmented; ``w`` lives in the augmented space
     ``(p, d + 2, R)``. Equals ``hash_histogram(aug(z)) + hash_histogram(aug(-z))``
-    at half the MXU flops and HBM reads.
+    at half the MXU flops and HBM reads. Narrow ``out_dtype`` tiles saturate
+    once in the kernel epilogue.
     """
     if mask is None:
         mask = jnp.ones((z.shape[0],), jnp.float32)
     if mode == "ref" or (mode == "auto" and not _on_tpu() and z.shape[-1] < 64):
-        return ref.paired_hash_histogram(z, w, mask)
+        return ref.paired_hash_histogram(z, w, mask, out_dtype=out_dtype)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
-    return histogram_kernel.paired_hash_histogram(z, w, mask, interpret=interpret)
+    return histogram_kernel.paired_hash_histogram(z, w, mask,
+                                                  out_dtype=out_dtype,
+                                                  interpret=interpret)
 
 
 def hash_histogram_banked(
-    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+    x: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto",
+    out_dtype=jnp.int32,
 ) -> Array:
     """Banked fused insert: ``(S, R, B)`` histograms of an ``(S, n, d)`` stack.
 
     One shared hash family serves the whole bank; slice ``s`` equals
-    ``hash_histogram(x[s], w, mask[s])`` bit-for-bit (integer counts).
+    ``hash_histogram(x[s], w, mask[s], out_dtype)`` bit-for-bit.
     """
     if mask is None:
         mask = jnp.ones(x.shape[:2], jnp.float32)
     if mode == "ref" or (mode == "auto" and not _on_tpu() and x.shape[-1] < 64):
-        return ref.hash_histogram_banked(x, w, mask)
+        return ref.hash_histogram_banked(x, w, mask, out_dtype=out_dtype)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
     return histogram_kernel.hash_histogram_banked(x, w, mask,
+                                                  out_dtype=out_dtype,
                                                   interpret=interpret)
 
 
 def paired_hash_histogram_banked(
-    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto"
+    z: Array, w: Array, mask: Optional[Array] = None, mode: str = "auto",
+    out_dtype=jnp.int32,
 ) -> Array:
     """Banked fused antithetic PRP insert over an ``(S, n, dim)`` stack.
 
     The grid-over-S kernel (or vmapped reference) runs every tenant's
     projection pass in ONE launch; slice ``s`` equals
-    ``paired_hash_histogram(z[s], w, mask[s])``.
+    ``paired_hash_histogram(z[s], w, mask[s], out_dtype)``.
     """
     if mask is None:
         mask = jnp.ones(z.shape[:2], jnp.float32)
     if mode == "ref" or (mode == "auto" and not _on_tpu() and z.shape[-1] < 64):
-        return ref.paired_hash_histogram_banked(z, w, mask)
+        return ref.paired_hash_histogram_banked(z, w, mask, out_dtype=out_dtype)
     interpret = mode == "interpret" or (mode == "auto" and not _on_tpu())
     return histogram_kernel.paired_hash_histogram_banked(z, w, mask,
+                                                         out_dtype=out_dtype,
                                                          interpret=interpret)
 
 
@@ -243,7 +258,7 @@ def query_theta(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode"))
+@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode", "dtype"))
 def sketch_stream(
     params: lsh.LSHParams,
     z: Array,
@@ -251,6 +266,7 @@ def sketch_stream(
     batch: int = 1024,
     paired: bool = True,
     mode: str = "auto",
+    dtype=jnp.int32,
 ) -> sketch_lib.Sketch:
     """Streaming kernel engine: scan masked batches through the fused insert.
 
@@ -260,6 +276,11 @@ def sketch_stream(
     analogue of ``core.sketch.sketch_dataset`` (DESIGN.md §3.4). Counts agree
     with the scatter-add scan up to floating-point sign ties in the paired
     projection (row masses exact; DESIGN.md §3.2).
+
+    With a narrow ``dtype`` the carry AND the per-step kernel tiles live at
+    that width — the device never materializes an int32 bank — and the
+    saturating carry add keeps the result bit-equal to clamping the int32
+    stream once at the end (``core.sketch.saturating_add``).
     """
     n, dim = z.shape
     w = from_lsh_params(params)
@@ -275,17 +296,18 @@ def sketch_stream(
     def step(counts: Array, xs):
         z_t, m_t = xs
         if paired:
-            tile = paired_hash_histogram(z_t, w, m_t, mode=mode)
+            tile = paired_hash_histogram(z_t, w, m_t, mode=mode,
+                                         out_dtype=dtype)
         else:
-            tile = hash_histogram(z_t, w, m_t, mode=mode)
-        return counts + tile, None
+            tile = hash_histogram(z_t, w, m_t, mode=mode, out_dtype=dtype)
+        return sketch_lib.saturating_add(counts, tile), None
 
-    init = jnp.zeros((params.rows, params.buckets), jnp.int32)
+    init = jnp.zeros((params.rows, params.buckets), jnp.dtype(dtype))
     counts, _ = jax.lax.scan(step, init, (zb, mb))
     return sketch_lib.Sketch(counts=counts, n=jnp.sum(mask).astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode"))
+@functools.partial(jax.jit, static_argnames=("batch", "paired", "mode", "dtype"))
 def sketch_insert_banked(
     params: lsh.LSHParams,
     zs: Array,
@@ -293,6 +315,7 @@ def sketch_insert_banked(
     batch: int = 1024,
     paired: bool = True,
     mode: str = "auto",
+    dtype=jnp.int32,
 ) -> sketch_lib.SketchBank:
     """Fused banked insert: sketch S tenant streams in one kernel stream.
 
@@ -306,8 +329,9 @@ def sketch_insert_banked(
 
     Slice ``s`` of the result is bit-identical to
     ``sketch_stream(params, zs[s], mask[s], batch=batch, paired=paired)`` —
-    the batch boundaries align (both pad up to a ``batch`` multiple) and
-    integer histogram tiles add exactly.
+    the batch boundaries align (both pad up to a ``batch`` multiple), integer
+    histogram tiles add exactly, and narrow dtypes saturate identically
+    because per-batch saturating adds equal one final clamp.
 
     Args:
       params: hash parameters (ONE family shared by the whole bank).
@@ -316,9 +340,11 @@ def sketch_insert_banked(
       batch: stream tile size.
       paired: PRP (regression/probes) vs single-sided inserts.
       mode: kernel dispatch (``auto | kernel | interpret | ref``).
+      dtype: counter dtype; narrow dtypes keep the carry and the kernel
+        tiles at that width (int32 accumulation stays in VMEM scratch).
 
     Returns:
-      A :class:`~repro.core.sketch.SketchBank` with int32 counts.
+      A :class:`~repro.core.sketch.SketchBank` with counts in ``dtype``.
     """
     s, n, dim = zs.shape
     w = from_lsh_params(params)
@@ -336,12 +362,14 @@ def sketch_insert_banked(
     def step(counts: Array, xs):
         z_t, m_t = xs
         if paired:
-            tile = paired_hash_histogram_banked(z_t, w, m_t, mode=mode)
+            tile = paired_hash_histogram_banked(z_t, w, m_t, mode=mode,
+                                                out_dtype=dtype)
         else:
-            tile = hash_histogram_banked(z_t, w, m_t, mode=mode)
-        return counts + tile, None
+            tile = hash_histogram_banked(z_t, w, m_t, mode=mode,
+                                         out_dtype=dtype)
+        return sketch_lib.saturating_add(counts, tile), None
 
-    init = jnp.zeros((s, params.rows, params.buckets), jnp.int32)
+    init = jnp.zeros((s, params.rows, params.buckets), jnp.dtype(dtype))
     counts, _ = jax.lax.scan(step, init, (zb, mb))
     return sketch_lib.SketchBank(
         counts=counts, n=jnp.sum(mask, axis=1).astype(jnp.int32)

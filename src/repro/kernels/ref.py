@@ -15,7 +15,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.sketch import saturating_cast
+
 Array = jax.Array
+
+
+def _out_cast(counts32: Array, out_dtype) -> Array:
+    """Define the narrow-tile semantics in ONE place: the int32 histogram
+    saturating-cast to ``out_dtype`` (DESIGN.md §6/§12). The kernels'
+    int32-scratch + epilogue-cast schedule must be bit-equal to this."""
+    dtype = jnp.dtype(out_dtype)
+    if dtype.itemsize >= 4:
+        return counts32.astype(dtype)
+    return saturating_cast(counts32, dtype)
 
 
 def srp_hash(x: Array, w: Array) -> Array:
@@ -66,20 +78,22 @@ def _masked_histogram(codes: Array, mask: Array, buckets: int) -> Array:
     return flat.at[idx].add(upd).reshape(r, buckets)
 
 
-def hash_histogram(x: Array, w: Array, mask: Array) -> Array:
+def hash_histogram(x: Array, w: Array, mask: Array,
+                   out_dtype=jnp.int32) -> Array:
     """Fused hash + histogram: counts[r, b] = #{i : mask_i and code(x_i)_r == b}.
 
     Args:
       x: ``(n, d)`` points.
       w: ``(p, d, R)`` hyperplane normals.
       mask: ``(n,)`` {0,1} validity mask (stream padding).
+      out_dtype: counter dtype; narrow dtypes saturate at the dtype range.
 
     Returns:
-      ``(R, 2**p)`` int32 counts.
+      ``(R, 2**p)`` counts in ``out_dtype``.
     """
     p = w.shape[0]
     codes = srp_hash(x, w)  # (n, R)
-    return _masked_histogram(codes, mask, 1 << p)
+    return _out_cast(_masked_histogram(codes, mask, 1 << p), out_dtype)
 
 
 def paired_srp_hash(z: Array, w: Array) -> tuple[Array, Array]:
@@ -140,7 +154,8 @@ def _paired_packed_codes(z: Array, w: Array, pos_shift, neg_shift):
     return cpair if packed else (cpos, cneg)
 
 
-def paired_hash_histogram(z: Array, w: Array, mask: Array) -> Array:
+def paired_hash_histogram(z: Array, w: Array, mask: Array,
+                          out_dtype=jnp.int32) -> Array:
     """Fused antithetic PRP insert: both code sets from one projection pass.
 
     Semantically equals ``hash_histogram(aug(z), w, mask) +
@@ -151,9 +166,11 @@ def paired_hash_histogram(z: Array, w: Array, mask: Array) -> Array:
       z: ``(n, d)`` pre-scaled points (NOT augmented).
       w: ``(p, d + 2, R)`` hyperplane normals.
       mask: ``(n,)`` {0,1} validity mask.
+      out_dtype: counter dtype; narrow dtypes saturate at the dtype range.
 
     Returns:
-      ``(R, 2**p)`` int32 counts (each unmasked point adds 2 per row).
+      ``(R, 2**p)`` counts in ``out_dtype`` (each unmasked point adds 2 per
+      row, modulo saturation).
     """
     p = w.shape[0]
     buckets = 1 << p
@@ -166,42 +183,53 @@ def paired_hash_histogram(z: Array, w: Array, mask: Array) -> Array:
         cpair = _paired_packed_codes(z, w, pos_shift=p, neg_shift=0)
         pair = _masked_histogram(cpair, mask, buckets * buckets)
         pair = pair.reshape(-1, buckets, buckets)
-        return (jnp.sum(pair, axis=2) + jnp.sum(pair, axis=1)).astype(jnp.int32)
+        counts32 = (jnp.sum(pair, axis=2)
+                    + jnp.sum(pair, axis=1)).astype(jnp.int32)
+        return _out_cast(counts32, out_dtype)
     cpos, cneg = paired_srp_hash(z, w)
-    return _masked_histogram(cpos, mask, buckets) + _masked_histogram(
+    counts32 = _masked_histogram(cpos, mask, buckets) + _masked_histogram(
         cneg, mask, buckets
     )
+    return _out_cast(counts32, out_dtype)
 
 
-def hash_histogram_banked(x: Array, w: Array, mask: Array) -> Array:
+def hash_histogram_banked(x: Array, w: Array, mask: Array,
+                          out_dtype=jnp.int32) -> Array:
     """Banked fused insert oracle: S stacked histograms, one shared family.
 
     Args:
       x: ``(S, n, d)`` points, sketch-major.
       w: ``(p, d, R)`` hyperplane normals (shared across the bank).
       mask: ``(S, n)`` {0,1} validity mask (ragged-stream padding).
+      out_dtype: counter dtype; narrow dtypes saturate at the dtype range.
 
     Returns:
-      ``(S, R, 2**p)`` int32 counts; slice ``s`` is exactly
-      ``hash_histogram(x[s], w, mask[s])`` (integer scatter-adds commute
-      with the vmap batching, so the slices are bit-identical).
+      ``(S, R, 2**p)`` counts in ``out_dtype``; slice ``s`` is exactly
+      ``hash_histogram(x[s], w, mask[s], out_dtype)`` (integer scatter-adds
+      commute with the vmap batching, so the slices are bit-identical).
     """
-    return jax.vmap(lambda xs, ms: hash_histogram(xs, w, ms))(x, mask)
+    return jax.vmap(
+        lambda xs, ms: hash_histogram(xs, w, ms, out_dtype)
+    )(x, mask)
 
 
-def paired_hash_histogram_banked(z: Array, w: Array, mask: Array) -> Array:
+def paired_hash_histogram_banked(z: Array, w: Array, mask: Array,
+                                 out_dtype=jnp.int32) -> Array:
     """Banked antithetic PRP insert oracle: S tenants, one projection pass each.
 
     Args:
       z: ``(S, n, d)`` pre-scaled points (NOT augmented), sketch-major.
       w: ``(p, d + 2, R)`` hyperplane normals (shared across the bank).
       mask: ``(S, n)`` {0,1} validity mask.
+      out_dtype: counter dtype; narrow dtypes saturate at the dtype range.
 
     Returns:
-      ``(S, R, 2**p)`` int32 counts; slice ``s`` is exactly
-      ``paired_hash_histogram(z[s], w, mask[s])``.
+      ``(S, R, 2**p)`` counts in ``out_dtype``; slice ``s`` is exactly
+      ``paired_hash_histogram(z[s], w, mask[s], out_dtype)``.
     """
-    return jax.vmap(lambda zs, ms: paired_hash_histogram(zs, w, ms))(z, mask)
+    return jax.vmap(
+        lambda zs, ms: paired_hash_histogram(zs, w, ms, out_dtype)
+    )(z, mask)
 
 
 def sketch_query(q: Array, w: Array, counts: Array) -> Array:

@@ -24,6 +24,11 @@ selects its own table (``sel @ counts``, an MXU contraction) before the
 bucket gather. ``S = 1`` reduces to the unbanked epilogue exactly (the
 select matrix is all-ones), and integer counts make the f32 reductions
 order-independent, so the slice agreement is bit-for-bit.
+
+Counter tiles may be narrow (int16/int8, DESIGN.md §12): the epilogue lifts
+the tile to f32 right at the gather, so a narrow bank streams S-fold less
+VMEM per row tile and the result is bit-equal to querying the widened bank
+— every narrow counter value (|c| ≤ 32767 < 2^24) is exact in float32.
 """
 
 from __future__ import annotations
@@ -183,12 +188,14 @@ def sketch_query_banked(
     See ``ref.sketch_query_banked``. The VMEM counter tile grows S-fold
     (``(S, br, B)``), so banks with large ``S * B`` should shrink ``block_r``
     accordingly; at the serving shapes (S ≤ 64, B = 16) the default tile is
-    ~0.5–2 MB.
+    ~0.5–2 MB. Narrow counter dtypes cut that tile (and the HBM reads
+    feeding it) 2–4x: the tile is loaded at its stored width and lifted to
+    f32 only inside the epilogue gather, bit-equal to the widened bank.
 
     Args:
       q: ``(m, d)`` normalized/augmented query vectors; m is unrestricted.
       w: ``(p, d, R)`` hyperplane normals (one hash family for the bank).
-      counts: ``(S, R, 2**p)`` stacked counters.
+      counts: ``(S, R, 2**p)`` stacked counters (int32/int16/int8).
       sketch_idx: ``(m,)`` int32 table index per query point.
 
     Returns:

@@ -11,9 +11,17 @@ Schedule (shared by both kernels):
   grid = (R/br, n/bn, d/bd); ``k`` (features) fastest, then ``n``.
   - scratch ``acc (p, bn, br)`` accumulates projections over ``k``;
   - on the last ``k`` step the epilogue packs codes and adds the masked
-    one-hot histogram of the tile into the output block;
-  - the output block (br, B) is revisited across the whole (n, k) subgrid
-    and initialized once at the first step.
+    one-hot histogram of the tile into a VMEM-resident int32 ``(br, B)``
+    histogram scratch;
+  - on the last ``(n, k)`` step the write-back epilogue casts the int32
+    histogram to ``out_dtype`` — saturating at the dtype range for narrow
+    counters (DESIGN.md §6/§12) — and stores the output block ONCE.
+
+The int32-scratch + one-``saturating_cast``-epilogue split is what makes
+narrow counter tiles (``out_dtype=int16/int8``) native: the accumulator can
+never wrap mid-batch, the HBM output (and hence the resident bank) shrinks
+2–4x, and the result is bit-identical to ``saturating_cast`` of the int32
+histogram — the same widen/saturate discipline ``core/sketch.py`` owns.
 
 ``paired_hash_histogram`` is the antithetic PRP insert (DESIGN.md §3.2): the
 augmented pair ``aug(±z) = [±z, 0, pad]`` shares the padding coordinate, so
@@ -25,10 +33,10 @@ The ``*_banked`` variants (DESIGN.md §10) prepend a sketch axis to the grid:
 ``(S, n, d)``-stacked tenant batches produce an ``(S, R, B)`` counter stack
 in ONE kernel launch. The hash family is shared across the bank, so the
 weight blocks are reused unchanged for every ``s``; only the data/mask/output
-index maps gain the leading coordinate, and the per-``(s, r)`` output block
-is revisited across the ``(n, k)`` subgrid exactly as in the lone-sketch
-schedule — slice ``s`` of the result is the lone-sketch kernel's output for
-tenant ``s``, tile for tile.
+index maps gain the leading coordinate, and the per-``(s, r)`` histogram
+scratch is revisited across the ``(n, k)`` subgrid exactly as in the
+lone-sketch schedule — slice ``s`` of the result is the lone-sketch kernel's
+output for tenant ``s``, tile for tile.
 """
 
 from __future__ import annotations
@@ -43,15 +51,31 @@ from jax.experimental.pallas import tpu as pltpu
 Array = jax.Array
 
 
+def _cast_out(hist32: Array, out_dtype) -> Array:
+    """int32 histogram -> output dtype; clamps narrow dtypes at their range.
+
+    Counters only grow, so one clamp at kernel-epilogue time equals clamping
+    the exact total for this launch; callers that accumulate launches
+    saturating-add the tiles (``core.sketch.saturating_add``), which keeps
+    the composition exact too (DESIGN.md §12).
+    """
+    dtype = jnp.dtype(out_dtype)
+    if dtype.itemsize >= 4:
+        return hist32.astype(dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.clip(hist32, info.min, info.max).astype(dtype)
+
+
 def _hash_histogram_kernel(
-    x_ref, w_ref, m_ref, o_ref, acc_ref, *, planes: int, k_steps: int
+    x_ref, w_ref, m_ref, o_ref, acc_ref, hist_ref, *, planes: int,
+    n_steps: int, k_steps: int, out_dtype,
 ):
     n_i = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(jnp.logical_and(n_i == 0, k == 0))
-    def _init_out():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
 
     @pl.when(k == 0)
     def _init_acc():
@@ -66,19 +90,24 @@ def _hash_histogram_kernel(
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        buckets = o_ref.shape[-1]
+        buckets = hist_ref.shape[-1]
         codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
         for j in range(planes):
             codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
         iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
         onehot = (codes[:, :, None] == iota).astype(jnp.float32)
         masked = onehot * m_ref[...].astype(jnp.float32)[:, None, None]
-        o_ref[...] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+        hist_ref[...] += jnp.sum(masked, axis=0).astype(jnp.int32)  # (br, B)
+
+    @pl.when(jnp.logical_and(n_i == n_steps - 1, k == k_steps - 1))
+    def _writeback():
+        o_ref[...] = _cast_out(hist_ref[...], out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+    static_argnames=("block_n", "block_r", "block_d", "out_dtype",
+                     "interpret"),
 )
 def hash_histogram(
     x: Array,
@@ -88,6 +117,7 @@ def hash_histogram(
     block_n: int = 128,
     block_r: int = 256,
     block_d: int = 512,
+    out_dtype=jnp.int32,
     interpret: bool = False,
 ) -> Array:
     """Fused hash+histogram. See ``ref.hash_histogram`` for semantics.
@@ -96,9 +126,11 @@ def hash_histogram(
       x: ``(n, d)`` pre-scaled (and, for asymmetric LSH, pre-augmented) points.
       w: ``(p, d, R)`` hyperplane normals.
       mask: ``(n,)`` validity mask in {0, 1} (stream padding).
+      out_dtype: counter dtype of the output tile; narrow integer dtypes
+        saturate at the dtype range (int32 scratch, one epilogue cast).
 
     Returns:
-      ``(R, 2**p)`` int32 counts.
+      ``(R, 2**p)`` counts in ``out_dtype``.
     """
     n, d = x.shape
     p, dw, r = w.shape
@@ -115,7 +147,8 @@ def hash_histogram(
     grid = ((r + r_pad) // br, (n + n_pad) // bn, (d + d_pad) // bd)
 
     out = pl.pallas_call(
-        functools.partial(_hash_histogram_kernel, planes=p, k_steps=grid[2]),
+        functools.partial(_hash_histogram_kernel, planes=p, n_steps=grid[1],
+                          k_steps=grid[2], out_dtype=out_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
@@ -123,23 +156,27 @@ def hash_histogram(
             pl.BlockSpec((bn,), lambda i, j, k: (j,)),
         ],
         out_specs=pl.BlockSpec((br, buckets), lambda i, j, k: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets),
+                                       jnp.dtype(out_dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((p, bn, br), jnp.float32),
+            pltpu.VMEM((br, buckets), jnp.int32),
+        ],
         interpret=interpret,
     )(xp, wp, mp)
     return out[:r]
 
 
 def _paired_hash_histogram_kernel(
-    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, *, planes: int,
-    k_steps: int,
+    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, hist_ref, *,
+    planes: int, n_steps: int, k_steps: int, out_dtype,
 ):
     n_i = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(jnp.logical_and(n_i == 0, k == 0))
-    def _init_out():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
 
     @pl.when(k == 0)
     def _init_acc():
@@ -154,7 +191,7 @@ def _paired_hash_histogram_kernel(
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        buckets = o_ref.shape[-1]
+        buckets = hist_ref.shape[-1]
         pad = pad_ref[...].astype(jnp.float32)  # (bn, 1)
         codes_p = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
         codes_n = jnp.zeros(acc_ref.shape[1:], jnp.int32)
@@ -167,12 +204,17 @@ def _paired_hash_histogram_kernel(
         onehot = (codes_p[:, :, None] == iota).astype(jnp.float32)
         onehot += (codes_n[:, :, None] == iota).astype(jnp.float32)
         masked = onehot * m_ref[...].astype(jnp.float32)[:, None, None]
-        o_ref[...] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+        hist_ref[...] += jnp.sum(masked, axis=0).astype(jnp.int32)  # (br, B)
+
+    @pl.when(jnp.logical_and(n_i == n_steps - 1, k == k_steps - 1))
+    def _writeback():
+        o_ref[...] = _cast_out(hist_ref[...], out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+    static_argnames=("block_n", "block_r", "block_d", "out_dtype",
+                     "interpret"),
 )
 def paired_hash_histogram(
     z: Array,
@@ -182,6 +224,7 @@ def paired_hash_histogram(
     block_n: int = 128,
     block_r: int = 256,
     block_d: int = 512,
+    out_dtype=jnp.int32,
     interpret: bool = False,
 ) -> Array:
     """Fused antithetic PRP insert. See ``ref.paired_hash_histogram``.
@@ -190,9 +233,12 @@ def paired_hash_histogram(
       z: ``(n, d)`` pre-scaled points (``|z| <= 1``; NOT augmented).
       w: ``(p, d + 2, R)`` hyperplane normals for the augmented space.
       mask: ``(n,)`` validity mask in {0, 1} (stream padding).
+      out_dtype: counter dtype of the output tile; narrow integer dtypes
+        saturate at the dtype range (int32 scratch, one epilogue cast).
 
     Returns:
-      ``(R, 2**p)`` int32 counts (each unmasked point adds 2 per row).
+      ``(R, 2**p)`` counts in ``out_dtype`` (each unmasked point adds 2 per
+      row, modulo saturation).
     """
     n, d = z.shape
     p, d_aug, r = w.shape
@@ -219,7 +265,8 @@ def paired_hash_histogram(
 
     out = pl.pallas_call(
         functools.partial(
-            _paired_hash_histogram_kernel, planes=p, k_steps=grid[2]
+            _paired_hash_histogram_kernel, planes=p, n_steps=grid[1],
+            k_steps=grid[2], out_dtype=out_dtype,
         ),
         grid=grid,
         in_specs=[
@@ -230,8 +277,12 @@ def paired_hash_histogram(
             pl.BlockSpec((bn,), lambda i, j, k: (j,)),
         ],
         out_specs=pl.BlockSpec((br, buckets), lambda i, j, k: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((r + r_pad, buckets),
+                                       jnp.dtype(out_dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((p, bn, br), jnp.float32),
+            pltpu.VMEM((br, buckets), jnp.int32),
+        ],
         interpret=interpret,
     )(xp, wp, padp, w_pad, mp)
     return out[:r]
@@ -243,14 +294,15 @@ def paired_hash_histogram(
 
 
 def _hash_histogram_banked_kernel(
-    x_ref, w_ref, m_ref, o_ref, acc_ref, *, planes: int, k_steps: int
+    x_ref, w_ref, m_ref, o_ref, acc_ref, hist_ref, *, planes: int,
+    n_steps: int, k_steps: int, out_dtype,
 ):
     n_i = pl.program_id(2)
     k = pl.program_id(3)
 
     @pl.when(jnp.logical_and(n_i == 0, k == 0))
-    def _init_out():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
 
     @pl.when(k == 0)
     def _init_acc():
@@ -265,19 +317,24 @@ def _hash_histogram_banked_kernel(
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        buckets = o_ref.shape[-1]
+        buckets = hist_ref.shape[-1]
         codes = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
         for j in range(planes):
             codes += (acc_ref[j, :, :] > 0).astype(jnp.int32) << j
         iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, buckets), 2)
         onehot = (codes[:, :, None] == iota).astype(jnp.float32)
         masked = onehot * m_ref[0].astype(jnp.float32)[:, None, None]
-        o_ref[0] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+        hist_ref[...] += jnp.sum(masked, axis=0).astype(jnp.int32)  # (br, B)
+
+    @pl.when(jnp.logical_and(n_i == n_steps - 1, k == k_steps - 1))
+    def _writeback():
+        o_ref[0] = _cast_out(hist_ref[...], out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+    static_argnames=("block_n", "block_r", "block_d", "out_dtype",
+                     "interpret"),
 )
 def hash_histogram_banked(
     x: Array,
@@ -287,6 +344,7 @@ def hash_histogram_banked(
     block_n: int = 128,
     block_r: int = 256,
     block_d: int = 512,
+    out_dtype=jnp.int32,
     interpret: bool = False,
 ) -> Array:
     """Banked fused insert: S stacked histograms in one launch.
@@ -295,10 +353,13 @@ def hash_histogram_banked(
       x: ``(S, n, d)`` pre-scaled points, sketch-major.
       w: ``(p, d, R)`` hyperplane normals (ONE hash family for the bank).
       mask: ``(S, n)`` validity mask in {0, 1} (ragged-stream padding).
+      out_dtype: counter dtype of the output stack; narrow integer dtypes
+        saturate at the dtype range (int32 scratch, one epilogue cast) and
+        S-fold both the HBM result and the resident-bank footprint.
 
     Returns:
-      ``(S, R, 2**p)`` int32 counts; slice ``s`` equals
-      ``hash_histogram(x[s], w, mask[s])``.
+      ``(S, R, 2**p)`` counts in ``out_dtype``; slice ``s`` equals
+      ``hash_histogram(x[s], w, mask[s], out_dtype=out_dtype)``.
     """
     s, n, d = x.shape
     p, dw, r = w.shape
@@ -316,7 +377,8 @@ def hash_histogram_banked(
 
     out = pl.pallas_call(
         functools.partial(
-            _hash_histogram_banked_kernel, planes=p, k_steps=grid[3]
+            _hash_histogram_banked_kernel, planes=p, n_steps=grid[2],
+            k_steps=grid[3], out_dtype=out_dtype,
         ),
         grid=grid,
         in_specs=[
@@ -325,23 +387,27 @@ def hash_histogram_banked(
             pl.BlockSpec((1, bn), lambda si, i, j, k: (si, j)),
         ],
         out_specs=pl.BlockSpec((1, br, buckets), lambda si, i, j, k: (si, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets),
+                                       jnp.dtype(out_dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((p, bn, br), jnp.float32),
+            pltpu.VMEM((br, buckets), jnp.int32),
+        ],
         interpret=interpret,
     )(xp, wp, mp)
     return out[:, :r]
 
 
 def _paired_hash_histogram_banked_kernel(
-    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, *, planes: int,
-    k_steps: int,
+    x_ref, w_ref, pad_ref, wp_ref, m_ref, o_ref, acc_ref, hist_ref, *,
+    planes: int, n_steps: int, k_steps: int, out_dtype,
 ):
     n_i = pl.program_id(2)
     k = pl.program_id(3)
 
     @pl.when(jnp.logical_and(n_i == 0, k == 0))
-    def _init_out():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
 
     @pl.when(k == 0)
     def _init_acc():
@@ -356,7 +422,7 @@ def _paired_hash_histogram_banked_kernel(
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        buckets = o_ref.shape[-1]
+        buckets = hist_ref.shape[-1]
         pad = pad_ref[0].astype(jnp.float32)  # (bn, 1)
         codes_p = jnp.zeros(acc_ref.shape[1:], jnp.int32)  # (bn, br)
         codes_n = jnp.zeros(acc_ref.shape[1:], jnp.int32)
@@ -369,12 +435,17 @@ def _paired_hash_histogram_banked_kernel(
         onehot = (codes_p[:, :, None] == iota).astype(jnp.float32)
         onehot += (codes_n[:, :, None] == iota).astype(jnp.float32)
         masked = onehot * m_ref[0].astype(jnp.float32)[:, None, None]
-        o_ref[0] += jnp.sum(masked, axis=0).astype(o_ref.dtype)  # (br, B)
+        hist_ref[...] += jnp.sum(masked, axis=0).astype(jnp.int32)  # (br, B)
+
+    @pl.when(jnp.logical_and(n_i == n_steps - 1, k == k_steps - 1))
+    def _writeback():
+        o_ref[0] = _cast_out(hist_ref[...], out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_n", "block_r", "block_d", "interpret"),
+    static_argnames=("block_n", "block_r", "block_d", "out_dtype",
+                     "interpret"),
 )
 def paired_hash_histogram_banked(
     z: Array,
@@ -384,6 +455,7 @@ def paired_hash_histogram_banked(
     block_n: int = 128,
     block_r: int = 256,
     block_d: int = 512,
+    out_dtype=jnp.int32,
     interpret: bool = False,
 ) -> Array:
     """Banked fused antithetic PRP insert: S tenants in one launch.
@@ -392,10 +464,13 @@ def paired_hash_histogram_banked(
       z: ``(S, n, d)`` pre-scaled points (``|z| <= 1``; NOT augmented).
       w: ``(p, d + 2, R)`` hyperplane normals for the augmented space.
       mask: ``(S, n)`` validity mask in {0, 1} (ragged-stream padding).
+      out_dtype: counter dtype of the output stack; narrow integer dtypes
+        saturate at the dtype range (int32 scratch, one epilogue cast) and
+        S-fold both the HBM result and the resident-bank footprint.
 
     Returns:
-      ``(S, R, 2**p)`` int32 counts; slice ``s`` equals
-      ``paired_hash_histogram(z[s], w, mask[s])``.
+      ``(S, R, 2**p)`` counts in ``out_dtype``; slice ``s`` equals
+      ``paired_hash_histogram(z[s], w, mask[s], out_dtype=out_dtype)``.
     """
     s, n, d = z.shape
     p, d_aug, r = w.shape
@@ -420,7 +495,8 @@ def paired_hash_histogram_banked(
 
     out = pl.pallas_call(
         functools.partial(
-            _paired_hash_histogram_banked_kernel, planes=p, k_steps=grid[3]
+            _paired_hash_histogram_banked_kernel, planes=p, n_steps=grid[2],
+            k_steps=grid[3], out_dtype=out_dtype,
         ),
         grid=grid,
         in_specs=[
@@ -431,8 +507,12 @@ def paired_hash_histogram_banked(
             pl.BlockSpec((1, bn), lambda si, i, j, k: (si, j)),
         ],
         out_specs=pl.BlockSpec((1, br, buckets), lambda si, i, j, k: (si, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((p, bn, br), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((s, r + r_pad, buckets),
+                                       jnp.dtype(out_dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((p, bn, br), jnp.float32),
+            pltpu.VMEM((br, buckets), jnp.int32),
+        ],
         interpret=interpret,
     )(xp, wp, padp, w_pad, mp)
     return out[:, :r]

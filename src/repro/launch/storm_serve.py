@@ -102,9 +102,18 @@ def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
           f"{gw.rows_ingested} rows ingested "
           f"({gw.rows_ingested / dt:.0f} rows/s)")
     print(f"tick programs traced {gw.trace_count}x total "
-          f"(jit-stable padded shapes; <= 3 programs)")
-    print(f"bank: S={gw.tenants} R={gw.params.rows} B={gw.params.buckets} "
-          f"({gw.bank.memory_bytes():,} bytes)")
+          f"(jit-stable padded shapes)")
+    if hasattr(gw, "tiers"):
+        tier = gw.queue_stats()["tier"]
+        print(f"tiered bank: T={gw.tenants} hot={tier['hot_capacity']} "
+              f"dtype={gw.tiers.dtype.name} "
+              f"resident {tier['resident_bytes']:,} B, "
+              f"cold {tier['cold_bytes']:,} B host, "
+              f"{tier['swap_count']} swaps "
+              f"({gw.promotions} promote / {gw.demotions} demote)")
+    else:
+        print(f"bank: S={gw.tenants} R={gw.params.rows} "
+              f"B={gw.params.buckets} ({gw.bank.memory_bytes():,} bytes)")
 
 
 def _drive_listen(gw: StormGateway, args: argparse.Namespace) -> None:
@@ -156,15 +165,33 @@ def main() -> None:
                     help="per-tenant ingest-queue cap (backpressure)")
     ap.add_argument("--max-pending-points", type=int, default=None,
                     help="per-tenant query-queue cap (backpressure)")
+    ap.add_argument("--hot-capacity", type=int, default=None,
+                    help="tiered store: resident slots (< tenants spills "
+                         "cold tenants to host; promote/demote overlaps "
+                         "the tick)")
+    ap.add_argument("--count-dtype", choices=("int32", "int16", "int8"),
+                    default="int16",
+                    help="tiered resident counter dtype (narrow shrinks "
+                         "the device bank; --hot-capacity only)")
     args = ap.parse_args()
 
     params = lsh.init_srp(jax.random.PRNGKey(args.seed), args.rows,
                           args.planes, args.dim + 2)
-    gw = StormGateway(params, args.tenants,
-                      query_slots=args.query_slots,
-                      ingest_slots=args.ingest_slots,
-                      max_pending_rows=args.max_pending_rows,
-                      max_pending_points=args.max_pending_points)
+    if args.hot_capacity is not None:
+        from repro.serve.tiered_gateway import TieredStormGateway
+
+        gw = TieredStormGateway(params, args.tenants, args.hot_capacity,
+                                query_slots=args.query_slots,
+                                ingest_slots=args.ingest_slots,
+                                count_dtype=np.dtype(args.count_dtype),
+                                max_pending_rows=args.max_pending_rows,
+                                max_pending_points=args.max_pending_points)
+    else:
+        gw = StormGateway(params, args.tenants,
+                          query_slots=args.query_slots,
+                          ingest_slots=args.ingest_slots,
+                          max_pending_rows=args.max_pending_rows,
+                          max_pending_points=args.max_pending_points)
     if args.listen is not None:
         _drive_listen(gw, args)
     else:

@@ -352,11 +352,24 @@ class StormGateway:
         return len(self._ingest_q) + len(self._query_q)
 
     def queue_stats(self) -> dict:
-        """Host-side gateway state for monitoring / the wire stats reply."""
+        """Host-side gateway state for monitoring / the wire stats reply.
+
+        ``pending_depth[t]`` is the number of queued REQUESTS for tenant
+        ``t`` (ingest + query, split requests still counting once) —
+        the row/point tallies alone can't distinguish one giant request
+        from a pile of small ones, which is exactly what Backpressure
+        tuning needs to see.
+        """
+        depth = [0] * self.tenants
+        for st in self._ingest_q:
+            depth[st.req.tenant] += 1
+        for st in self._query_q:
+            depth[st.req.tenant] += 1
         return {
             "tenants": self.tenants,
             "ticks": self.ticks,
             "pending_requests": self.pending,
+            "pending_depth": depth,
             "pending_rows": list(self._pending_rows),
             "pending_points": list(self._pending_points),
             "rows_ingested": self.rows_ingested,
@@ -416,22 +429,24 @@ class StormGateway:
         paired = self.paired
         mode = self.mode
         dtype = self.count_dtype
-        narrow = jnp.dtype(dtype).itemsize < 4
         s, dim, in_dim = self.tenants, self.dim, self.ingest_dim
         i_cap, q_cap = self.ingest_slots, self.query_slots
 
         def ingest_half(counts, n, zbuf, zmask):
-            # ONE fused banked insert over the (S, I, dim) stack; widen ->
-            # add -> saturate keeps narrow counters safe (DESIGN.md §6).
+            # ONE fused banked insert over the (S, I, dim) stack. Narrow
+            # banks get narrow tiles straight from the kernel (int32 stays
+            # in VMEM scratch, one epilogue saturate — DESIGN.md §12) and
+            # the saturating carry add; since increments are non-negative,
+            # clamp(counts + clamp(tile)) == clamp(counts + tile), so this
+            # is bit-identical to the widen-the-whole-bank path it replaces.
             if paired:
                 tile = ops.paired_hash_histogram_banked(zbuf, w, zmask,
-                                                        mode=mode)
+                                                        mode=mode,
+                                                        out_dtype=dtype)
             else:
-                tile = ops.hash_histogram_banked(zbuf, w, zmask, mode=mode)
-            wide = counts.astype(jnp.int32) if narrow else counts
-            wide = wide + tile
-            new_counts = (sketch_lib.saturating_cast(wide, dtype)
-                          if narrow else wide)
+                tile = ops.hash_histogram_banked(zbuf, w, zmask, mode=mode,
+                                                 out_dtype=dtype)
+            new_counts = sketch_lib.saturating_add(counts, tile)
             return new_counts, n + jnp.sum(zmask, axis=1).astype(jnp.int32)
 
         def query_half(counts, n, qbuf, qmask):

@@ -1,0 +1,396 @@
+"""Tiered serving gateway: hot/cold tenant store around the fused tick.
+
+:class:`TieredStormGateway` serves ``num_tenants`` GLOBAL tenants through a
+:class:`~repro.serve.storm_gateway.StormGateway` whose bank holds only
+``hot_capacity`` resident slots (DESIGN.md §12). The inner gateway is
+untouched — it packs each tick against the resident bank only — and this
+layer owns the tenant⇄slot indirection plus a
+:class:`~repro.core.tiered.TieredBank` for everyone who doesn't fit:
+
+* **Resident traffic** forwards immediately, remapped ``tenant -> slot``;
+  completions are rewritten back to global ids via the rid table, so
+  clients never see slots.
+* **Cold traffic** parks in a FIFO side queue and enqueues a promotion.
+  Promotions are scheduled at ``tick_start`` time, AFTER the tick's
+  programs dispatch: the slot swap is one jitted program chained (through
+  jax async dispatch) on the in-flight tick's output counters, so the
+  device overlaps it with nothing blocked host-side, the evicted table
+  comes back as futures flushed at ``tick_finish`` (the loop's one sync
+  point), and the residency map advances immediately — the promoted
+  tenant's queued requests drain into the inner gateway and pack into the
+  very NEXT tick.
+* **Victim policy** is LRU-by-tick with protection: a tenant with queued
+  unpacked traffic in the inner gateway is never evicted (its packed
+  in-flight traffic is safe regardless — the swap orders after the tick
+  program that read the slot).
+
+Never-recompiles contract: the inner gateway's three tick programs plus the
+bank's one swap program — ``trace_count <= 4`` for the gateway's lifetime
+under any hot/cold request mix (pinned in tests/test_tiered_gateway.py).
+
+Bit-identity contract: with ``hot_capacity >= num_tenants`` the slot map is
+the identity and no swap ever runs — every tick is byte-for-byte the PR-6
+resident gateway's tick. With eviction in play, a tenant's sketch after any
+promote/demote history equals its always-resident counterpart bit-for-bit
+(the swap is a pure slice/update and the cold store is an exact host copy).
+
+The wire front-end (:class:`~repro.serve.wire.StormWireServer`) drives this
+class unchanged — it duck-types ``submit`` / ``pending`` / ``tick_start`` /
+``tick_finish`` / ``queue_stats``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, sketch as sketch_lib
+from repro.core.tiered import TieredBank
+from repro.serve.storm_gateway import (
+    Backpressure,
+    IngestRequest,
+    InflightTick,
+    QueryRequest,
+    QueryResult,
+    StormGateway,
+    TickBudgetExceeded,
+    TickReport,
+)
+
+
+class TieredStormGateway:
+    """Fixed-tick gateway over a tiered (hot/cold) tenant store."""
+
+    def __init__(
+        self,
+        params: lsh.LSHParams,
+        num_tenants: int,
+        hot_capacity: int,
+        *,
+        paired: bool = True,
+        query_slots: int = 32,
+        ingest_slots: int = 128,
+        count_dtype=jnp.int16,
+        mode: str = "auto",
+        mesh=None,
+        axis: str = "bank",
+        max_pending_rows: Optional[int] = None,
+        max_pending_points: Optional[int] = None,
+        promote_per_tick: int = 2,
+    ):
+        """Args mirror :class:`StormGateway` plus the tier knobs:
+
+          num_tenants: global tenant count T (requests address these ids).
+          hot_capacity: resident slots H — the inner gateway's bank size
+            and the ONLY device-side counter footprint. ``H >= T`` makes
+            the tier a transparent wrapper (the bit-identity baseline).
+          count_dtype: resident counter dtype — int16/int8 shrink both the
+            bank and the per-tick kernel tiles (DESIGN.md §12).
+          promote_per_tick: max cold tenants promoted per tick (each is one
+            dispatch of the single swap program).
+        """
+        if num_tenants < 1:
+            raise ValueError(f"need at least one tenant; got {num_tenants}")
+        self.num_tenants = num_tenants
+        self.tiers = TieredBank(
+            num_tenants=num_tenants,
+            hot_capacity=hot_capacity,
+            rows=params.rows,
+            buckets=params.buckets,
+            dtype=count_dtype,
+        )
+        counts, n = self.tiers.init_resident()
+        self.gw = StormGateway(
+            params,
+            self.tiers.hot_capacity,
+            paired=paired,
+            query_slots=query_slots,
+            ingest_slots=ingest_slots,
+            mode=mode,
+            bank=sketch_lib.SketchBank(counts=counts, n=n),
+            mesh=mesh,
+            axis=axis,
+            # Caps are enforced HERE, per global tenant: the inner queues
+            # only ever hold traffic this layer already admitted.
+            max_pending_rows=None,
+            max_pending_points=None,
+        )
+        self.max_pending_rows = max_pending_rows
+        self.max_pending_points = max_pending_points
+        self.promote_per_tick = promote_per_tick
+        self._cold_q: Deque[Union[IngestRequest, QueryRequest]] = deque()
+        self._cold_rows = [0] * num_tenants
+        self._cold_points = [0] * num_tenants
+        self._rid_tenant: Dict[int, int] = {}
+        self.promotions = 0
+        self.demotions = 0
+        self.deferred_promotions = 0
+
+    # -- tenant-space accounting --------------------------------------------
+
+    def _inner_pending(self, tenant: int) -> tuple:
+        """(rows, points) queued-but-unpacked in the inner gateway."""
+        slot = self.tiers.slot_of.get(tenant)
+        if slot is None:
+            return 0, 0
+        return self.gw._pending_rows[slot], self.gw._pending_points[slot]
+
+    def _check_cap(self, tenant: int, kind: str, requested: int) -> None:
+        rows, points = self._inner_pending(tenant)
+        if kind == "ingest":
+            pending = self._cold_rows[tenant] + rows
+            limit = self.max_pending_rows
+        else:
+            pending = self._cold_points[tenant] + points
+            limit = self.max_pending_points
+        if limit is not None and pending + requested > limit:
+            raise Backpressure(tenant, kind, pending, requested, limit)
+
+    # -- request plumbing ---------------------------------------------------
+
+    def submit(self, req: Union[IngestRequest, QueryRequest]) -> None:
+        if not 0 <= req.tenant < self.num_tenants:
+            raise ValueError(f"tenant {req.tenant} out of range "
+                             f"[0, {self.num_tenants})")
+        if isinstance(req, IngestRequest):
+            z = np.asarray(req.z, np.float32)
+            size, kind = z.shape[0], "ingest"
+        elif isinstance(req, QueryRequest):
+            z = np.asarray(req.thetas, np.float32)
+            size, kind = z.shape[0], "query"
+        else:
+            raise TypeError(f"unknown request type {type(req).__name__}")
+        self._check_cap(req.tenant, kind, size)
+        slot = self.tiers.slot_of.get(req.tenant)
+        if slot is not None:
+            self._forward(req, slot)
+            self.tiers.touch(req.tenant, self.gw.ticks)
+        else:
+            self._cold_q.append(req)
+            if kind == "ingest":
+                self._cold_rows[req.tenant] += size
+            else:
+                self._cold_points[req.tenant] += size
+
+    def _forward(self, req, slot: int) -> None:
+        """Hand a request to the inner gateway in slot space.
+
+        The rid table remembers the GLOBAL tenant so finish-time reports
+        can be rewritten — the slot a request ran in is an implementation
+        detail clients never observe.
+        """
+        self._rid_tenant[req.rid] = req.tenant
+        self.gw.submit(dataclasses.replace(req, tenant=slot))
+
+    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest]]
+                    ) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    @property
+    def pending(self) -> int:
+        return self.gw.pending + len(self._cold_q)
+
+    @property
+    def ticks(self) -> int:
+        return self.gw.ticks
+
+    # Delegations so drivers (launcher, benches) treat both gateways alike.
+    @property
+    def tenants(self) -> int:
+        return self.num_tenants
+
+    @property
+    def params(self):
+        return self.gw.params
+
+    @property
+    def rows_ingested(self) -> int:
+        return self.gw.rows_ingested
+
+    @property
+    def points_served(self) -> int:
+        return self.gw.points_served
+
+    @property
+    def ingest_slots(self) -> int:
+        return self.gw.ingest_slots
+
+    @property
+    def query_slots(self) -> int:
+        return self.gw.query_slots
+
+    @property
+    def trace_count(self) -> int:
+        """Tick programs + the swap program: must stay <= 4 for life."""
+        return self.gw.trace_count + self.tiers.trace_count
+
+    # -- promotion scheduling -----------------------------------------------
+
+    def _protected(self) -> set:
+        """Tenants whose slots must survive this round of eviction."""
+        out = set()
+        for tenant, slot in self.tiers.slot_of.items():
+            if (self.gw._pending_rows[slot] > 0
+                    or self.gw._pending_points[slot] > 0):
+                out.add(tenant)
+        return out
+
+    def _schedule_promotions(self, tick: int) -> None:
+        """Promote up to ``promote_per_tick`` cold tenants with traffic.
+
+        Runs right after the tick's programs dispatched: each swap chains
+        on the in-flight tick's output counters, the residency map
+        advances now, and the promoted tenant's parked requests drain into
+        the inner queues — packed by the NEXT ``tick_start``.
+        """
+        if not self._cold_q:
+            return
+        wanted: List[int] = []
+        for req in self._cold_q:
+            if req.tenant not in wanted and len(wanted) < self.promote_per_tick:
+                wanted.append(req.tenant)
+        promoted = set()
+        for tenant in wanted:
+            protect = self._protected() | promoted
+            if self.tiers.lru_victim(protect) is None and \
+                    self.tiers._free_slot() is None:
+                # Every slot is protected — defer, never stall the tick.
+                self.deferred_promotions += 1
+                continue
+            counts, n, victim = self.tiers.promote(
+                tenant, self.gw._counts, self.gw._n, tick=tick,
+                protect=protect)
+            self.gw._counts, self.gw._n = counts, n
+            self.promotions += 1
+            if victim is not None:
+                self.demotions += 1
+            promoted.add(tenant)
+        if not promoted:
+            return
+        remaining: Deque[Union[IngestRequest, QueryRequest]] = deque()
+        for req in self._cold_q:
+            if req.tenant in promoted:
+                if isinstance(req, IngestRequest):
+                    self._cold_rows[req.tenant] -= req.z.shape[0]
+                else:
+                    self._cold_points[req.tenant] -= req.thetas.shape[0]
+                self._forward(req, self.tiers.slot_of[req.tenant])
+            else:
+                remaining.append(req)
+        self._cold_q = remaining
+
+    # -- the tick -----------------------------------------------------------
+
+    def tick_start(self) -> InflightTick:
+        """Pack resident traffic, dispatch the tick, then overlap promotions.
+
+        Order matters: the inner pack/dispatch goes first so promotion
+        swaps chain AFTER the tick's programs on the device — the tick
+        reads the pre-swap slots it packed against, and the swap costs no
+        tick latency. LRU clocks advance for every tenant the tick packed.
+        """
+        for tenant, slot in list(self.tiers.slot_of.items()):
+            if (self.gw._pending_rows[slot] > 0
+                    or self.gw._pending_points[slot] > 0):
+                self.tiers.touch(tenant, self.gw.ticks + 1)
+        inflight = self.gw.tick_start()
+        self._schedule_promotions(inflight.tick)
+        return inflight
+
+    def tick_finish(self, inflight: InflightTick) -> TickReport:
+        """Inner finish + rewrite reports to global ids + land evictions."""
+        rep = self.gw.tick_finish(inflight)
+        for res in rep.results:
+            res.tenant = self._rid_tenant.pop(res.rid, res.tenant)
+        for done in rep.ingest_done:
+            done.tenant = self._rid_tenant.pop(done.rid, done.tenant)
+        self.tiers.flush_evictions()
+        return rep
+
+    def tick(self) -> TickReport:
+        return self.tick_finish(self.tick_start())
+
+    def run_until_idle(self, max_ticks: int = 10_000, *,
+                       pipelined: bool = False,
+                       depth: int = 2) -> List[QueryResult]:
+        """Tick until idle (cold tenants promote as ticks pass); all results.
+
+        Same drain loop as :meth:`StormGateway.run_until_idle` — the only
+        difference is that ``pending`` includes the cold side queue, which
+        empties through promotions scheduled tick by tick.
+        """
+        out: List[QueryResult] = []
+        if pipelined:
+            inflight: Deque[InflightTick] = deque()
+            while self.pending or inflight:
+                while self.pending and len(inflight) < depth and \
+                        max_ticks > 0:
+                    inflight.append(self.tick_start())
+                    max_ticks -= 1
+                if not inflight:
+                    break
+                out.extend(self.tick_finish(inflight.popleft()).results)
+        else:
+            while self.pending and max_ticks > 0:
+                out.extend(self.tick().results)
+                max_ticks -= 1
+        if self.pending:
+            raise TickBudgetExceeded(self.pending, out)
+        return out
+
+    # -- reads --------------------------------------------------------------
+
+    def sketch_of(self, tenant: int) -> sketch_lib.Sketch:
+        """Tenant's sketch wherever it lives (host copy when cold)."""
+        return self.tiers.sketch_of(tenant, self.gw._counts, self.gw._n)
+
+    @property
+    def resident_bank(self) -> sketch_lib.SketchBank:
+        """The device-resident hot bank (slot-major, NOT tenant-major)."""
+        return self.gw.bank
+
+    def rollup(self, assignment, num_groups: Optional[int] = None
+               ) -> sketch_lib.SketchBank:
+        """Cohort roll-up over ALL tenants without promoting anyone."""
+        return self.tiers.rollup(assignment, self.gw._counts, self.gw._n,
+                                 num_groups=num_groups)
+
+    def queue_stats(self) -> dict:
+        """Gateway state in GLOBAL tenant space, plus tier occupancy."""
+        inner = self.gw.queue_stats()
+        t = self.num_tenants
+        depth = [0] * t
+        rows = [0] * t
+        points = [0] * t
+        for slot, tenant in enumerate(self.tiers.slot_tenant):
+            if tenant is None:
+                continue
+            depth[tenant] += inner["pending_depth"][slot]
+            rows[tenant] += inner["pending_rows"][slot]
+            points[tenant] += inner["pending_points"][slot]
+        for req in self._cold_q:
+            depth[req.tenant] += 1
+        for tenant in range(t):
+            rows[tenant] += self._cold_rows[tenant]
+            points[tenant] += self._cold_points[tenant]
+        tier = self.tiers.stats()
+        tier.update(promotions=self.promotions, demotions=self.demotions,
+                    deferred_promotions=self.deferred_promotions,
+                    cold_queued=len(self._cold_q))
+        return {
+            "tenants": t,
+            "ticks": self.gw.ticks,
+            "pending_requests": self.pending,
+            "pending_depth": depth,
+            "pending_rows": rows,
+            "pending_points": points,
+            "rows_ingested": self.gw.rows_ingested,
+            "points_served": self.gw.points_served,
+            "trace_count": self.trace_count,
+            "tier": tier,
+        }

@@ -289,6 +289,71 @@ def check_bank_divisible(s: int, mesh: Mesh, axis: str) -> None:
         )
 
 
+def tenant_placement(tenants: int, mesh: Mesh, axis: str = "bank"
+                     ) -> np.ndarray:
+    """Tenant -> shard map induced by the ``P(axis)`` leading-axis layout.
+
+    The bank/gateway convention (:func:`bank_specs`, :func:`gateway_specs`)
+    shards the leading tenant axis in contiguous equal blocks, so slot
+    (= tenant, pre-tiering) ``i`` lives on shard ``i // (S / n_shards)``.
+    This function is the single owner of that arithmetic — the tiered
+    gateway composes it with its tenant->slot map to answer "which device
+    holds tenant t right now", and :func:`rebalance_placement` produces
+    permutations that keep the same contiguous layout while balancing load.
+
+    Returns:
+      ``(tenants,)`` int32 — shard index per tenant/slot.
+    """
+    check_bank_divisible(tenants, mesh, axis)
+    shards = mesh.shape[axis]
+    return np.repeat(np.arange(shards, dtype=np.int32), tenants // shards)
+
+
+def rebalance_placement(loads, num_shards: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Load-balance tenants over equal-capacity shards, staying contiguous.
+
+    Capacity-bounded LPT greedy: tenants in descending load order each go
+    to the least-loaded shard that still has a free slot (every shard holds
+    exactly ``T / num_shards`` tenants — the ``P(axis)`` layout is
+    equal-block by construction, so capacity is not a knob). The output is
+    a slot PERMUTATION: placing tenant ``slot_tenant[i]`` at bank slot
+    ``i`` makes the standard contiguous sharding realize the balanced
+    assignment — no new PartitionSpec machinery, just reordered slots.
+
+    Args:
+      loads: ``(T,)`` per-tenant load (rows/points per tick, bytes — any
+        additive cost).
+      num_shards: shard count; must divide ``T``.
+
+    Returns:
+      ``(slot_tenant, shard_of)``: ``slot_tenant[i]`` is the tenant to
+      place at slot ``i`` (a permutation of ``arange(T)``), and
+      ``shard_of[t]`` is tenant ``t``'s shard under that placement.
+    """
+    loads = np.asarray(loads, np.float64)
+    t = loads.shape[0]
+    if t % num_shards:
+        raise ValueError(
+            f"{t} tenants not divisible by {num_shards} shards; pad the "
+            f"bank or choose T as a multiple"
+        )
+    cap = t // num_shards
+    members: list = [[] for _ in range(num_shards)]
+    totals = np.zeros(num_shards)
+    for tenant in np.argsort(-loads, kind="stable"):
+        open_shards = [s for s in range(num_shards) if len(members[s]) < cap]
+        best = min(open_shards, key=lambda s: (totals[s], s))
+        members[best].append(int(tenant))
+        totals[best] += loads[tenant]
+    slot_tenant = np.concatenate(
+        [np.sort(np.asarray(m, np.int32)) for m in members])
+    shard_of = np.empty((t,), np.int32)
+    for shard, m in enumerate(members):
+        shard_of[np.asarray(m, np.int32)] = shard
+    return slot_tenant, shard_of
+
+
 # ---------------------------------------------------------------------------
 # Inputs / activations / caches
 # ---------------------------------------------------------------------------

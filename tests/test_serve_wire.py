@@ -178,6 +178,9 @@ class TestLoopback:
             assert stats["tenants"] == S
             assert stats["rows_ingested"] == 4
             assert stats["trace_count"] <= 3
+            # Per-tenant queue depth rides the same frame (DESIGN.md §12):
+            # everything drained, so every depth is zero.
+            assert stats["pending_depth"] == [0] * S
         finally:
             client.close()
             server.stop()

@@ -1,0 +1,299 @@
+"""TieredBank + narrow banked-path parity tests (DESIGN.md §12).
+
+The contracts: (1) promote/demote moves counter tables between tiers
+BIT-FOR-BIT — a tenant that bounces hot→cold→hot holds exactly the table it
+started with; (2) the LRU-by-tick victim policy respects protection and
+free slots; (3) every slot swap of a bank's life shares ONE jitted program
+(``trace_count <= 1``); (4) ``rollup`` over a split hot/cold population
+equals ``SketchBank.merge_groups`` over the full resident bank; (5) the
+*banked* insert/query paths agree across kernel / scan / ref engines at
+int16/int8, including saturation at the dtype max; (6) tenant-to-shard
+placement maps are contiguous, balanced, and permutation-valid.
+
+Counters are integers throughout, so every check is exact.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.core import lsh, sketch as sketch_lib  # noqa: E402
+from repro.core.tiered import TieredBank  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.sharding import specs  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+R, B = 8, 4  # small (R, B) table for the policy tests
+
+
+def _tables(count, dtype=jnp.int16, seed=0):
+    """Distinct random counter tables, one per tenant, in [0, 100)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (count, R, B), 0, 100).astype(dtype)
+
+
+def _bank_with(tenants_resident, tables):
+    """A TieredBank plus caller-owned arrays seeded with real content."""
+    tb = TieredBank(num_tenants=tables.shape[0],
+                    hot_capacity=len(tenants_resident), rows=R, buckets=B,
+                    dtype=tables.dtype)
+    counts, n = tb.init_resident()
+    counts = tables[jnp.asarray(tenants_resident)]
+    n = jnp.asarray([10 * (t + 1) for t in tenants_resident], jnp.int32)
+    return tb, counts, n
+
+
+class TestTieredBankSwap:
+    def test_promote_demote_round_trip_bit_exact(self):
+        """hot -> cold -> hot returns the exact table, counters and n."""
+        tables = _tables(3)
+        tb, counts, n = _bank_with([0, 1], tables)
+        # Evict tenant 0 by promoting cold tenant 2 (LRU: both slots at
+        # tick 0, slot 0 wins the tie).
+        counts, n, victim = tb.promote(2, counts, n, tick=1)
+        assert victim == 0 and tb.is_resident(2) and not tb.is_resident(0)
+        # Before any explicit flush, the cold read must still see tenant
+        # 0's exact table (sketch_of lands the pending eviction itself).
+        sk0 = tb.sketch_of(0, counts, n)
+        np.testing.assert_array_equal(np.asarray(sk0.counts),
+                                      np.asarray(tables[0]))
+        assert int(sk0.n) == 10
+        # Promote 0 back (evicts LRU = tenant 1): the resident slot holds
+        # the round-tripped table bit-for-bit.
+        counts, n, victim = tb.promote(0, counts, n, tick=2)
+        assert victim == 1
+        slot = tb.slot_of[0]
+        np.testing.assert_array_equal(np.asarray(counts[slot]),
+                                      np.asarray(tables[0]))
+        assert int(n[slot]) == 10
+        # And tenant 1's spilled table survived untouched.
+        tb.flush_evictions()
+        sk1 = tb.sketch_of(1, counts, n)
+        np.testing.assert_array_equal(np.asarray(sk1.counts),
+                                      np.asarray(tables[1]))
+        assert int(sk1.n) == 20
+
+    def test_demote_frees_slot_and_promote_reuses_it(self):
+        tables = _tables(3)
+        tb, counts, n = _bank_with([0, 1], tables)
+        counts, n = tb.demote(0, counts, n)
+        assert not tb.is_resident(0) and tb._free_slot() == 0
+        # The freed slot is zeroed on device.
+        np.testing.assert_array_equal(np.asarray(counts[0]),
+                                      np.zeros((R, B), np.int16))
+        # A later promotion absorbs into the free slot: no victim.
+        counts, n, victim = tb.promote(2, counts, n, tick=1)
+        assert victim is None and tb.slot_of[2] == 0
+        assert tb.resident_tenants() == [2, 1]
+
+    def test_never_demoted_cold_tenant_reads_as_zero(self):
+        tables = _tables(2)
+        tb, counts, n = _bank_with([0], tables)  # 1-slot bank, 2 tenants
+        sk = tb.sketch_of(1, counts, n)
+        assert int(jnp.abs(sk.counts).sum()) == 0 and int(sk.n) == 0
+
+    def test_lru_victim_order_and_protection(self):
+        tables = _tables(4)
+        tb, counts, n = _bank_with([0, 1, 2], tables)
+        tb.touch(0, tick=5)
+        tb.touch(2, tick=3)
+        assert tb.lru_victim() == 1            # never touched -> tick 0
+        assert tb.lru_victim(protect=[1]) == 2  # next-coldest
+        assert tb.lru_victim(protect=[0, 1, 2]) is None
+        with pytest.raises(RuntimeError, match="protected"):
+            tb.promote(3, counts, n, tick=6, protect=[0, 1, 2])
+
+    def test_trace_count_one_program_for_all_slots(self):
+        """Swaps at every slot, promotes AND demotes: one trace total."""
+        tables = _tables(6)
+        tb, counts, n = _bank_with([0, 1, 2], tables)
+        for tick, tenant in enumerate([3, 4, 5, 0, 1], start=1):
+            counts, n, _ = tb.promote(tenant, counts, n, tick=tick)
+        counts, n = tb.demote(1, counts, n)
+        tb.flush_evictions()
+        assert tb.swap_count == 6
+        assert tb.trace_count <= 1
+
+    def test_rollup_matches_full_bank_merge_groups(self):
+        """Hot half (device) + cold half (host) == one flat merge_groups."""
+        tables = _tables(5, seed=7)
+        all_n = jnp.asarray([10 * (t + 1) for t in range(5)], jnp.int32)
+        tb, counts, n = _bank_with([0, 1], tables)
+        # Give the cold tenants content by promoting each, writing its
+        # table through the caller-owned arrays (as gateway ingest would),
+        # then letting the next promotion spill it back out.
+        for tenant in (2, 3, 4):
+            counts, n, _ = tb.promote(tenant, counts, n, tick=tenant)
+            slot = tb.slot_of[tenant]
+            counts = counts.at[slot].set(tables[tenant])
+            n = n.at[slot].set(all_n[tenant])
+        tb.flush_evictions()
+        assignment = np.asarray([0, 1, 0, 1, 0], np.int32)
+        got = tb.rollup(assignment, counts, n)
+        want = sketch_lib.SketchBank(counts=tables, n=all_n).merge_groups(
+            jnp.asarray(assignment), num_groups=2)
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(want.counts))
+        np.testing.assert_array_equal(np.asarray(got.n), np.asarray(want.n))
+        # Cached cold half: same assignment again is still exact.
+        again = tb.rollup(assignment, counts, n)
+        np.testing.assert_array_equal(np.asarray(again.counts),
+                                      np.asarray(want.counts))
+
+    def test_rollup_with_free_slot_drops_nothing(self):
+        tables = _tables(3, seed=3)
+        tb, counts, n = _bank_with([0, 1], tables)
+        counts, n = tb.demote(1, counts, n)  # slot 1 now free (zeroed)
+        got = tb.rollup(np.zeros(3, np.int32), counts, n, num_groups=1)
+        want32 = (tables[0].astype(jnp.int32)
+                  + tables[1].astype(jnp.int32))  # tenant 2 never existed
+        np.testing.assert_array_equal(np.asarray(got.counts[0]),
+                                      np.asarray(want32.astype(jnp.int16)))
+
+    def test_footprint_accounting(self):
+        tb = TieredBank(num_tenants=8, hot_capacity=2, rows=R, buckets=B,
+                        dtype=jnp.int8)
+        assert tb.resident_bytes() == 2 * R * B * 1 + 4 * 2
+        assert tb.cold_bytes() == 0  # nothing materialized yet
+        stats = tb.stats()
+        assert stats["resident"] == 2 and stats["cold_materialized"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Narrow-dtype parity on the BANKED paths: kernel vs scan vs ref
+# ---------------------------------------------------------------------------
+
+
+def _saturating_streams(s=3, n=300, d=2, seed=20):
+    return [
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed + t), (n, d))
+        for t in range(s)
+    ]
+
+
+class TestNarrowBankedParity:
+    """tier tentpole: the banked insert/query carry int16/int8 natively and
+    every engine (Pallas interpret kernel, scatter-add scan, vmapped ref)
+    lands the SAME bits — including saturation at the dtype max."""
+
+    @pytest.mark.parametrize("dtype", [jnp.int16, jnp.int8])
+    @pytest.mark.parametrize("paired", [True, False])
+    def test_insert_banked_engines_agree(self, dtype, paired):
+        # Tiny table (R=4, p=1 -> B=2) so int8 cells exceed 127: a paired
+        # insert adds 2 per row per point, 300 points -> masses ~300.
+        d = 2
+        params = lsh.init_srp(jax.random.PRNGKey(1), 4, 1,
+                              d + 2 if paired else d)
+        zs = _saturating_streams(d=d)
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        kernel = ops.sketch_insert_banked(params, stacked, mask, batch=128,
+                                          paired=paired, mode="interpret",
+                                          dtype=dtype)
+        refb = ops.sketch_insert_banked(params, stacked, mask, batch=128,
+                                        paired=paired, mode="ref",
+                                        dtype=dtype)
+        scan = sketch_lib.sketch_dataset_many(params, zs, batch=128,
+                                              paired=paired, engine="scan",
+                                              dtype=dtype)
+        if dtype == jnp.int8:
+            assert int(jnp.max(refb.counts)) == 127  # saturation engaged
+        np.testing.assert_array_equal(np.asarray(kernel.counts),
+                                      np.asarray(refb.counts))
+        np.testing.assert_array_equal(np.asarray(scan.counts),
+                                      np.asarray(refb.counts))
+        # Saturation semantics: the narrow bank IS the clamped int32 bank.
+        wide = ops.sketch_insert_banked(params, stacked, mask, batch=128,
+                                        paired=paired, mode="ref")
+        np.testing.assert_array_equal(
+            np.asarray(refb.counts),
+            np.asarray(sketch_lib.saturating_cast(wide.counts, dtype)),
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.int16, jnp.int8])
+    def test_query_banked_narrow_equals_widened(self, dtype):
+        """Banked queries on a narrow (saturated) bank == the same queries
+        on its int32 widening, on BOTH engines — narrow counters are exact
+        in f32 (|c| <= 32767 < 2^24), so not a single ulp may differ."""
+        d = 2
+        params = lsh.init_srp(jax.random.PRNGKey(2), 4, 1, d + 2)
+        zs = _saturating_streams(d=d, seed=30)
+        stacked, mask = sketch_lib.stack_ragged(zs)
+        bank = ops.sketch_insert_banked(params, stacked, mask, batch=128,
+                                        mode="ref", dtype=dtype)
+        wide_counts = bank.counts.astype(jnp.int32)
+        w = ops.from_lsh_params(params)
+        m = 17
+        q = jax.random.normal(jax.random.PRNGKey(3), (m, d))
+        qa = lsh.augment_query(lsh.normalize_query(q))
+        idx = (jnp.arange(m, dtype=jnp.int32) * 5) % bank.size
+        for mode in ("ref", "interpret"):
+            narrow = ops.sketch_query(qa, w, bank.counts, mode=mode,
+                                      sketch_idx=idx)
+            wide = ops.sketch_query(qa, w, wide_counts, mode=mode,
+                                    sketch_idx=idx)
+            np.testing.assert_array_equal(np.asarray(narrow),
+                                          np.asarray(wide))
+        # And the two engines agree with each other on the narrow bank.
+        np.testing.assert_array_equal(
+            np.asarray(ops.sketch_query(qa, w, bank.counts, mode="ref",
+                                        sketch_idx=idx)),
+            np.asarray(ops.sketch_query(qa, w, bank.counts,
+                                        mode="interpret", sketch_idx=idx)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Tenant-to-shard placement maps (sharding/specs.py)
+# ---------------------------------------------------------------------------
+
+
+class TestPlacement:
+    def _mesh(self):
+        return Mesh(np.asarray(jax.devices()), ("bank",))
+
+    def test_tenant_placement_contiguous_blocks(self):
+        mesh = self._mesh()
+        shards = mesh.shape["bank"]
+        place = specs.tenant_placement(8 * shards, mesh)
+        assert place.shape == (8 * shards,) and place.dtype == np.int32
+        # Contiguous equal blocks, in shard order.
+        np.testing.assert_array_equal(
+            place, np.repeat(np.arange(shards), 8))
+
+    def test_tenant_placement_rejects_indivisible(self):
+        mesh = self._mesh()
+        if mesh.shape["bank"] == 1:
+            pytest.skip("everything divides a 1-device mesh")
+        with pytest.raises(ValueError, match="not divisible"):
+            specs.tenant_placement(mesh.shape["bank"] * 4 + 1, mesh)
+
+    def test_rebalance_is_permutation_staying_contiguous(self):
+        loads = np.asarray([100, 1, 1, 90, 5, 80, 2, 70], np.float64)
+        slot_tenant, shard_of = specs.rebalance_placement(loads, 2)
+        assert sorted(slot_tenant.tolist()) == list(range(8))
+        # shard_of is consistent with the contiguous slot layout.
+        for slot, tenant in enumerate(slot_tenant):
+            assert shard_of[tenant] == slot // 4
+        # Equal occupancy by construction.
+        assert np.bincount(shard_of, minlength=2).tolist() == [4, 4]
+
+    def test_rebalance_beats_naive_contiguous_split(self):
+        """On a skewed load the LPT permutation's max-shard load is no
+        worse than the identity placement's."""
+        loads = np.asarray([100, 90, 80, 70, 1, 2, 3, 4], np.float64)
+        _, shard_of = specs.rebalance_placement(loads, 2)
+        lpt_max = max(loads[shard_of == s].sum() for s in range(2))
+        naive_max = max(loads[:4].sum(), loads[4:].sum())
+        assert lpt_max <= naive_max
+        assert lpt_max == 175.0  # 100+70+1+4 vs 90+80+2+3
+
+    def test_rebalance_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            specs.rebalance_placement(np.ones(7), 2)
