@@ -42,6 +42,7 @@ def main() -> None:
         "fig3": bench_surrogate.run,
         "fig4": bench_regression.run,
         "fig5": bench_classification.run,
+        "surrogate": bench_surrogate.run_surrogate,
         "kernels": bench_kernels.run,
         "distributed": bench_distributed.run,
         "serve": bench_serve.run,

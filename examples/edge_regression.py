@@ -15,7 +15,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from repro.core import distributed, dfo, lsh, privacy, regression, sketch  # noqa: E402
+from repro.core import distributed, dfo, erm, losses, lsh, privacy, sketch  # noqa: E402
 from repro.data import datasets  # noqa: E402
 
 
@@ -28,7 +28,10 @@ def main() -> None:
                                        condition=10)
     xs = (x - x.mean(0)) / (x.std(0) + 1e-8)
     ys = (y - y.mean()) / (y.std() + 1e-8)
-    z = jnp.concatenate([xs, ys[:, None]], axis=-1)
+    # The registered spec owns the data encoding (concat [x, y] for the
+    # paired PRP regression loss) — same spine as every other loss.
+    spec = losses.PRP_REGRESSION
+    z = spec.encode(xs, ys)
     z_scaled, _ = lsh.scale_to_unit_ball(z)
 
     params = lsh.init_srp(k_hash, rows=2048, planes=4, dim=z.shape[1] + 2)
@@ -39,12 +42,15 @@ def main() -> None:
     print(f"devices: {len(jax.devices())}, merged sketch n={int(merged.n)}, "
           f"bytes={merged.memory_bytes():,}")
 
-    # Every device can now train locally from the merged counters.
-    fit = regression.fit(k_fit, x, y,
-                         regression.StormRegressorConfig(rows=2048),
-                         prebuilt=(merged, params, None))
-    print(f"distributed-sketch model MSE: {float(fit.mse(x, y)):.4f} "
-          f"(var y = {float(jnp.var(y)):.4f})")
+    # Every device can now train locally from the merged counters through
+    # the generic erm driver (regression.fit is a thin adapter over it).
+    res = erm.fit(spec, merged, params, k_fit,
+                  dfo_config=dfo.DFOConfig(steps=300, num_queries=8,
+                                           sigma=0.5, learning_rate=1.0,
+                                           decay=0.995))
+    mse = float(jnp.mean((xs @ res.theta[:-1] - ys) ** 2))
+    print(f"distributed-sketch model MSE (standardized): {mse:.4f} "
+          f"(var ys = {float(jnp.var(ys)):.4f})")
 
     # Differentially-private release of the merged sketch (eps = 1).
     private = privacy.privatize_counts(k_priv, merged, epsilon=1.0)

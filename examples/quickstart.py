@@ -1,8 +1,11 @@
-"""Quickstart: train a linear regression model from a STORM sketch only.
+"""Quickstart: train models from a STORM sketch only, via the ERM spine.
 
 The dataset is streamed into an R x B array of integer counters, discarded,
 and the model is recovered by derivative-free optimization over sketch
-queries (paper Algorithm 2).
+queries (paper Algorithm 2). Every trainable loss is a registered
+``Surrogate`` spec (``repro.core.losses``) and trains through ONE generic
+driver — ``erm.fit_surrogate(name, key, x, y)`` — so a new loss is a
+registry entry, not a new training loop.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +13,7 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines, regression
+from repro.core import baselines, erm, losses, regression
 from repro.data import datasets
 
 
@@ -22,9 +25,24 @@ def main() -> None:
     x, y, _ = datasets.make_regression(k_data, n=2000, d=8, noise=0.2,
                                        condition=10)
 
-    # 2. Fit from the sketch (the data never needs to be stored).
+    print("registered surrogates:", sorted(losses.SURROGATES))
+
+    # 2a. The task-level driver (a thin adapter over the erm spine): it
+    #     standardizes, sketches, fits, and un-standardizes for you.
     cfg = regression.StormRegressorConfig(rows=2048, planes=4)
     fit = regression.fit(k_fit, x, y, cfg)
+
+    # 2b. The same fit through the generic registry path — any registered
+    #     loss trains this way, with zero per-loss driver code.
+    xs = (x - x.mean(0)) / (x.std(0) + 1e-8)
+    ys = (y - y.mean()) / (y.std() + 1e-8)
+    generic = erm.fit_surrogate(
+        "prp_regression", k_fit, xs, ys,
+        config=erm.ERMConfig(rows=2048, planes=4),
+    )
+    # pin_last=-1 makes the iterate homogeneous: <theta, [x, y]> = 0, so
+    # the standardized prediction is xs @ theta[:d].
+    mse_generic = float(jnp.mean((xs @ generic.theta[:-1] - ys) ** 2))
 
     # 3. Compare against exact least squares.
     ols = baselines.ols(x, y)
@@ -33,6 +51,8 @@ def main() -> None:
     print(f"STORM    train MSE: {float(fit.mse(x, y)):.4f}")
     print(f"exact    train MSE: {float(ols.mse(x, y)):.4f}")
     print(f"variance of y:      {float(jnp.var(y)):.4f}")
+    print(f"registry-path MSE (standardized space): {mse_generic:.4f} "
+          f"(var ys = {float(jnp.var(ys)):.4f})")
     cos = jnp.dot(fit.theta, ols.theta) / (
         jnp.linalg.norm(fit.theta) * jnp.linalg.norm(ols.theta)
     )

@@ -5,6 +5,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Single-owner lint (DESIGN.md §13): only core/erm.py (and core/fleet.py
+# itself) may call fleet.make_loss_fn / fleet.run_fleet — every driver goes
+# through the erm spine, so the loss-closure and fleet-loop conventions
+# cannot fork per driver again.
+offenders=$(grep -RnE 'fleet\.(make_loss_fn|run_fleet)\(' src/repro \
+  --include='*.py' | grep -vE 'core/(erm|fleet)\.py' || true)
+if [ -n "$offenders" ]; then
+  echo "ERM single-owner lint failed: call erm.sketch_loss_fn / erm.run_fleet instead:" >&2
+  echo "$offenders" >&2
+  exit 1
+fi
+
 python -m pytest -q "$@"
-python -m benchmarks.run kernels serve tiered --json BENCH_kernels.json
+python -m benchmarks.run kernels serve tiered surrogate --json BENCH_kernels.json
 python -m benchmarks.bench_serve_load --smoke --json "$(mktemp)"

@@ -4,6 +4,8 @@
 * leverage-score sampling (sample ``m`` rows ∝ leverage, reweight, solve),
 * Clarkson–Woodruff count-sketch-and-solve (``S X theta ≈ S y`` with a
   CountSketch ``S``),
+* streaming SVRG (Frostig et al. — the single-pass ERM competitor; the
+  O(d) streaming-optimization baseline for the surrogate A/B bench),
 * the exact OLS oracle.
 
 Each returns a fitted ``(theta, intercept)`` plus its *memory footprint in
@@ -73,6 +75,55 @@ def leverage_sampling(key: Array, x: Array, y: Array, m: int) -> LinearFit:
     xb = _with_bias(x[idx]) * w[:, None]
     yb = y[idx] * w
     return _solve(xb, yb, memory_bytes=m * (x.shape[-1] + 1) * 4)
+
+
+def streaming_svrg(
+    key: Array,
+    x: Array,
+    y: Array,
+    stages: int = 4,
+    learning_rate: float = 0.05,
+) -> LinearFit:
+    """Single-pass streaming SVRG for least squares (Frostig et al. '15).
+
+    The paper's "competing with the ERM in a single pass" recipe: the
+    stream splits into geometrically growing stages; each stage spends
+    half its samples estimating the anchor (full-gradient proxy)
+    ``g = mean_i grad f_i(w~)`` and the other half on one
+    variance-reduced step per sample,
+    ``w <- w - eta (grad f_i(w) - grad f_i(w~) + g)``. Every sample is
+    read exactly ONCE and the working set is three ``(d+1)``-vectors —
+    the O(d)-memory streaming-optimization baseline against which the
+    sketch (O(R·B) counters, but mergeable and multi-loss) is A/B'd in
+    ``benchmarks/bench_surrogate.py``.
+    """
+    xb = _with_bias(x)
+    n, d = xb.shape
+    order = jax.random.permutation(key, n)  # the arrival order of the pass
+    weights = 2.0 ** jnp.arange(stages)
+    sizes = jnp.floor(n * weights / jnp.sum(weights)).astype(jnp.int32)
+    w = jnp.zeros((d,), xb.dtype)
+    start = 0
+    for s in range(stages):
+        size = int(sizes[s]) if s < stages - 1 else n - start
+        if size < 2:
+            continue
+        sl = order[start:start + size]
+        start += size
+        half = size // 2
+        anchor, inner = sl[:half], sl[half:]
+        w_tilde = w
+        resid = xb[anchor] @ w_tilde - y[anchor]
+        g_anchor = xb[anchor].T @ resid / half
+
+        def step(w_s, i):
+            xi, yi = xb[i], y[i]
+            g = xi * (xi @ w_s - yi) - xi * (xi @ w_tilde - yi) + g_anchor
+            return w_s - learning_rate * g, None
+
+        w, _ = jax.lax.scan(step, w, inner)
+    return LinearFit(theta=w[:-1], intercept=w[-1],
+                     memory_bytes=3 * d * 4)  # w, w~, anchor gradient
 
 
 def clarkson_woodruff(key: Array, x: Array, y: Array, m: int) -> LinearFit:

@@ -28,9 +28,12 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, fleet, lsh, sketch as sketch_lib
+from repro.core import dfo, erm, fleet, losses, lsh, sketch as sketch_lib
 
 Array = jax.Array
+
+# The registered surrogate this driver adapts (core.losses registry).
+_SPEC = losses.MARGIN_CLASSIFICATION
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,10 +84,10 @@ def make_margin_loss_fn(
     engine: str = "auto",
 ):
     """Batched Thm-3 margin-loss closure: ``2^p`` times the single-sided
-    RACE estimate, on the session-hoisted weight path (``fleet.make_loss_fn``
+    RACE estimate, on the session-hoisted weight path (``erm.sketch_loss_fn``
     with ``paired=False`` — the ``(R, p, d) -> (p, d, R)`` transpose runs
     once per fit, never inside the scanned DFO step)."""
-    return fleet.make_loss_fn(sk, params, paired=False, scale=2.0 ** planes,
+    return erm.sketch_loss_fn(sk, params, paired=False, scale=2.0 ** planes,
                               engine=engine)
 
 
@@ -108,43 +111,28 @@ def fit(
     config = config or StormClassifierConfig()
     fleet.validate_select(config.restart_select)
     k_hash, k_rest = jax.random.split(key)
-    # Distinct keys for the init draw and the DFO step streams (bugfix: the
-    # pre-PR-3 driver reused one key for both, so the starting point and the
-    # step-1 sphere directions were drawn from the same PRNG state).
-    k_init, k_dfo = jax.random.split(k_rest)
     d = x.shape[-1]
-    f = max(1, config.restarts)
-
-    z = -y[:, None] * x                                  # Thm 3 premultiplication
-    z_scaled, _ = lsh.scale_to_unit_ball(z, config.norm_slack)
-    z_aug = lsh.augment_data(z_scaled)                   # (n, d + 2)
 
     params = lsh.init_srp(k_hash, config.rows, config.planes, d + 2)
-    sk = sketch_lib.sketch_dataset(
-        params, z_aug, batch=config.batch, paired=False,
-        dtype=jnp.dtype(config.count_dtype), engine=config.engine,
+    sk = erm.sketch_surrogate(
+        _SPEC, params, x, y, norm_slack=config.norm_slack,
+        batch=config.batch, dtype=config.count_dtype, engine=config.engine,
     )
 
-    loss_fn = make_margin_loss_fn(sk, params, config.planes,
-                                  engine=config.engine)
-
-    theta0 = config.init_scale * jax.random.normal(k_init, (d,))
-    member_keys, inits, sigmas, lrs = fleet.seed_fleet(
-        k_dfo, f, d, config.dfo, fleet.config_from_restarts(config),
-        theta0=theta0,
-    )
-    result = fleet.run_fleet(
-        loss_fn, inits, member_keys, config.dfo,
-        sigma=sigmas, learning_rate=lrs,
-        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
-    )
-    theta_tilde, trace, fleet_vals = fleet.select_theta(
-        loss_fn, result.theta, result.losses,
-        select=config.restart_select, basin_tol=config.restart_basin_tol,
+    # The spine owns seeding (it splits k_rest into distinct init/DFO keys —
+    # the spec's init_noise policy), the fleet loop, and the guard-free
+    # selection.
+    res = erm.fit(
+        _SPEC, sk, params, k_rest, dfo_config=config.dfo,
+        fleet_config=fleet.config_from_restarts(config),
+        restarts=config.restarts, engine=config.engine,
+        refine_steps=config.refine_steps,
+        refine_radius=config.refine_radius,
+        init_scale=config.init_scale,
     )
     return FittedClassifier(
-        theta=theta_tilde, sketch=sk, params=params, losses=trace,
-        fleet_losses=fleet_vals,
+        theta=res.theta, sketch=sk, params=params, losses=res.losses,
+        fleet_losses=res.fleet_losses,
     )
 
 
@@ -214,56 +202,30 @@ def fit_many(
         raise ValueError(f"need matching non-empty x/y stacks; got "
                          f"{s} and {len(ys_list)} tenants")
     d = xs_list[0].shape[-1]
-    f = max(1, config.restarts)
 
     params = lsh.init_srp(k_hash, config.rows, config.planes, d + 2)
-    sketches = []
-    theta0 = []
-    key_parts = []
-    for t, (xt, yt) in enumerate(zip(xs_list, ys_list)):
-        z = -yt[:, None] * xt                            # Thm 3 premultiplication
-        z_scaled, _ = lsh.scale_to_unit_ball(z, config.norm_slack)
-        z_aug = lsh.augment_data(z_scaled)               # (n, d + 2)
-        sketches.append(sketch_lib.sketch_dataset(
-            params, z_aug, batch=config.batch, paired=False,
-            dtype=jnp.dtype(config.count_dtype), engine=config.engine,
-        ))
-        # Tenant t's init/step keys follow fit()'s split discipline under
-        # the shared tenant_key convention (tenant 0 == fit verbatim).
-        k_init_t, k_dfo_t = jax.random.split(fleet.tenant_key(k_rest, t))
-        theta0.append(config.init_scale * jax.random.normal(k_init_t, (d,)))
-        key_parts.append(k_dfo_t)
+    sketches = [
+        erm.sketch_surrogate(
+            _SPEC, params, xt, yt, norm_slack=config.norm_slack,
+            batch=config.batch, dtype=config.count_dtype,
+            engine=config.engine,
+        )
+        for xt, yt in zip(xs_list, ys_list)
+    ]
     bank = sketch_lib.bank_of(sketches)
 
-    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
-    loss_fn = fleet.make_loss_fn(bank, params, paired=False,
-                                 scale=2.0 ** config.planes,
-                                 engine=config.engine,
-                                 member_map=member_map)
-    seeded = [
-        fleet.seed_fleet(key_parts[t], f, d, config.dfo,
-                         fleet.config_from_restarts(config),
-                         theta0=theta0[t])
-        for t in range(s)
-    ]
-    member_keys, inits, sigmas, lrs = (
-        jnp.concatenate([p[i] for p in seeded], axis=0) for i in range(4)
-    )
-    result = fleet.run_fleet(
-        loss_fn, inits, member_keys, config.dfo,
-        sigma=sigmas, learning_rate=lrs,
-        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
-    )
-    sel_loss = fleet.make_loss_fn(bank, params, paired=False,
-                                  scale=2.0 ** config.planes,
-                                  engine=config.engine,
-                                  member_map=jnp.arange(s, dtype=jnp.int32))
-    theta, trace, fleet_vals = fleet.select_theta_many(
-        sel_loss, result.theta.reshape(s, f, d),
-        result.losses.reshape(s, f, -1),
-        select=config.restart_select, basin_tol=config.restart_basin_tol,
+    # Tenant t's init/step keys follow fit()'s split discipline under the
+    # shared tenant_key convention inside the spine (tenant 0 == fit
+    # verbatim).
+    res = erm.fit_many(
+        _SPEC, bank, params, k_rest, dfo_config=config.dfo,
+        fleet_config=fleet.config_from_restarts(config),
+        restarts=config.restarts, engine=config.engine,
+        refine_steps=config.refine_steps,
+        refine_radius=config.refine_radius,
+        init_scale=config.init_scale,
     )
     return FittedClassifierMany(
-        theta=theta, bank=bank, params=params, losses=trace,
-        fleet_losses=fleet_vals,
+        theta=res.theta, bank=bank, params=params, losses=res.losses,
+        fleet_losses=res.fleet_losses,
     )

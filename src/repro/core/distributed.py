@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import dfo, fleet, lsh, sketch as sketch_lib
+from repro.core import dfo, erm, lsh, sketch as sketch_lib
 
 Array = jax.Array
 
@@ -141,7 +141,7 @@ def fleet_fit(
     lr = dfo._fleet_param(learning_rate, config.learning_rate, f)
 
     def local(counts, n, projections, th, ks, sg, lr_):
-        loss_fn = fleet.make_loss_fn(
+        loss_fn = erm.sketch_loss_fn(
             sketch_lib.Sketch(counts=counts, n=n),
             lsh.LSHParams(projections=projections),
             paired=True,
@@ -150,7 +150,7 @@ def fleet_fit(
         )
         # Shared optimize-then-refine loop: fleet_fit members advance exactly
         # like fit() / fit_probe() restarts (same refine-key/radius schedule).
-        res = fleet.run_fleet(
+        res = erm.run_fleet(
             loss_fn, th, ks, config, project=proj, sigma=sg,
             learning_rate=lr_, refine_steps=refine_steps,
             refine_radius=refine_radius,
@@ -252,7 +252,7 @@ def fleet_fit_banked(
         s_local = counts.shape[0]
         member_map = jnp.repeat(jnp.arange(s_local, dtype=jnp.int32),
                                 restarts_per_sketch)
-        loss_fn = fleet.make_loss_fn(
+        loss_fn = erm.sketch_loss_fn(
             sketch_lib.SketchBank(counts=counts, n=n),
             lsh.LSHParams(projections=projections),
             paired=paired,
@@ -261,7 +261,7 @@ def fleet_fit_banked(
             engine=engine,
             member_map=member_map,
         )
-        res = fleet.run_fleet(
+        res = erm.run_fleet(
             loss_fn, th, ks, config, project=proj, sigma=sg,
             learning_rate=lr_, refine_steps=refine_steps,
             refine_radius=refine_radius,

@@ -1,0 +1,414 @@
+"""The ERM spine: one generic config→sketch→fleet→select driver (DESIGN.md §13).
+
+Every sketch-trained loss in the repo rides this module. A loss is a
+registered :class:`~.losses.Surrogate` spec; :func:`fit` trains it against
+one frozen sketch and :func:`fit_many` trains S tenants against one
+:class:`~.sketch.SketchBank` with a single fused banked query stream per DFO
+step. The pre-existing drivers — ``regression.fit``, ``classification.fit``,
+``probes.fit_probe`` and their ``fit_many`` variants — are thin adapters
+over these two functions (bit-identical to their pre-spine traces, pinned in
+``tests/test_erm.py``), and new losses (``logistic``, ``kmeans``) are
+registry entries that never touch a driver.
+
+Single-owner rule (linted by ``scripts/verify.sh``): only this module and
+``core.fleet`` itself may call ``fleet.make_loss_fn`` / ``fleet.run_fleet``.
+Everything else goes through :func:`sketch_loss_fn` / :func:`run_fleet`, so
+the loss-closure and fleet-loop conventions cannot fork per driver again.
+
+PRNG discipline (shared by every adapter): tenant ``t`` keys via
+``fleet.tenant_key(key, t)`` (tenant 0 = the key verbatim). Specs with
+``init_noise`` split that key into ``(k_init, k_dfo)`` and draw
+``theta0 = init_scale * normal(k_init)``; others use it for DFO directly
+with a zero baseline init. This reproduces all three legacy drivers'
+seeding exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfo, fleet, losses, lsh, sketch as sketch_lib
+
+Array = jax.Array
+
+SpecLike = Union[str, losses.Surrogate]
+
+
+def resolve(spec: SpecLike) -> losses.Surrogate:
+    """Accept a registry name or a spec object everywhere."""
+    return losses.get_surrogate(spec) if isinstance(spec, str) else spec
+
+
+def sketch_loss_fn(
+    sk,
+    params: lsh.LSHParams,
+    paired: bool = True,
+    scale: float = 1.0,
+    l2: float = 0.0,
+    engine: str = "auto",
+    d: Optional[int] = None,
+    member_map: Optional[Array] = None,
+    transform: Optional[Callable[[Array], Array]] = None,
+) -> Callable[[Array], Array]:
+    """The batched sketch-loss closure — single public owner.
+
+    Thin passthrough to ``fleet.make_loss_fn`` (see that docstring for the
+    hoisted-weight contract); drivers and tests build loss closures HERE so
+    the greppable single-owner lint holds.
+    """
+    return fleet.make_loss_fn(sk, params, paired=paired, scale=scale, l2=l2,
+                              engine=engine, d=d, member_map=member_map,
+                              transform=transform)
+
+
+# Canonical fleet loop re-export: adapters call erm.run_fleet, never
+# fleet.run_fleet directly (single-owner lint).
+run_fleet = fleet.run_fleet
+
+
+def surrogate_loss_fn(
+    spec: SpecLike,
+    sk,
+    params: lsh.LSHParams,
+    l2: float = 0.0,
+    engine: str = "auto",
+    member_map: Optional[Array] = None,
+) -> Callable[[Array], Array]:
+    """Loss closure for a registered surrogate: spec fields -> closure knobs.
+
+    The ridge applies to the first ``dim - pad`` iterate coordinates (the
+    features; the homogeneous pad is pinned, not regularized).
+    """
+    spec = resolve(spec)
+    return sketch_loss_fn(
+        sk, params, paired=spec.paired, scale=spec.scale(params.planes),
+        l2=l2, engine=engine, d=params.dim - 2 - spec.pad,
+        member_map=member_map, transform=spec.transform,
+    )
+
+
+def sketch_surrogate(
+    spec: SpecLike,
+    params: lsh.LSHParams,
+    x: Array,
+    y: Optional[Array] = None,
+    norm_slack: float = 1.05,
+    batch: int = 512,
+    dtype=jnp.int32,
+    engine: str = "auto",
+) -> sketch_lib.Sketch:
+    """Sketch a dataset for a surrogate: encode -> unit ball -> insert.
+
+    Paired specs insert the encoded rows directly (``sketch_dataset``
+    handles the PRP pairing); single-sided specs get the asymmetric
+    augmentation here. ``params.dim`` must be ``x.dim + spec.pad + 2``.
+    """
+    spec = resolve(spec)
+    z = spec.encode(x, y)
+    z_scaled, _ = lsh.scale_to_unit_ball(z, norm_slack)
+    if not spec.paired:
+        z_scaled = lsh.augment_data(z_scaled)
+    return sketch_lib.sketch_dataset(
+        params, z_scaled, batch=batch, paired=spec.paired,
+        dtype=jnp.dtype(dtype), engine=engine,
+    )
+
+
+class ERMFit(NamedTuple):
+    """Iterate-space result of a generic fit (adapters un-standardize)."""
+
+    theta: Array          # (dim,) with dim = params.dim - 2
+    losses: Array         # DFO loss trace of the selected member
+    fleet_losses: Array   # (F,) final sketch-loss per member
+
+
+class ERMFitMany(NamedTuple):
+    """Per-tenant iterate-space results of a banked fit."""
+
+    theta: Array          # (S, dim)
+    losses: Array         # (S, steps)
+    fleet_losses: Array   # (S, F)
+
+
+def _seed_tenant(
+    spec: losses.Surrogate,
+    key: Array,
+    t: int,
+    dim: int,
+    f: int,
+    dfo_config: dfo.DFOConfig,
+    fleet_config: fleet.FleetConfig,
+    init_scale: float,
+) -> Tuple[Array, Array, Array, Array]:
+    """Seed tenant ``t``'s restart fleet under the shared PRNG discipline."""
+    kt = fleet.tenant_key(key, t)
+    theta0 = None
+    if spec.init_noise:
+        k_init, k_dfo = jax.random.split(kt)
+        theta0 = init_scale * jax.random.normal(k_init, (dim,))
+    else:
+        k_dfo = kt
+    return fleet.seed_fleet(k_dfo, f, dim, dfo_config, fleet_config,
+                            theta0=theta0)
+
+
+def _projection(spec: losses.Surrogate):
+    return (dfo.pin_last_coordinate(spec.pin_last)
+            if spec.pin_last is not None else None)
+
+
+def fit(
+    spec: SpecLike,
+    sk: sketch_lib.Sketch,
+    params: lsh.LSHParams,
+    key: Array,
+    dfo_config: dfo.DFOConfig,
+    fleet_config: Optional[fleet.FleetConfig] = None,
+    restarts: int = 1,
+    l2: float = 0.0,
+    engine: str = "auto",
+    refine_steps: Optional[int] = None,
+    refine_radius: float = 0.3,
+    init_scale: float = 0.01,
+) -> ERMFit:
+    """Train one surrogate against one frozen sketch (Algorithm 2, generic).
+
+    The whole legacy pipeline in one place: loss closure from the spec,
+    restart-fleet seeding, optimize-then-refine, fused selection with the
+    spec's guard/projection policy. ``refine_steps=None`` takes the spec's
+    default. Returns the iterate-space solution; adapters own any
+    un-standardization.
+    """
+    spec = resolve(spec)
+    f = max(1, restarts)
+    fc = fleet_config or fleet.FleetConfig()
+    fleet.validate_select(fc.select)
+    dim = params.dim - 2
+    rs = spec.refine_steps if refine_steps is None else refine_steps
+
+    loss_fn = surrogate_loss_fn(spec, sk, params, l2=l2, engine=engine)
+    proj = _projection(spec)
+    member_keys, theta0, sigmas, lrs = _seed_tenant(
+        spec, key, 0, dim, f, dfo_config, fc, init_scale
+    )
+    result = run_fleet(
+        loss_fn, theta0, member_keys, dfo_config, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=rs, refine_radius=refine_radius,
+    )
+    guard = (proj(jnp.zeros((dim,), jnp.float32))
+             if spec.zero_guard else None)
+    theta, trace, fleet_vals = fleet.select_theta(
+        loss_fn, result.theta, result.losses,
+        select=fc.select, basin_tol=fc.basin_tol,
+        guard=guard, project=proj,
+    )
+    return ERMFit(theta=theta, losses=trace, fleet_losses=fleet_vals)
+
+
+def fit_many(
+    spec: SpecLike,
+    bank: sketch_lib.SketchBank,
+    params: lsh.LSHParams,
+    key: Array,
+    dfo_config: dfo.DFOConfig,
+    fleet_config: Optional[fleet.FleetConfig] = None,
+    restarts: int = 1,
+    l2: float = 0.0,
+    engine: str = "auto",
+    refine_steps: Optional[int] = None,
+    refine_radius: float = 0.3,
+    init_scale: float = 0.01,
+) -> ERMFitMany:
+    """Train S tenants' surrogates against one SketchBank (DESIGN.md §9).
+
+    An ``S*F``-member fleet advances on one fused banked query of
+    ``S·F·(2k+1)`` points per DFO step; per-tenant selection runs all
+    ``S·(F + guard)`` candidates through one more fused call. ``S = 1`` is
+    bit-identical to :func:`fit` — same tenant-0 keys, and the 1-sketch
+    bank slices to the lone-sketch compiled program inside the loss closure.
+    """
+    spec = resolve(spec)
+    s = bank.counts.shape[0]
+    f = max(1, restarts)
+    fc = fleet_config or fleet.FleetConfig()
+    fleet.validate_select(fc.select)
+    dim = params.dim - 2
+    rs = spec.refine_steps if refine_steps is None else refine_steps
+
+    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
+    loss_fn = surrogate_loss_fn(spec, bank, params, l2=l2, engine=engine,
+                                member_map=member_map)
+    proj = _projection(spec)
+    parts = [
+        _seed_tenant(spec, key, t, dim, f, dfo_config, fc, init_scale)
+        for t in range(s)
+    ]
+    member_keys, theta0, sigmas, lrs = (
+        jnp.concatenate([p[i] for p in parts], axis=0) for i in range(4)
+    )
+    result = run_fleet(
+        loss_fn, theta0, member_keys, dfo_config, project=proj,
+        sigma=sigmas, learning_rate=lrs,
+        refine_steps=rs, refine_radius=refine_radius,
+    )
+    sel_loss = surrogate_loss_fn(spec, bank, params, l2=l2, engine=engine,
+                                 member_map=jnp.arange(s, dtype=jnp.int32))
+    guard = (proj(jnp.zeros((dim,), jnp.float32))
+             if spec.zero_guard else None)
+    theta, trace, fleet_vals = fleet.select_theta_many(
+        sel_loss, result.theta.reshape(s, f, dim),
+        result.losses.reshape(s, f, -1),
+        select=fc.select, basin_tol=fc.basin_tol,
+        guard=guard, project=proj,
+    )
+    return ERMFitMany(theta=theta, losses=trace, fleet_losses=fleet_vals)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end drivers: data -> sketch -> fit, any registered surrogate
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ERMConfig:
+    """Shared hyperparameters for the generic end-to-end drivers.
+
+    One config serves every registered surrogate — the per-loss policy
+    (pairing, padding, guards, estimate scale) lives in the spec, not here.
+    """
+
+    rows: int = 2048              # R repetitions
+    planes: int = 4               # p
+    batch: int = 512              # streaming insert batch
+    norm_slack: float = 1.05      # unit-ball scaling slack
+    count_dtype: str = "int32"
+    orthogonal: bool = False      # structured-orthogonal SRP
+    engine: str = "auto"          # insert/query path: scan | kernel | auto
+    l2: float = 0.0               # ridge on the DFO objective (paper §6)
+    init_scale: float = 0.01      # theta0 noise radius (init_noise specs)
+    refine_steps: Optional[int] = None  # None -> the spec's default
+    refine_radius: float = 0.3
+    restarts: int = 1             # F — fleet size
+    restart_select: str = "best"
+    restart_basin_tol: float = 0.05
+    restart_sigma_spread: float = 2.0
+    restart_lr_spread: float = 2.0
+    restart_init_scale: float = 0.3
+    dfo: dfo.DFOConfig = dataclasses.field(
+        default_factory=lambda: dfo.DFOConfig(
+            steps=300, num_queries=8, sigma=0.5, learning_rate=1.0,
+            decay=0.995,
+        )
+    )
+
+
+class SurrogateFit(NamedTuple):
+    """End-to-end fit of a registered surrogate (iterate space)."""
+
+    spec: losses.Surrogate
+    theta: Array                  # (dim,) = (d + spec.pad,)
+    sketch: sketch_lib.Sketch
+    params: lsh.LSHParams
+    losses: Array
+    fleet_losses: Array
+
+    def objective(self, z: Array) -> Array:
+        """Analytic oracle at the fitted iterate over pre-scaled rows."""
+        return self.spec.objective(self.theta, z, self.params.planes)
+
+
+class SurrogateFitMany(NamedTuple):
+    """End-to-end banked fit of a registered surrogate over S tenants."""
+
+    spec: losses.Surrogate
+    theta: Array                  # (S, dim)
+    bank: sketch_lib.SketchBank
+    params: lsh.LSHParams
+    losses: Array                 # (S, steps)
+    fleet_losses: Array           # (S, F)
+
+    @property
+    def tenants(self) -> int:
+        return self.theta.shape[0]
+
+
+def fit_surrogate(
+    spec: SpecLike,
+    key: Array,
+    x: Array,
+    y: Optional[Array] = None,
+    config: Optional[ERMConfig] = None,
+) -> SurrogateFit:
+    """Data -> sketch -> fit for any registered surrogate (three lines at
+    the call site: build config, call, read ``theta``).
+
+    PRNG: ``key`` splits into the hash draw and the fit key, exactly like
+    the legacy drivers.
+    """
+    spec = resolve(spec)
+    config = config or ERMConfig()
+    fleet.validate_select(config.restart_select)
+    k_hash, k_fit = jax.random.split(key)
+    d = x.shape[-1]
+    params = lsh.init_srp(k_hash, config.rows, config.planes,
+                          d + spec.pad + 2, orthogonal=config.orthogonal)
+    sk = sketch_surrogate(spec, params, x, y, norm_slack=config.norm_slack,
+                          batch=config.batch, dtype=config.count_dtype,
+                          engine=config.engine)
+    res = fit(spec, sk, params, k_fit, dfo_config=config.dfo,
+              fleet_config=fleet.config_from_restarts(config),
+              restarts=config.restarts, l2=config.l2, engine=config.engine,
+              refine_steps=config.refine_steps,
+              refine_radius=config.refine_radius,
+              init_scale=config.init_scale)
+    return SurrogateFit(spec=spec, theta=res.theta, sketch=sk, params=params,
+                        losses=res.losses, fleet_losses=res.fleet_losses)
+
+
+def fit_surrogate_many(
+    spec: SpecLike,
+    key: Array,
+    x,
+    y=None,
+    config: Optional[ERMConfig] = None,
+) -> SurrogateFitMany:
+    """Banked end-to-end driver: S tenants' data under ONE hash family.
+
+    ``x`` is a sequence of ``(n_s, d)`` arrays (or a stacked ``(S, n, d)``);
+    ``y`` matches, or is ``None`` for unsupervised specs. ``S = 1`` is
+    bit-identical to :func:`fit_surrogate`.
+    """
+    spec = resolve(spec)
+    config = config or ERMConfig()
+    fleet.validate_select(config.restart_select)
+    k_hash, k_fit = jax.random.split(key)
+    xs_list = list(x)
+    s = len(xs_list)
+    ys_list = [None] * s if y is None else list(y)
+    if s == 0 or len(ys_list) != s:
+        raise ValueError(f"need matching non-empty x/y stacks; got "
+                         f"{s} and {len(ys_list)} tenants")
+    d = xs_list[0].shape[-1]
+    params = lsh.init_srp(k_hash, config.rows, config.planes,
+                          d + spec.pad + 2, orthogonal=config.orthogonal)
+    sketches = [
+        sketch_surrogate(spec, params, xt, yt, norm_slack=config.norm_slack,
+                         batch=config.batch, dtype=config.count_dtype,
+                         engine=config.engine)
+        for xt, yt in zip(xs_list, ys_list)
+    ]
+    bank = sketch_lib.bank_of(sketches)
+    res = fit_many(spec, bank, params, k_fit, dfo_config=config.dfo,
+                   fleet_config=fleet.config_from_restarts(config),
+                   restarts=config.restarts, l2=config.l2,
+                   engine=config.engine, refine_steps=config.refine_steps,
+                   refine_radius=config.refine_radius,
+                   init_scale=config.init_scale)
+    return SurrogateFitMany(spec=spec, theta=res.theta, bank=bank,
+                            params=params, losses=res.losses,
+                            fleet_losses=res.fleet_losses)

@@ -101,6 +101,7 @@ def make_loss_fn(
     engine: str = "auto",
     d: Optional[int] = None,
     member_map: Optional[Array] = None,
+    transform: Optional[Callable[[Array], Array]] = None,
 ) -> Callable[[Array], Array]:
     """Batched sketch-loss closure with session-hoisted kernel weights.
 
@@ -125,6 +126,10 @@ def make_loss_fn(
       engine: ``scan | kernel | auto`` query path (DESIGN.md §3.4).
       d: feature dimension for the ridge term; defaults to ``params.dim - 3``
         (params hash the augmented ``[x, y]`` space of ``d + 1 + 2`` dims).
+      transform: optional elementwise monotone map on the scaled estimate
+        (a registered surrogate's ``transform``, e.g. ``log1p`` for the
+        exp-concave logistic objective); applied before the ridge so the
+        regularizer stays additive. ``None`` leaves the estimate untouched.
       member_map: required with a ``SketchBank`` — ``(F,)`` int32 mapping
         fleet member ``f`` to its sketch index. The closure then requires
         member-major batches whose size is a multiple of ``F`` (every fused
@@ -182,6 +187,8 @@ def make_loss_fn(
         est = estimate(thetas)
         if scale != 1.0:
             est = scale * est
+        if transform is not None:
+            est = transform(est)
         if l2 > 0.0:
             est = est + l2 * jnp.sum(thetas[..., :d] ** 2, axis=-1)
         return est

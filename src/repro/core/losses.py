@@ -1,12 +1,24 @@
-"""Analytic surrogate losses (the functions the sketch estimates).
+"""Analytic surrogate losses and the declarative surrogate registry.
 
-These are the closed-form expectations of the sketch queries — used as
-oracles in tests, for the p-sweep benchmark (paper Fig. 3), and for the
-"exact surrogate" ablation where we optimize the analytic loss instead of the
-sketch estimate.
+Two layers live here:
+
+* The closed-form expectations of the sketch queries (``prp_surrogate``,
+  ``classification_surrogate``, …) — used as oracles in tests, for the
+  p-sweep benchmark (paper Fig. 3), and for the "exact surrogate" ablation
+  where we optimize the analytic loss instead of the sketch estimate.
+
+* The :class:`Surrogate` spec + registry (DESIGN.md §13): everything the
+  generic ERM driver (``core.erm``) needs to train a loss from counters is a
+  declarative record — paired vs single-sided sketch, homogeneous padding,
+  iterate projection, selection guard, init policy, estimate scale/transform,
+  and the analytic oracle. Registering a spec here is the WHOLE cost of a
+  new loss; the fleet/bank/gateway drivers never change.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,3 +83,171 @@ def surrogate_slope_at(inner: float, planes: int) -> Array:
     """|dg/d<a,b>| at a given inner product — reproduces paper Fig. 3(b)."""
     g = lambda t: prp_surrogate(t, planes)
     return jnp.abs(jax.grad(g)(jnp.asarray(inner)))
+
+
+# ---------------------------------------------------------------------------
+# Surrogate registry (DESIGN.md §13): declarative specs for the ERM spine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Surrogate:
+    """Everything ``core.erm`` needs to train one loss from counters.
+
+    The spec is declarative: drivers read it, they never branch on the name.
+    A new loss = one :func:`register` call; the config→sketch→fleet→select
+    pipeline in ``erm.fit`` / ``erm.fit_many`` is shared verbatim.
+
+    Attributes:
+      name: registry key.
+      paired: PRP paired sketch (insert ``[z]``, query both signs — the
+        ``2n`` estimator denominator) vs single-sided (insert the
+        asymmetrically augmented ``z`` — classification-style margins).
+      pad: homogeneous data coordinates beyond the features (regression
+        appends the target column: ``pad=1``; margin losses fold the label
+        into the data row: ``pad=0``). The iterate always has
+        ``params.dim - 2`` coordinates; the ridge applies to the first
+        ``dim - pad`` of them.
+      pin_last: if set, the iterate's last coordinate is projected to this
+        constant every step (regression pins the homogeneous ``-1``);
+        ``None`` leaves the iterate unconstrained.
+      zero_guard: ride the projected zero candidate in the final selection
+        (keep the trivial model if frozen-hash noise beat every member).
+        Only meaningful for losses where ``theta = 0`` is a model, not for
+        scale-free margins.
+      init_noise: draw ``theta0 = init_scale * normal`` from a split of the
+        fit key (breaks sign symmetry for margin losses); ``False`` starts
+        member 0 at zeros and uses the fit key for DFO directly.
+      refine_steps: default quadratic-polish passes when the caller does not
+        override.
+      scale: ``planes -> float`` multiplier on the raw RACE estimate
+        (Thm-3's ``2**p``; ``-1`` flips an estimate into a density
+        *maximization*).
+      transform: optional monotone map applied to the scaled estimate
+        (``log1p`` turns the margin estimate into the exp-concave logistic
+        objective). Monotone, so the argmin — and thus the fit — is shaped
+        by the surrogate geometry while tests can still compare objectives.
+      encode: ``(x, y) -> z`` raw data rows for the sketch (before
+        unit-ball scaling / augmentation, which ``erm.sketch_surrogate``
+        owns). ``y`` may be ``None`` for unsupervised losses.
+    """
+
+    name: str
+    paired: bool
+    pad: int
+    pin_last: Optional[float]
+    zero_guard: bool
+    init_noise: bool
+    refine_steps: int
+    scale: Callable[[int], float]
+    transform: Optional[Callable[[Array], Array]]
+    encode: Callable[[Array, Optional[Array]], Array]
+
+    def objective(self, theta: Array, z: Array, planes: int) -> Array:
+        """Analytic sketch-expectation at iterate ``theta``.
+
+        ``z`` are the pre-scaled (unit-ball) encoded rows, NOT augmented —
+        the asymmetric augmentation cancels in the inner product, so the
+        oracle for both sketch flavors is a function of ``<theta_hat, z>``.
+        This is what the sketch estimate converges to as R grows; the
+        cross-registry test suite pins every entry to it.
+        """
+        th = theta / jnp.maximum(jnp.linalg.norm(theta), 1e-12)
+        inner = z @ th
+        per = (prp_surrogate(inner, planes) if self.paired
+               else _f(inner) ** planes)
+        est = jnp.mean(per)
+        sc = self.scale(planes)
+        if sc != 1.0:
+            est = sc * est
+        if self.transform is not None:
+            est = self.transform(est)
+        return est
+
+
+SURROGATES: Dict[str, Surrogate] = {}
+
+
+def register(spec: Surrogate) -> Surrogate:
+    """Add a spec to the registry (idempotent on identical re-registration)."""
+    prior = SURROGATES.get(spec.name)
+    if prior is not None and prior != spec:
+        raise ValueError(f"surrogate {spec.name!r} already registered "
+                         "with a different spec")
+    SURROGATES[spec.name] = spec
+    return spec
+
+
+def get_surrogate(name: str) -> Surrogate:
+    if name not in SURROGATES:
+        raise ValueError(f"unknown surrogate {name!r}; registered: "
+                         f"{sorted(SURROGATES)}")
+    return SURROGATES[name]
+
+
+def _unit_scale(planes: int) -> float:
+    del planes
+    return 1.0
+
+
+def _pow2_scale(planes: int) -> float:
+    return 2.0 ** planes
+
+
+def _neg_scale(planes: int) -> float:
+    del planes
+    return -1.0
+
+
+def _encode_regression(x: Array, y: Optional[Array]) -> Array:
+    """PRP regression rows: ``[x, y]`` (homogeneous target column)."""
+    return jnp.concatenate([x, y[:, None]], axis=-1)
+
+
+def _encode_margin(x: Array, y: Optional[Array]) -> Array:
+    """Thm-3 premultiplication: ``-y x`` folds the label into the row."""
+    return -y[:, None] * x
+
+
+def _encode_points(x: Array, y: Optional[Array]) -> Array:
+    """Unsupervised losses sketch the points themselves; ``y`` is ignored."""
+    del y
+    return x
+
+
+#: Paper §4.1 / Theorem 2 — least squares through the paired PRP surrogate.
+PRP_REGRESSION = register(Surrogate(
+    name="prp_regression", paired=True, pad=1, pin_last=-1.0,
+    zero_guard=True, init_noise=False, refine_steps=1,
+    scale=_unit_scale, transform=None, encode=_encode_regression,
+))
+
+#: Paper §4.2 / Theorem 3 — max-margin classification, single-sided sketch.
+MARGIN_CLASSIFICATION = register(Surrogate(
+    name="margin_classification", paired=False, pad=0, pin_last=None,
+    zero_guard=False, init_noise=True, refine_steps=0,
+    scale=_pow2_scale, transform=None, encode=_encode_margin,
+))
+
+#: Exp-concave logistic-style objective (Agarwal & Gonen): ``log1p`` of the
+#: scaled margin estimate. At zero margin the Thm-3 estimate is 1, so the
+#: objective passes through ``log 2`` exactly like the logistic loss; the
+#: log transform is monotone (same argmin as the margin surrogate) but
+#: exp-concave in the estimate, which is what the sketched-ERM analysis of
+#: exp-concave losses needs.
+LOGISTIC = register(Surrogate(
+    name="logistic", paired=False, pad=0, pin_last=None,
+    zero_guard=False, init_noise=True, refine_steps=0,
+    scale=_pow2_scale, transform=jnp.log1p, encode=_encode_margin,
+))
+
+#: Compressive k-means / moment objective (Gribonval et al.): the RACE
+#: estimate of the sketched *point cloud* is a KDE under the angular kernel
+#: ``f(<theta, z>)^p``, so MINIMIZING its negation drives ``theta`` to a
+#: density mode — one spherical k-means center recovered from counters
+#: alone. Unsupervised: ``encode`` ignores ``y``.
+KMEANS = register(Surrogate(
+    name="kmeans", paired=False, pad=0, pin_last=None,
+    zero_guard=False, init_noise=True, refine_steps=0,
+    scale=_neg_scale, transform=None, encode=_encode_points,
+))

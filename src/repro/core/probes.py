@@ -27,18 +27,25 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, fleet, lsh, sketch as sketch_lib
+from repro.core import dfo, erm, fleet, losses, lsh, sketch as sketch_lib
 from repro.models import model
 from repro.models.config import ModelConfig
 
 Array = jax.Array
 
+# The registered surrogate the probe head trains (PRP regression at
+# d_model scale — core.losses registry).
+_SPEC = losses.PRP_REGRESSION
+
 
 @dataclasses.dataclass(frozen=True)
 class ProbeConfig:
+    """Sketch-build knobs. Pooling is NOT config: ``pool_hidden`` /
+    ``extract_features`` take it explicitly (the old ``pool`` field was
+    never read — deleted; the config surface is pinned in tests)."""
+
     rows: int = 2048
     planes: int = 4
-    pool: str = "mean"            # mean | last
     batch: int = 256
     norm_slack: float = 1.05      # unit-ball scaling slack (quantile-based)
     engine: str = "auto"          # insert path: scan | kernel | auto
@@ -232,22 +239,21 @@ def fit_probe(
     small probe dims, measurable at d_model scale).
     """
     cfg_d = dfo_config or _PROBE_DFO
-    f = max(1, restarts)
     fc = fleet_config or fleet.FleetConfig()
     fleet.validate_select(fc.select)
 
-    loss_fn = fleet.make_loss_fn(state.sketch, state.params, paired=True,
-                                 l2=l2, engine=engine, d=d_model)
-    proj = dfo.pin_last_coordinate(-1.0)
-    member_keys, theta0, sigmas, lrs = fleet.seed_fleet(
-        key, f, d_model + 1, cfg_d, fc
-    )
-    result = fleet.run_fleet(
-        loss_fn, theta0, member_keys, cfg_d, project=proj,
-        sigma=sigmas, learning_rate=lrs,
+    # The spine owns the loss closure, fleet loop, and guarded selection
+    # (the probe key seeds DFO directly — the spec's init_noise=False path).
+    res = erm.fit(
+        _SPEC, state.sketch, state.params, key, dfo_config=cfg_d,
+        fleet_config=fc, restarts=restarts, l2=l2, engine=engine,
         refine_steps=refine_steps, refine_radius=refine_radius,
     )
-    return _finish_probe(state, d_model, loss_fn, result, fc, proj)
+    theta_std = res.theta[:d_model]
+    theta = state.y_scale * theta_std / state.x_scale
+    intercept = state.y_mean - jnp.dot(state.x_mean, theta)
+    return FittedProbe(theta=theta, intercept=intercept, losses=res.losses,
+                       fleet_losses=res.fleet_losses)
 
 
 def fit_probe_sharded(
@@ -288,8 +294,8 @@ def fit_probe_sharded(
         refine_steps=refine_steps, refine_radius=refine_radius,
         l2=l2, engine=engine,
     )
-    loss_fn = fleet.make_loss_fn(state.sketch, state.params, paired=True,
-                                 l2=l2, engine=engine, d=d_model)
+    loss_fn = erm.surrogate_loss_fn(_SPEC, state.sketch, state.params,
+                                    l2=l2, engine=engine)
     proj = dfo.pin_last_coordinate(-1.0)
     return _finish_probe(state, d_model, loss_fn, result, fc, proj)
 
@@ -371,34 +377,16 @@ def fit_probe_many(
         )
     s = len(states)
     cfg_d = dfo_config or _PROBE_DFO
-    f = max(1, restarts)
     fc = fleet_config or fleet.FleetConfig()
     fleet.validate_select(fc.select)
 
     bank = sketch_lib.bank_of([st.sketch for st in states])
-    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
-    loss_fn = fleet.make_loss_fn(bank, base.params, paired=True, l2=l2,
-                                 engine=engine, d=d_model,
-                                 member_map=member_map)
-    proj = dfo.pin_last_coordinate(-1.0)
-    member_keys, theta0, sigmas, lrs = fleet.seed_fleet_many(
-        key, s, f, d_model + 1, cfg_d, fc
-    )
-    result = fleet.run_fleet(
-        loss_fn, theta0, member_keys, cfg_d, project=proj,
-        sigma=sigmas, learning_rate=lrs,
+    res = erm.fit_many(
+        _SPEC, bank, base.params, key, dfo_config=cfg_d,
+        fleet_config=fc, restarts=restarts, l2=l2, engine=engine,
         refine_steps=refine_steps, refine_radius=refine_radius,
     )
-    sel_loss = fleet.make_loss_fn(bank, base.params, paired=True, l2=l2,
-                                  engine=engine, d=d_model,
-                                  member_map=jnp.arange(s, dtype=jnp.int32))
-    theta_tilde, trace, fleet_vals = fleet.select_theta_many(
-        sel_loss, result.theta.reshape(s, f, d_model + 1),
-        result.losses.reshape(s, f, -1),
-        select=fc.select, basin_tol=fc.basin_tol,
-        guard=proj(jnp.zeros((d_model + 1,), jnp.float32)), project=proj,
-    )
-    theta_std = theta_tilde[:, :d_model]
+    theta_std = res.theta[:, :d_model]
     y_scale = jnp.stack([st.y_scale for st in states])
     x_scale = jnp.stack([st.x_scale for st in states])
     x_mean = jnp.stack([st.x_mean for st in states])
@@ -409,5 +397,5 @@ def fit_probe_many(
     intercept = jnp.stack(
         [y_mean[t] - jnp.dot(x_mean[t], theta[t]) for t in range(s)]
     )
-    return FittedProbeMany(theta=theta, intercept=intercept, losses=trace,
-                           fleet_losses=fleet_vals)
+    return FittedProbeMany(theta=theta, intercept=intercept,
+                           losses=res.losses, fleet_losses=res.fleet_losses)

@@ -22,9 +22,12 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfo, fleet, lsh, sketch as sketch_lib
+from repro.core import dfo, erm, fleet, losses, lsh, sketch as sketch_lib
 
 Array = jax.Array
+
+# The registered surrogate this driver adapts (core.losses registry).
+_SPEC = losses.PRP_REGRESSION
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +99,16 @@ def make_loss_fn(
     engine: str = "auto",
     d: Optional[int] = None,
 ) -> Callable[[Array], Array]:
-    """Regression's PRP sketch-loss closure — ``fleet.make_loss_fn`` with
-    ``paired=True`` (see that docstring for the hoisted-weight contract)."""
-    return fleet.make_loss_fn(sk, params, paired=True, l2=l2, engine=engine,
+    """Regression's PRP sketch-loss closure — ``erm.sketch_loss_fn`` with
+    ``paired=True`` (see ``fleet.make_loss_fn`` for the hoisted-weight
+    contract)."""
+    return erm.sketch_loss_fn(sk, params, paired=True, l2=l2, engine=engine,
                               d=d)
 
 
-# Canonical home of the shared fleet loop: repro.core.fleet (DESIGN.md §8.4).
-run_fleet = fleet.run_fleet
+# Canonical home of the shared fleet loop: repro.core.fleet via the erm
+# spine (DESIGN.md §13 single-owner rule).
+run_fleet = erm.run_fleet
 
 
 def seed_fleet(
@@ -143,45 +148,31 @@ def fit(
     fleet.validate_select(config.restart_select)
     k_hash, k_dfo = jax.random.split(key)
     d = x.shape[-1]
-    f = max(1, config.restarts)
 
     xs_, ys_, xm, xsc, ym, ysc = _standardize(x, y, config.standardize)
-    z = jnp.concatenate([xs_, ys_[:, None]], axis=-1)
 
     if prebuilt is None:
-        z_scaled, _ = scale_to_unit_ball(z, config.norm_slack)
         params = lsh.init_srp(
             k_hash, config.rows, config.planes, d + 3, orthogonal=config.orthogonal
         )
-        sk = sketch_lib.sketch_dataset(
-            params,
-            z_scaled,
-            batch=config.batch,
-            paired=True,
-            dtype=jnp.dtype(config.count_dtype),
+        sk = erm.sketch_surrogate(
+            _SPEC, params, xs_, ys_, norm_slack=config.norm_slack,
+            batch=config.batch, dtype=config.count_dtype,
             engine=config.engine,
         )
     else:
         sk, params, _ = prebuilt
 
-    loss_fn = make_loss_fn(sk, params, l2=config.l2, engine=config.engine, d=d)
-    proj = dfo.pin_last_coordinate(-1.0)
-
-    member_keys, theta0, sigmas, lrs = seed_fleet(k_dfo, f, d, config)
-    result = run_fleet(
-        loss_fn, theta0, member_keys, config.dfo, project=proj,
-        sigma=sigmas, learning_rate=lrs,
-        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
+    # The spine owns the whole fleet/select pipeline (zero-guard and the
+    # pinned homogeneous coordinate come from the spec).
+    res = erm.fit(
+        _SPEC, sk, params, k_dfo, dfo_config=config.dfo,
+        fleet_config=fleet.config_from_restarts(config),
+        restarts=config.restarts, l2=config.l2, engine=config.engine,
+        refine_steps=config.refine_steps,
+        refine_radius=config.refine_radius,
     )
-    # Selection: all fleet members + the zero (predict-the-mean) guard go
-    # through ONE final query. The guard keeps theta=0 if the frozen-hash
-    # noise drove every member to a worse-than-trivial model.
-    theta_tilde, trace, fleet_vals = fleet.select_theta(
-        loss_fn, result.theta, result.losses,
-        select=config.restart_select, basin_tol=config.restart_basin_tol,
-        guard=proj(jnp.zeros((d + 1,), jnp.float32)), project=proj,
-    )
-    theta_std = theta_tilde[:d]
+    theta_std = res.theta[:d]
 
     # Un-standardize: y' = x' @ th  with x' = (x - xm)/xs, y' = (y - ym)/ys.
     theta = ysc * theta_std / xsc
@@ -192,12 +183,12 @@ def fit(
         theta_std=theta_std,
         sketch=sk,
         params=params,
-        losses=trace,
+        losses=res.losses,
         x_mean=xm,
         x_scale=xsc,
         y_mean=ym,
         y_scale=ysc,
-        fleet_losses=fleet_vals,
+        fleet_losses=res.fleet_losses,
     )
 
 
@@ -291,7 +282,6 @@ def fit_many(
         raise ValueError(f"need matching non-empty x/y stacks; got "
                          f"{s} and {len(ys_list)} tenants")
     d = xs_list[0].shape[-1]
-    f = max(1, config.restarts)
 
     # Per-tenant preprocessing runs the exact single-fit pipeline (host loop
     # over tenants — bit-identical per tenant to fit()), then the sketches
@@ -302,39 +292,22 @@ def fit_many(
     sketches, moments = [], []
     for xt, yt in zip(xs_list, ys_list):
         xs_, ys_, xm, xsc, ym, ysc = _standardize(xt, yt, config.standardize)
-        z = jnp.concatenate([xs_, ys_[:, None]], axis=-1)
-        z_scaled, _ = scale_to_unit_ball(z, config.norm_slack)
-        sketches.append(sketch_lib.sketch_dataset(
-            params, z_scaled, batch=config.batch, paired=True,
-            dtype=jnp.dtype(config.count_dtype), engine=config.engine,
+        sketches.append(erm.sketch_surrogate(
+            _SPEC, params, xs_, ys_, norm_slack=config.norm_slack,
+            batch=config.batch, dtype=config.count_dtype,
+            engine=config.engine,
         ))
         moments.append((xm, xsc, ym, ysc))
     bank = sketch_lib.bank_of(sketches)
 
-    member_map = jnp.repeat(jnp.arange(s, dtype=jnp.int32), f)
-    loss_fn = fleet.make_loss_fn(bank, params, paired=True, l2=config.l2,
-                                 engine=config.engine, d=d,
-                                 member_map=member_map)
-    proj = dfo.pin_last_coordinate(-1.0)
-
-    member_keys, theta0, sigmas, lrs = fleet.seed_fleet_many(
-        k_dfo, s, f, d + 1, config.dfo, fleet.config_from_restarts(config)
+    res = erm.fit_many(
+        _SPEC, bank, params, k_dfo, dfo_config=config.dfo,
+        fleet_config=fleet.config_from_restarts(config),
+        restarts=config.restarts, l2=config.l2, engine=config.engine,
+        refine_steps=config.refine_steps,
+        refine_radius=config.refine_radius,
     )
-    result = fleet.run_fleet(
-        loss_fn, theta0, member_keys, config.dfo, project=proj,
-        sigma=sigmas, learning_rate=lrs,
-        refine_steps=config.refine_steps, refine_radius=config.refine_radius,
-    )
-    sel_loss = fleet.make_loss_fn(bank, params, paired=True, l2=config.l2,
-                                  engine=config.engine, d=d,
-                                  member_map=jnp.arange(s, dtype=jnp.int32))
-    theta_tilde, trace, fleet_vals = fleet.select_theta_many(
-        sel_loss, result.theta.reshape(s, f, d + 1),
-        result.losses.reshape(s, f, -1),
-        select=config.restart_select, basin_tol=config.restart_basin_tol,
-        guard=proj(jnp.zeros((d + 1,), jnp.float32)), project=proj,
-    )
-    theta_std = theta_tilde[:, :d]
+    theta_std = res.theta[:, :d]
 
     xm = jnp.stack([m[0] for m in moments])
     xsc = jnp.stack([m[1] for m in moments])
@@ -348,7 +321,7 @@ def fit_many(
     )
     return FittedRegressorMany(
         theta=theta, intercept=intercept, theta_std=theta_std,
-        bank=bank, params=params, losses=trace,
+        bank=bank, params=params, losses=res.losses,
         x_mean=xm, x_scale=xsc, y_mean=ym, y_scale=ysc,
-        fleet_losses=fleet_vals,
+        fleet_losses=res.fleet_losses,
     )

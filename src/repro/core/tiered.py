@@ -35,7 +35,15 @@ it stayed resident (asserted in tests/test_tiered.py).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    NamedTuple,
+    Optional,
+    Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +57,32 @@ from repro.core.sketch import (
 )
 
 Array = jax.Array
+
+
+class TenantStats(NamedTuple):
+    """Per-resident activity record handed to an eviction ``score_fn``.
+
+    ``last_touch`` is the newest tick that packed this tenant's traffic (or
+    promoted it); ``touches`` counts how many times it was touched over its
+    current residency. Both reset when the slot changes hands.
+    """
+
+    tenant: int
+    slot: int
+    last_touch: int
+    touches: int
+
+
+def lru_score(stats: TenantStats) -> int:
+    """Default eviction priority: least-recently-touched goes first."""
+    return stats.last_touch
+
+
+def frequency_score(stats: TenantStats) -> Tuple[int, int]:
+    """Frequency-aware priority: evict the least-TOUCHED resident, breaking
+    frequency ties by recency — a one-shot burst tenant loses its slot to a
+    steadily-chatty one even when the burst was more recent."""
+    return (stats.touches, stats.last_touch)
 
 
 def _swap_impl(counts: Array, n: Array, slot: Array,
@@ -80,6 +114,11 @@ class TieredBank:
       rows / buckets: sketch shape ``(R, B)``.
       dtype: resident counter dtype — int16/int8 for the S-folded footprint
         (the cold store mirrors it, so spill bytes shrink too).
+      score_fn: pluggable eviction priority ``TenantStats -> comparable``;
+        the UNPROTECTED resident with the LOWEST score is evicted (ties go
+        to the lowest slot). ``None`` means :func:`lru_score` — the
+        pre-hook LRU-by-tick policy, bit-for-bit. :func:`frequency_score`
+        is the shipped frequency-aware example.
 
     Initial residency is the identity prefix: tenants ``0..H-1`` occupy
     slots ``0..H-1``; the rest start cold (all-zero tables, materialized
@@ -87,7 +126,8 @@ class TieredBank:
     """
 
     def __init__(self, num_tenants: int, hot_capacity: int, rows: int,
-                 buckets: int, dtype=jnp.int16):
+                 buckets: int, dtype=jnp.int16,
+                 score_fn: Optional[Callable[[TenantStats], object]] = None):
         if hot_capacity < 1:
             raise ValueError(f"hot_capacity must be >= 1, got {hot_capacity}")
         if num_tenants < 1:
@@ -102,9 +142,12 @@ class TieredBank:
             range(self.hot_capacity))
         self.slot_of: Dict[int, int] = {
             t: s for s, t in enumerate(self.slot_tenant)}
-        # LRU clock: slot -> last tick that touched it (promotion or packed
-        # traffic). Fresh identity residents all start at tick 0.
+        # Activity state per slot: last tick that touched it (promotion or
+        # packed traffic) and a residency-scoped touch counter. Fresh
+        # identity residents all start untouched at tick 0.
         self._last_touch: List[int] = [0] * self.hot_capacity
+        self._touches: List[int] = [0] * self.hot_capacity
+        self.score_fn: Callable[[TenantStats], object] = score_fn or lru_score
         # Cold tier: tenant -> (counts np[dtype], n np.int32). Absent means
         # all-zero (never demoted with content).
         self._cold: Dict[int, Tuple[np.ndarray, np.int32]] = {}
@@ -152,26 +195,46 @@ class TieredBank:
         return [t for t in self.slot_tenant if t is not None]
 
     def touch(self, tenant: int, tick: int) -> None:
-        """Record packed traffic for LRU (resident tenants only)."""
+        """Record packed traffic for the eviction policy (residents only)."""
         slot = self.slot_of.get(tenant)
         if slot is not None:
             self._last_touch[slot] = max(self._last_touch[slot], tick)
+            self._touches[slot] += 1
 
-    def lru_victim(self, protect: Iterable[int] = ()) -> Optional[int]:
-        """The tenant to evict next: least-recently-touched occupied slot.
+    def tenant_stats(self, tenant: int) -> Optional[TenantStats]:
+        """The activity record a ``score_fn`` would see (None if cold)."""
+        slot = self.slot_of.get(tenant)
+        if slot is None:
+            return None
+        return TenantStats(tenant=tenant, slot=slot,
+                           last_touch=self._last_touch[slot],
+                           touches=self._touches[slot])
+
+    def victim(self, protect: Iterable[int] = ()) -> Optional[int]:
+        """The tenant to evict next: lowest ``score_fn`` priority.
 
         ``protect`` tenants (e.g. those with traffic packed into the
-        in-flight tick) are never chosen. Returns ``None`` if every
-        occupied slot is protected.
+        in-flight tick) are never chosen; score ties go to the lowest slot
+        (the strict-< scan order). Returns ``None`` if every occupied slot
+        is protected.
         """
         protected = set(protect)
-        best = None
+        best_slot = None
+        best_score = None
         for slot, tenant in enumerate(self.slot_tenant):
             if tenant is None or tenant in protected:
                 continue
-            if best is None or self._last_touch[slot] < self._last_touch[best]:
-                best = slot
-        return None if best is None else self.slot_tenant[best]
+            score = self.score_fn(TenantStats(
+                tenant=tenant, slot=slot,
+                last_touch=self._last_touch[slot],
+                touches=self._touches[slot]))
+            if best_slot is None or score < best_score:
+                best_slot, best_score = slot, score
+        return None if best_slot is None else self.slot_tenant[best_slot]
+
+    def lru_victim(self, protect: Iterable[int] = ()) -> Optional[int]:
+        """Legacy name for :meth:`victim` (policy-aware since the hook)."""
+        return self.victim(protect)
 
     def _free_slot(self) -> Optional[int]:
         for slot, tenant in enumerate(self.slot_tenant):
@@ -209,7 +272,7 @@ class TieredBank:
         slot = self._free_slot()
         victim = None
         if slot is None:
-            victim = self.lru_victim(protect)
+            victim = self.victim(protect)
             if victim is None:
                 raise RuntimeError(
                     "promote: all resident slots are protected this tick")
@@ -228,6 +291,7 @@ class TieredBank:
         self.slot_of[tenant] = slot
         self.slot_tenant[slot] = tenant
         self._last_touch[slot] = tick
+        self._touches[slot] = 1  # promotion itself is the first touch
         self._cold_rollup_cache = None
         return counts, n, victim
 
@@ -247,6 +311,7 @@ class TieredBank:
         self.swap_count += 1
         del self.slot_of[tenant]
         self.slot_tenant[slot] = None
+        self._touches[slot] = 0
         self._pending[tenant] = (out_counts, out_n)
         self._cold_rollup_cache = None
         return counts, n

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import lsh
 from repro.serve.storm_gateway import (
-    IngestRequest, QueryRequest, StormGateway,
+    FitRequest, IngestRequest, QueryRequest, StormGateway,
 )
 
 
@@ -66,6 +66,17 @@ def synth_traffic(
     return reqs
 
 
+def _maybe_fit(gw: StormGateway, args: argparse.Namespace,
+               rids: Iterator[int], round_idx: int) -> None:
+    """Submit a cohort FitRequest every ``--fit-every`` traffic rounds."""
+    if args.fit_every <= 0 or (round_idx + 1) % args.fit_every:
+        return
+    cohort = list(range(min(args.fit_cohort, args.tenants)))
+    gw.submit(FitRequest(rid=next(rids), tenants=cohort,
+                         surrogate=args.fit_surrogate, seed=args.seed,
+                         steps=args.fit_steps))
+
+
 def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
     rng = np.random.default_rng(args.seed)
     rids = itertools.count()
@@ -78,9 +89,10 @@ def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
         from collections import deque
 
         inflight = deque()
-        for _ in range(args.ticks):
+        for i in range(args.ticks):
             gw.submit_many(synth_traffic(rng, rids, args.tenants, args.dim,
                                          args.ingest_rate, args.query_rate))
+            _maybe_fit(gw, args, rids, i)
             inflight.append(gw.tick_start())
             if len(inflight) >= 2:
                 completed += len(gw.tick_finish(inflight.popleft()).results)
@@ -88,9 +100,10 @@ def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
             completed += len(gw.tick_finish(inflight.popleft()).results)
         completed += len(gw.run_until_idle(pipelined=True))
     else:
-        for _ in range(args.ticks):
+        for i in range(args.ticks):
             gw.submit_many(synth_traffic(rng, rids, args.tenants, args.dim,
                                          args.ingest_rate, args.query_rate))
+            _maybe_fit(gw, args, rids, i)
             completed += len(gw.tick().results)
         completed += len(gw.run_until_idle())
     dt = time.perf_counter() - t0
@@ -103,6 +116,10 @@ def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
           f"({gw.rows_ingested / dt:.0f} rows/s)")
     print(f"tick programs traced {gw.trace_count}x total "
           f"(jit-stable padded shapes)")
+    if args.fit_every > 0:
+        print(f"cohort fits: {gw.fits_run} x {args.fit_surrogate} over "
+              f"{min(args.fit_cohort, args.tenants)} tenants "
+              f"({args.fit_steps} DFO steps each, drained between ticks)")
     if hasattr(gw, "tiers"):
         tier = gw.queue_stats()["tier"]
         print(f"tiered bank: T={gw.tenants} hot={tier['hot_capacity']} "
@@ -153,6 +170,16 @@ def main() -> None:
     ap.add_argument("--query-rate", type=int, default=16,
                     help="mean new query points per tenant per tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fit-every", type=int, default=0,
+                    help="submit a cohort FitRequest every N traffic rounds "
+                         "(0 = never; trains from the served counters "
+                         "between ticks)")
+    ap.add_argument("--fit-cohort", type=int, default=4,
+                    help="cohort size for --fit-every (tenants 0..N-1)")
+    ap.add_argument("--fit-surrogate", default="prp_regression",
+                    help="registered surrogate name for --fit-every")
+    ap.add_argument("--fit-steps", type=int, default=50,
+                    help="DFO steps per serving-side fit")
     ap.add_argument("--pipelined", action="store_true",
                     help="double-buffered tick loop (overlap host packing "
                          "with device execution)")

@@ -12,6 +12,11 @@ request classes over fixed engine ticks:
 * **query** — surrogate-loss evaluation of a theta batch (a client fleet's
   candidates) against that tenant's sketch. All pending points coalesce into
   ONE banked ``ops.query_theta_with_weights(bank, ..., sketch_idx)`` call.
+* **fit** — train a tenant cohort end-to-end from its served counters: one
+  ``erm.fit_many`` over the cohort's live sub-bank, for any registered
+  surrogate whose insert flavor matches the gateway's. Fits drain between
+  ticks (at ``tick_finish``, post-ingest) and compile their own loss
+  closures, so the three-tick-program jit-stability invariant is untouched.
 
 Both halves run inside jitted tick programs over **jit-stable padded
 shapes**: per-tenant slot capacities (``ingest_slots`` rows, ``query_slots``
@@ -73,7 +78,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fleet, lsh, sketch as sketch_lib
+from repro.core import dfo, erm, fleet, losses, lsh, sketch as sketch_lib
 from repro.kernels import ops
 
 Array = jax.Array
@@ -141,6 +146,44 @@ class QueryRequest:
 
 
 @dataclasses.dataclass
+class FitRequest:
+    """Train a tenant cohort from its SERVED counters (the third request
+    class, DESIGN.md §13): one ``erm.fit_many`` over the named tenants'
+    live sketches, dispatched between ticks.
+
+    ``surrogate`` names a registered :mod:`repro.core.losses` spec whose
+    insert flavor must match the gateway's (``spec.paired == gw.paired``) —
+    the counters were built by the gateway's insert path, so only
+    same-flavor surrogates read them correctly. The fit compiles its own
+    loss closures (separate jit caches), so the three-tick-program
+    ``trace_count`` invariant is untouched.
+    """
+
+    rid: int
+    tenants: Sequence[int]          # the cohort, in result-row order
+    surrogate: str = "prp_regression"
+    seed: int = 0
+    restarts: int = 1
+    l2: float = 0.0
+    steps: int = 100                # DFO steps (serving fits favor short runs)
+    num_queries: int = 8
+    sigma: float = 0.5
+    learning_rate: float = 1.0
+    decay: float = 0.995
+    refine_steps: Optional[int] = None  # None -> the surrogate's default
+
+
+@dataclasses.dataclass
+class FitResult:
+    """Iterate-space cohort fit: row ``i`` is ``tenants[i]``'s model."""
+
+    rid: int
+    tenants: List[int]
+    theta: np.ndarray         # (S, dim) float32
+    fleet_losses: np.ndarray  # (S, F) final sketch-loss per restart member
+
+
+@dataclasses.dataclass
 class QueryResult:
     rid: int
     tenant: int
@@ -166,6 +209,7 @@ class TickReport:
     rows_ingested: int
     points_served: int
     ingest_done: List[IngestResult] = dataclasses.field(default_factory=list)
+    fits: List[FitResult] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -198,6 +242,28 @@ class InflightTick:
     ingest_done: List[IngestResult]
     rows: int
     points: int
+
+
+def run_fit_request(req: FitRequest, bank: sketch_lib.SketchBank,
+                    params: lsh.LSHParams) -> FitResult:
+    """Execute one cohort fit against an int32 sub-bank (row i = tenants[i]).
+
+    Shared by the flat and tiered gateways: the request's knobs map onto
+    ONE ``erm.fit_many`` call, so a gateway fit is bit-identical to the
+    offline spine fit over the same counters and seed.
+    """
+    cfg = dfo.DFOConfig(
+        steps=req.steps, num_queries=req.num_queries, sigma=req.sigma,
+        learning_rate=req.learning_rate, decay=req.decay,
+    )
+    res = erm.fit_many(
+        req.surrogate, bank, params, jax.random.PRNGKey(req.seed),
+        dfo_config=cfg, restarts=req.restarts, l2=req.l2,
+        refine_steps=req.refine_steps,
+    )
+    return FitResult(rid=req.rid, tenants=list(req.tenants),
+                     theta=np.asarray(res.theta),
+                     fleet_losses=np.asarray(res.fleet_losses))
 
 
 def _jit_cache_size(f) -> Optional[int]:
@@ -293,18 +359,40 @@ class StormGateway:
         self._n = bank.n
         self._ingest_q: Deque[_PendingIngest] = deque()
         self._query_q: Deque[_PendingQuery] = deque()
+        self._fit_q: Deque[FitRequest] = deque()
         self._pending_rows = [0] * tenants
         self._pending_points = [0] * tenants
         self.ticks = 0
         self.rows_ingested = 0
         self.points_served = 0
+        self.fits_run = 0
         self._trace_events = 0  # fallback trace counter (see trace_count)
         self._tick_full, self._tick_ingest, self._tick_query = \
             self._build_ticks()
 
     # -- request plumbing ---------------------------------------------------
 
-    def submit(self, req: Union[IngestRequest, QueryRequest]) -> None:
+    def submit(self, req: Union[IngestRequest, QueryRequest, FitRequest]
+               ) -> None:
+        if isinstance(req, FitRequest):
+            cohort = [int(t) for t in req.tenants]
+            if not cohort:
+                raise ValueError("fit cohort is empty")
+            for t in cohort:
+                if not 0 <= t < self.tenants:
+                    raise ValueError(f"fit tenant {t} out of range "
+                                     f"[0, {self.tenants})")
+            spec = losses.get_surrogate(req.surrogate)
+            if spec.paired != self.paired:
+                flavor = ("paired (PRP)", "single-sided")
+                raise ValueError(
+                    f"surrogate '{spec.name}' expects "
+                    f"{flavor[0] if spec.paired else flavor[1]} counters but "
+                    f"this gateway ingests "
+                    f"{flavor[0] if self.paired else flavor[1]}"
+                )
+            self._fit_q.append(dataclasses.replace(req, tenants=cohort))
+            return
         if not 0 <= req.tenant < self.tenants:
             raise ValueError(f"tenant {req.tenant} out of range "
                              f"[0, {self.tenants})")
@@ -342,14 +430,14 @@ class StormGateway:
         else:
             raise TypeError(f"unknown request type {type(req).__name__}")
 
-    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest]]
-                    ) -> None:
+    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest,
+                                               FitRequest]]) -> None:
         for r in reqs:
             self.submit(r)
 
     @property
     def pending(self) -> int:
-        return len(self._ingest_q) + len(self._query_q)
+        return len(self._ingest_q) + len(self._query_q) + len(self._fit_q)
 
     def queue_stats(self) -> dict:
         """Host-side gateway state for monitoring / the wire stats reply.
@@ -372,8 +460,10 @@ class StormGateway:
             "pending_depth": depth,
             "pending_rows": list(self._pending_rows),
             "pending_points": list(self._pending_points),
+            "pending_fits": len(self._fit_q),
             "rows_ingested": self.rows_ingested,
             "points_served": self.points_served,
+            "fits_run": self.fits_run,
             "trace_count": self.trace_count,
         }
 
@@ -634,6 +724,29 @@ class StormGateway:
                             completes=completes, ingest_done=ingest_done,
                             rows=rows, points=points)
 
+    def _run_fits(self) -> List[FitResult]:
+        """Drain the fit queue against the POST-tick counters.
+
+        Each request gathers its cohort's live counters into a sub-bank
+        (widened to int32 — exact, the training dtype) and runs one
+        ``erm.fit_many``: S tenants x F restarts on a single fused banked
+        query stream per DFO step. The result is bit-identical to an
+        offline ``erm.fit_many`` over the same counters and seed (pinned in
+        ``tests/test_serve_fit.py``). Fits jit their own loss closures, so
+        the tick programs' trace caches never grow here.
+        """
+        out: List[FitResult] = []
+        while self._fit_q:
+            req = self._fit_q.popleft()
+            idx = jnp.asarray(req.tenants, jnp.int32)
+            sub = sketch_lib.SketchBank(
+                counts=self._counts[idx].astype(jnp.int32),
+                n=self._n[idx],
+            )
+            out.append(run_fit_request(req, sub, self.params))
+            self.fits_run += 1
+        return out
+
     def tick_finish(self, inflight: InflightTick) -> TickReport:
         """Read back one dispatched tick's estimates and report completions.
 
@@ -641,7 +754,9 @@ class StormGateway:
         serving loop; with another tick already dispatched it overlaps that
         tick's execution. Finish ticks in dispatch order — results land in
         request ``out`` buffers cumulatively across the ticks of a split
-        request.
+        request. Queued fit requests drain HERE, after the tick's ingest
+        has landed — "between ticks" in the stage pipeline, reading the
+        freshest served counters.
         """
         results: List[QueryResult] = []
         if inflight.est is not None:
@@ -654,10 +769,12 @@ class StormGateway:
             results.append(QueryResult(st.req.rid, st.req.tenant, st.out))
         self.rows_ingested += inflight.rows
         self.points_served += inflight.points
+        fits = self._run_fits() if self._fit_q else []
         return TickReport(tick=inflight.tick, results=results,
                           rows_ingested=inflight.rows,
                           points_served=inflight.points,
-                          ingest_done=inflight.ingest_done)
+                          ingest_done=inflight.ingest_done,
+                          fits=fits)
 
     def tick(self) -> TickReport:
         """Run one engine tick synchronously: fused banked ingest, then

@@ -19,10 +19,14 @@ layer owns the tenant⇄slot indirection plus a
   point), and the residency map advances immediately — the promoted
   tenant's queued requests drain into the inner gateway and pack into the
   very NEXT tick.
-* **Victim policy** is LRU-by-tick with protection: a tenant with queued
-  unpacked traffic in the inner gateway is never evicted (its packed
-  in-flight traffic is safe regardless — the swap orders after the tick
-  program that read the slot).
+* **Victim policy** is pluggable (``score_fn`` — ``tiered.TenantStats ->
+  priority``, lowest evicts first; default LRU-by-tick) with protection:
+  a tenant with queued unpacked traffic in the inner gateway is never
+  evicted (its packed in-flight traffic is safe regardless — the swap
+  orders after the tick program that read the slot).
+* **Fit requests** address global tenants and read through ``sketch_of``
+  (hot slot or exact cold copy), so a cohort can mix residencies without
+  promoting anyone; they drain at ``tick_finish`` after evictions land.
 
 Never-recompiles contract: the inner gateway's three tick programs plus the
 bank's one swap program — ``trace_count <= 4`` for the gateway's lifetime
@@ -48,10 +52,12 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lsh, sketch as sketch_lib
+from repro.core import losses, lsh, sketch as sketch_lib
 from repro.core.tiered import TieredBank
 from repro.serve.storm_gateway import (
     Backpressure,
+    FitRequest,
+    FitResult,
     IngestRequest,
     InflightTick,
     QueryRequest,
@@ -59,6 +65,7 @@ from repro.serve.storm_gateway import (
     StormGateway,
     TickBudgetExceeded,
     TickReport,
+    run_fit_request,
 )
 
 
@@ -81,6 +88,7 @@ class TieredStormGateway:
         max_pending_rows: Optional[int] = None,
         max_pending_points: Optional[int] = None,
         promote_per_tick: int = 2,
+        score_fn=None,
     ):
         """Args mirror :class:`StormGateway` plus the tier knobs:
 
@@ -92,6 +100,9 @@ class TieredStormGateway:
             bank and the per-tick kernel tiles (DESIGN.md §12).
           promote_per_tick: max cold tenants promoted per tick (each is one
             dispatch of the single swap program).
+          score_fn: pluggable eviction priority (``tiered.TenantStats ->
+            comparable``; lowest evicts first). ``None`` keeps the
+            LRU-by-tick default.
         """
         if num_tenants < 1:
             raise ValueError(f"need at least one tenant; got {num_tenants}")
@@ -102,6 +113,7 @@ class TieredStormGateway:
             rows=params.rows,
             buckets=params.buckets,
             dtype=count_dtype,
+            score_fn=score_fn,
         )
         counts, n = self.tiers.init_resident()
         self.gw = StormGateway(
@@ -123,9 +135,11 @@ class TieredStormGateway:
         self.max_pending_points = max_pending_points
         self.promote_per_tick = promote_per_tick
         self._cold_q: Deque[Union[IngestRequest, QueryRequest]] = deque()
+        self._fit_q: Deque[FitRequest] = deque()
         self._cold_rows = [0] * num_tenants
         self._cold_points = [0] * num_tenants
         self._rid_tenant: Dict[int, int] = {}
+        self.fits_run = 0
         self.promotions = 0
         self.demotions = 0
         self.deferred_promotions = 0
@@ -152,7 +166,26 @@ class TieredStormGateway:
 
     # -- request plumbing ---------------------------------------------------
 
-    def submit(self, req: Union[IngestRequest, QueryRequest]) -> None:
+    def submit(self, req: Union[IngestRequest, QueryRequest, FitRequest]
+               ) -> None:
+        if isinstance(req, FitRequest):
+            # Fits address GLOBAL tenants and read through ``sketch_of``
+            # (hot slot or cold host copy alike), so they never forward to
+            # the slot-space inner gateway and never force a promotion.
+            cohort = [int(t) for t in req.tenants]
+            if not cohort:
+                raise ValueError("fit cohort is empty")
+            for t in cohort:
+                if not 0 <= t < self.num_tenants:
+                    raise ValueError(f"fit tenant {t} out of range "
+                                     f"[0, {self.num_tenants})")
+            spec = losses.get_surrogate(req.surrogate)
+            if spec.paired != self.gw.paired:
+                raise ValueError(
+                    f"surrogate '{spec.name}' insert flavor does not match "
+                    f"this gateway (paired={self.gw.paired})")
+            self._fit_q.append(dataclasses.replace(req, tenants=cohort))
+            return
         if not 0 <= req.tenant < self.num_tenants:
             raise ValueError(f"tenant {req.tenant} out of range "
                              f"[0, {self.num_tenants})")
@@ -186,14 +219,14 @@ class TieredStormGateway:
         self._rid_tenant[req.rid] = req.tenant
         self.gw.submit(dataclasses.replace(req, tenant=slot))
 
-    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest]]
-                    ) -> None:
+    def submit_many(self, reqs: Sequence[Union[IngestRequest, QueryRequest,
+                                               FitRequest]]) -> None:
         for r in reqs:
             self.submit(r)
 
     @property
     def pending(self) -> int:
-        return self.gw.pending + len(self._cold_q)
+        return self.gw.pending + len(self._cold_q) + len(self._fit_q)
 
     @property
     def ticks(self) -> int:
@@ -257,7 +290,7 @@ class TieredStormGateway:
         promoted = set()
         for tenant in wanted:
             protect = self._protected() | promoted
-            if self.tiers.lru_victim(protect) is None and \
+            if self.tiers.victim(protect) is None and \
                     self.tiers._free_slot() is None:
                 # Every slot is protected — defer, never stall the tick.
                 self.deferred_promotions += 1
@@ -302,14 +335,43 @@ class TieredStormGateway:
         self._schedule_promotions(inflight.tick)
         return inflight
 
+    def _run_fits(self) -> List[FitResult]:
+        """Drain queued cohort fits over the tiered store.
+
+        Each cohort row reads through :meth:`sketch_of` — a resident
+        tenant's live slot or a cold tenant's exact host copy — widened to
+        int32, so a fit sees the same counters regardless of residency and
+        matches the offline ``erm.fit_many`` bit-for-bit. Fits compile
+        their own closures; the <=4 trace budget is untouched.
+        """
+        out: List[FitResult] = []
+        while self._fit_q:
+            req = self._fit_q.popleft()
+            sketches = [self.sketch_of(t) for t in req.tenants]
+            sub = sketch_lib.SketchBank(
+                counts=jnp.stack([s.counts.astype(jnp.int32)
+                                  for s in sketches]),
+                n=jnp.stack([jnp.asarray(s.n, jnp.int32)
+                             for s in sketches]),
+            )
+            out.append(run_fit_request(req, sub, self.gw.params))
+            self.fits_run += 1
+        return out
+
     def tick_finish(self, inflight: InflightTick) -> TickReport:
-        """Inner finish + rewrite reports to global ids + land evictions."""
+        """Inner finish + rewrite reports to global ids + land evictions.
+
+        Queued fits drain last — after evictions land — so a cohort that
+        mixes hot and cold tenants reads fully-settled counters.
+        """
         rep = self.gw.tick_finish(inflight)
         for res in rep.results:
             res.tenant = self._rid_tenant.pop(res.rid, res.tenant)
         for done in rep.ingest_done:
             done.tenant = self._rid_tenant.pop(done.rid, done.tenant)
         self.tiers.flush_evictions()
+        if self._fit_q:
+            rep.fits.extend(self._run_fits())
         return rep
 
     def tick(self) -> TickReport:
@@ -389,8 +451,10 @@ class TieredStormGateway:
             "pending_depth": depth,
             "pending_rows": rows,
             "pending_points": points,
+            "pending_fits": len(self._fit_q),
             "rows_ingested": self.gw.rows_ingested,
             "points_served": self.gw.points_served,
+            "fits_run": self.fits_run,
             "trace_count": self.trace_count,
             "tier": tier,
         }

@@ -17,11 +17,15 @@ Control messages (acks, errors, stats) are JSON-only frames with
 a ``data`` list (the JSON path of "JSON-or-npz"), which the decoder accepts
 interchangeably.
 
-Client -> server types: ``ingest`` / ``query`` (array-carrying), ``stats``.
+Client -> server types: ``ingest`` / ``query`` (array-carrying), ``fit``
+(JSON-only: a tenant cohort plus erm knobs — the gateway trains the cohort
+from its served counters between ticks), ``stats``.
 Server -> client types: ``result`` (query losses, array-carrying),
-``ingest_ok`` (the request's last row reached the counters), ``error``
-(validation or — with ``"backpressure": true`` — admission rejection; the
-client should drain completions and retry), ``stats_reply``.
+``fit_result`` (the cohort's ``(S, dim)`` thetas as the array payload,
+per-member ``fleet_losses`` inline in the header), ``ingest_ok`` (the
+request's last row reached the counters), ``error`` (validation or — with
+``"backpressure": true`` — admission rejection; the client should drain
+completions and retry), ``stats_reply``.
 
 :class:`StormWireServer` runs the double-buffered engine loop (§11.1) on a
 dedicated thread: connection handler threads deserialize and submit under
@@ -44,7 +48,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.serve.storm_gateway import (
-    Backpressure, IngestRequest, QueryRequest, StormGateway,
+    Backpressure, FitRequest, IngestRequest, QueryRequest, StormGateway,
 )
 
 _PREFIX = struct.Struct("!II")
@@ -168,6 +172,12 @@ class StormWireServer:
         for ing in report.ingest_done:
             self._reply(ing.rid, {"type": "ingest_ok", "rid": ing.rid,
                                   "tenant": ing.tenant, "rows": ing.rows})
+        for fit in report.fits:
+            self._reply(fit.rid,
+                        {"type": "fit_result", "rid": fit.rid,
+                         "tenants": fit.tenants,
+                         "fleet_losses": fit.fleet_losses.tolist()},
+                        fit.theta)
 
     def _reply(self, rid: int, header: dict,
                arr: Optional[np.ndarray] = None) -> None:
@@ -209,6 +219,31 @@ class StormWireServer:
             with self._lock:
                 stats = self.gateway.queue_stats()
             conn.send({"type": "stats_reply", "rid": rid, "stats": stats})
+            return
+        if kind == "fit":
+            # JSON-only frame: cohort + erm knobs, no array payload.
+            try:
+                req = FitRequest(
+                    rid=rid,
+                    tenants=[int(t) for t in header["tenants"]],
+                    surrogate=header.get("surrogate", "prp_regression"),
+                    seed=int(header.get("seed", 0)),
+                    restarts=int(header.get("restarts", 1)),
+                    l2=float(header.get("l2", 0.0)),
+                    steps=int(header.get("steps", 100)),
+                    num_queries=int(header.get("num_queries", 8)),
+                    sigma=float(header.get("sigma", 0.5)),
+                    learning_rate=float(header.get("learning_rate", 1.0)),
+                    decay=float(header.get("decay", 0.995)),
+                    refine_steps=(None if header.get("refine_steps") is None
+                                  else int(header["refine_steps"])),
+                )
+                with self._lock:
+                    self.gateway.submit(req)
+                    self._owners[rid] = conn
+            except (KeyError, TypeError, ValueError) as e:
+                conn.send({"type": "error", "rid": rid, "error": str(e),
+                           "backpressure": False})
             return
         if kind not in ("ingest", "query"):
             conn.send({"type": "error", "rid": rid,
@@ -279,6 +314,19 @@ class StormWireClient:
         payload = encode_array(header, np.asarray(thetas, np.float32))
         send_frame(self.sock, header, payload)
 
+    def fit(self, rid: int, tenants, surrogate: str = "prp_regression",
+            **knobs) -> None:
+        """Ask the gateway to train ``tenants`` from their served counters.
+
+        ``knobs`` pass through to the server-side ``FitRequest`` (``seed``,
+        ``restarts``, ``l2``, ``steps``, ``num_queries``, ``sigma``,
+        ``learning_rate``, ``decay``, ``refine_steps``).
+        """
+        header = {"type": "fit", "rid": rid,
+                  "tenants": [int(t) for t in tenants],
+                  "surrogate": surrogate, **knobs}
+        send_frame(self.sock, header)
+
     def recv(self) -> Tuple[dict, Optional[np.ndarray]]:
         """Next server frame as (header, array-or-None); blocks."""
         frame = recv_frame(self.sock)
@@ -286,8 +334,21 @@ class StormWireClient:
             raise ConnectionError("server closed the connection")
         header, payload = frame
         arr = (decode_array(header, payload)
-               if header["type"] == "result" else None)
+               if header["type"] in ("result", "fit_result") else None)
         return header, arr
+
+    def fit_sync(self, rid: int, tenants, surrogate: str = "prp_regression",
+                 **knobs) -> Tuple[np.ndarray, np.ndarray]:
+        """Submit one fit and block for ITS result: ``(theta, fleet_losses)``
+        with row i belonging to ``tenants[i]`` (single-threaded use: raises
+        if an unrelated frame arrives first)."""
+        self.fit(rid, tenants, surrogate, **knobs)
+        header, arr = self.recv()
+        if header["type"] == "error":
+            raise RuntimeError(header["error"])
+        if header.get("rid") != rid or header["type"] != "fit_result":
+            raise RuntimeError(f"out-of-order reply {header}")
+        return arr, np.asarray(header["fleet_losses"], np.float32)
 
     def query_sync(self, rid: int, tenant: int,
                    thetas: np.ndarray) -> np.ndarray:

@@ -1,0 +1,220 @@
+"""The ERM spine: registry contracts, oracle convergence, banked identity,
+and the pinned public config surface (DESIGN.md §13).
+
+Every registered surrogate is exercised through the SAME parametrized
+tests — that's the point of the registry: a new loss must pass the generic
+contracts (sketch estimate converges to the analytic oracle; the S=1
+banked fit is bit-identical to the lone fit) with zero new test code.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    baselines,
+    classification,
+    dfo,
+    erm,
+    losses,
+    lsh,
+    probes,
+    regression,
+)
+
+ALL_SPECS = sorted(losses.SURROGATES)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_caches():
+    """This module compiles a fresh fit program per spec x config; drop
+    them on the way out so the full-suite process doesn't carry the cache
+    pressure into later modules (the single-core container's XLA has
+    segfaulted under the accumulated load)."""
+    yield
+    jax.clear_caches()
+
+
+def _data(name, n=48, d=3, seed=0):
+    """A small (x, y) pair in each spec's natural label space."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    spec = losses.get_surrogate(name)
+    if name == "prp_regression":
+        y = x @ w + 0.1 * jnp.asarray(
+            rng.normal(size=(n,)).astype(np.float32))
+    elif spec.encode is losses._encode_points:
+        y = None
+    else:
+        y = jnp.sign(x @ w)
+    return x, y
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_registry_contents():
+    assert ALL_SPECS == ["kmeans", "logistic", "margin_classification",
+                         "prp_regression"]
+    for name in ALL_SPECS:
+        spec = losses.get_surrogate(name)
+        assert spec.name == name
+        assert spec.pad >= 0
+    with pytest.raises(ValueError, match="unknown surrogate"):
+        losses.get_surrogate("nope")
+
+
+def test_register_idempotent_but_conflict_raises():
+    spec = losses.get_surrogate("logistic")
+    losses.register(spec)  # same object: fine
+    clone = dataclasses.replace(spec, refine_steps=spec.refine_steps + 1)
+    with pytest.raises(ValueError):
+        losses.register(clone)
+
+
+def test_resolve_accepts_spec_and_name():
+    spec = losses.PRP_REGRESSION
+    assert erm.resolve(spec) is spec
+    assert erm.resolve("prp_regression") is spec
+
+
+# -- the generic estimator contract -----------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_SPECS)
+def test_sketch_estimate_converges_to_oracle(name):
+    """At large R the RACE estimate matches the spec's analytic oracle."""
+    spec = losses.get_surrogate(name)
+    x, y = _data(name)
+    d = x.shape[-1]
+    params = lsh.init_srp(jax.random.PRNGKey(1), 4096, 2,
+                          d + spec.pad + 2)
+    sk = erm.sketch_surrogate(spec, params, x, y)
+
+    z = spec.encode(x, y)
+    z_scaled, _ = lsh.scale_to_unit_ball(z, 1.05)
+
+    loss_fn = erm.surrogate_loss_fn(spec, sk, params)
+    rng = np.random.default_rng(2)
+    thetas = jnp.asarray(rng.normal(size=(4, d + spec.pad))
+                         .astype(np.float32))
+    est = np.asarray(loss_fn(thetas))
+    oracle = np.asarray([
+        float(spec.objective(thetas[i], z_scaled, params.planes))
+        for i in range(thetas.shape[0])
+    ])
+    np.testing.assert_allclose(est, oracle, rtol=0.15, atol=0.02)
+
+
+@pytest.mark.parametrize("name", ALL_SPECS)
+def test_fit_many_s1_bit_identical_to_fit(name):
+    """The banked driver at S=1 reproduces the lone driver bit-for-bit."""
+    x, y = _data(name, n=32)
+    cfg = erm.ERMConfig(
+        rows=64, planes=2, restarts=2,
+        dfo=dfo.DFOConfig(steps=6, num_queries=4, sigma=0.5,
+                          learning_rate=1.0, decay=0.995),
+    )
+    key = jax.random.PRNGKey(3)
+    one = erm.fit_surrogate(name, key, x, y, config=cfg)
+    many = erm.fit_surrogate_many(
+        name, key, [x], None if y is None else [y], config=cfg)
+    assert many.tenants == 1
+    np.testing.assert_array_equal(np.asarray(one.theta),
+                                  np.asarray(many.theta[0]))
+    np.testing.assert_array_equal(np.asarray(one.losses),
+                                  np.asarray(many.losses[0]))
+    np.testing.assert_array_equal(np.asarray(one.fleet_losses),
+                                  np.asarray(many.fleet_losses[0]))
+
+
+@pytest.mark.parametrize("name", ["logistic", "kmeans"])
+def test_new_losses_train_through_unchanged_fit_many(name):
+    """The two new registry entries train end-to-end via the generic spine
+    (multiple tenants) and produce usable models."""
+    xs, ys = [], []
+    for t in range(2):
+        x, y = _data(name, n=40, seed=10 + t)
+        xs.append(x)
+        ys.append(y)
+    cfg = erm.ERMConfig(
+        rows=256, planes=2,
+        dfo=dfo.DFOConfig(steps=40, num_queries=8, sigma=0.5,
+                          learning_rate=1.0, decay=0.995),
+    )
+    many = erm.fit_surrogate_many(
+        name, jax.random.PRNGKey(4), xs,
+        None if ys[0] is None else ys, config=cfg)
+    assert many.theta.shape[0] == 2
+    assert np.all(np.isfinite(np.asarray(many.theta)))
+    if name == "logistic":
+        # Better than chance on its own training labels.
+        for t in range(2):
+            acc = float(jnp.mean((jnp.sign(xs[t] @ many.theta[t]) == ys[t])
+                        .astype(jnp.float32)))
+            assert acc > 0.6, acc
+
+
+def test_logistic_shares_argmin_geometry_with_margin():
+    """log1p is monotone: the logistic loss ORDERS thetas exactly like the
+    scaled margin loss (same argmin — Agarwal & Gonen's reduction)."""
+    x, y = _data("margin_classification", n=40)
+    d = x.shape[-1]
+    params = lsh.init_srp(jax.random.PRNGKey(5), 256, 2, d + 2)
+    sk = erm.sketch_surrogate("margin_classification", params, x, y)
+    margin_fn = erm.surrogate_loss_fn("margin_classification", sk, params)
+    logistic_fn = erm.surrogate_loss_fn("logistic", sk, params)
+    thetas = jnp.asarray(np.random.default_rng(6).normal(
+        size=(8, d)).astype(np.float32))
+    m = np.asarray(margin_fn(thetas))
+    lg = np.asarray(logistic_fn(thetas))
+    np.testing.assert_allclose(lg, np.log1p(m), rtol=1e-5)
+    assert list(np.argsort(m)) == list(np.argsort(lg))
+
+
+def test_streaming_svrg_single_pass_near_ols():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(3000, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(6,)).astype(np.float32))
+    y = x @ w + 1.5 + 0.05 * jnp.asarray(
+        rng.normal(size=(3000,)).astype(np.float32))
+    ols = baselines.ols(x, y)
+    svrg = baselines.streaming_svrg(jax.random.PRNGKey(8), x, y)
+    assert svrg.memory_bytes == 3 * 7 * 4  # w, anchor, anchor-gradient
+    assert float(svrg.mse(x, y)) < 40 * float(ols.mse(x, y))
+    assert float(svrg.mse(x, y)) < 0.2 * float(jnp.var(y))
+
+
+# -- the pinned public config surface (dead fields stay dead) ---------------
+
+
+def _field_names(cls):
+    return sorted(f.name for f in dataclasses.fields(cls))
+
+
+def test_config_surfaces_pinned():
+    common_fleet = [
+        "restart_basin_tol", "restart_init_scale", "restart_lr_spread",
+        "restart_select", "restart_sigma_spread", "restarts",
+    ]
+    assert _field_names(regression.StormRegressorConfig) == sorted(
+        ["rows", "planes", "batch", "standardize", "norm_slack",
+         "count_dtype", "orthogonal", "engine", "l2", "refine_steps",
+         "refine_radius", "dfo"] + common_fleet)
+    assert _field_names(classification.StormClassifierConfig) == sorted(
+        ["rows", "planes", "batch", "norm_slack", "count_dtype", "engine",
+         "init_scale", "refine_steps", "refine_radius", "dfo"]
+        + common_fleet)
+    # The never-read ``pool`` field is gone: pooling is an explicit
+    # argument of pool_hidden/extract_features, not sketch-build config.
+    assert _field_names(probes.ProbeConfig) == sorted(
+        ["rows", "planes", "batch", "norm_slack", "engine"])
+    assert "pool" not in _field_names(probes.ProbeConfig)
+    assert _field_names(erm.ERMConfig) == sorted(
+        ["rows", "planes", "batch", "norm_slack", "count_dtype",
+         "orthogonal", "engine", "l2", "init_scale", "refine_steps",
+         "refine_radius", "dfo"] + common_fleet)

@@ -24,7 +24,9 @@ import pytest  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 from repro.core import lsh, sketch as sketch_lib  # noqa: E402
-from repro.core.tiered import TieredBank  # noqa: E402
+from repro.core.tiered import (  # noqa: E402
+    TenantStats, TieredBank, frequency_score, lru_score,
+)
 from repro.kernels import ops  # noqa: E402
 from repro.sharding import specs  # noqa: E402
 
@@ -109,6 +111,57 @@ class TestTieredBankSwap:
         assert tb.lru_victim(protect=[0, 1, 2]) is None
         with pytest.raises(RuntimeError, match="protected"):
             tb.promote(3, counts, n, tick=6, protect=[0, 1, 2])
+
+    def test_pluggable_victim_policy(self):
+        """score_fn generalizes eviction: the default IS the old LRU
+        (bit-identical choices), while a frequency-aware scorer picks the
+        least-touched slot instead — same protection and tie-break rules."""
+        tables = _tables(4)
+        tb_lru, counts, n = _bank_with([0, 1, 2], tables)
+        tb_lfu = TieredBank(num_tenants=4, hot_capacity=3, rows=R,
+                            buckets=B, dtype=tables.dtype,
+                            score_fn=frequency_score)
+        assert tb_lru.score_fn is lru_score
+        for tb in (tb_lru, tb_lfu):
+            tb.touch(0, tick=1)   # hot AND recent: 3 touches
+            tb.touch(0, tick=4)
+            tb.touch(0, tick=7)
+            tb.touch(1, tick=6)   # 1 touch, recent
+            tb.touch(2, tick=2)   # 2 touches, stale
+            tb.touch(2, tick=3)
+        # LRU evicts the stalest (tenant 2, tick 3); LFU the least-touched
+        # (tenant 1) — touch counts break toward recency, then slot order.
+        assert tb_lru.victim() == 2
+        assert tb_lfu.victim() == 1
+        assert tb_lfu.victim(protect=[1]) == 2
+        assert tb_lfu.victim(protect=[0, 1, 2]) is None
+        # tenant_stats exposes exactly what scorers consume.
+        stats = tb_lfu.tenant_stats(2)
+        assert stats == TenantStats(tenant=2, slot=2, last_touch=3,
+                                    touches=2)
+        assert tb_lfu.tenant_stats(3) is None  # cold tenant: no stats
+        # Equal-score slots fall to the lowest slot, like the old LRU tie.
+        tb2 = TieredBank(num_tenants=3, hot_capacity=3, rows=R, buckets=B,
+                         dtype=tables.dtype, score_fn=frequency_score)
+        for t in range(3):
+            tb2.touch(t, tick=5)
+        assert tb2.victim() == 0
+        # The legacy name still answers, through the generic scan.
+        assert tb_lru.lru_victim() == tb_lru.victim()
+
+    def test_promote_respects_custom_scorer(self):
+        """promote() consults the configured scorer, and a promotion counts
+        as one touch for the new resident."""
+        tables = _tables(4)
+        tb = TieredBank(num_tenants=4, hot_capacity=2, rows=R, buckets=B,
+                        dtype=tables.dtype, score_fn=frequency_score)
+        counts, n = tb.init_resident()
+        tb.touch(0, tick=1)
+        tb.touch(0, tick=2)
+        tb.touch(1, tick=3)  # fewer touches than tenant 0
+        counts, n, victim = tb.promote(2, counts, n, tick=4)
+        assert victim == 1  # LFU, not LRU (LRU would evict tenant 0)
+        assert tb.tenant_stats(2).touches == 1
 
     def test_trace_count_one_program_for_all_slots(self):
         """Swaps at every slot, promotes AND demotes: one trace total."""
