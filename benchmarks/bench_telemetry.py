@@ -1,0 +1,157 @@
+"""Telemetry benchmarks: what live monitoring costs the serving stack.
+
+Four ``name,us,derived`` rows (DESIGN.md §14):
+
+* ``telemetry/tap_overhead`` — the tapped jitted decode step vs the plain
+  one, interleaved best-of-N. The taps are pure copies of values the
+  untapped program already computes, so the derived field (tapped/plain
+  time ratio) is the bar: <= 1.5 at smoke shapes.
+* ``telemetry/ingest`` — rows/s through a bridge window flush
+  (standardize + gateway ingest + drain), the telemetry path's sustained
+  throughput; derived = rows/ms.
+* ``telemetry/drift_null`` — windows scored on an in-distribution stream;
+  derived = slots flagged (must be 0: no false alarms on the null).
+* ``telemetry/drift_latency`` — an injected mean shift after calibration;
+  derived = windows from shift to flag (detection latency; bar: flags
+  within 2 windows at smoke shapes).
+
+``run(smoke=True)`` shrinks shapes/iters for the CI bench-smoke job.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import lsh, probes
+from repro.models import model
+from repro.telemetry.bridge import TelemetryBridge
+from repro.telemetry.monitor import DriftMonitor
+from repro.telemetry.taps import TapBatch, TapConfig, tapped_decode_fn
+from repro.serve.storm_gateway import StormGateway
+
+
+def _bench_tap_overhead(rows: List[str], smoke: bool) -> None:
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    slots = 4
+    state = model.init_decode_state(cfg, slots, 64)
+    toks = jnp.zeros(slots, jnp.int32)
+    pos = jnp.zeros(slots, jnp.int32)
+    plain = jax.jit(lambda s, t, p: model.decode_step(
+        params, cfg, s, {"tokens": t}, p))
+    tapped = tapped_decode_fn(params, cfg, TapConfig(model="bench"))
+
+    def run_plain():
+        jax.block_until_ready(plain(state, toks, pos))
+
+    def run_tapped():
+        jax.block_until_ready(tapped(state, toks, pos))
+
+    run_plain(), run_tapped()  # warm
+    iters = 20 if smoke else 100
+    best_p = best_t = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_plain()
+        best_p = min(best_p, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_tapped()
+        best_t = min(best_t, time.perf_counter() - t0)
+    us = best_t * 1e6
+    rows.append(f"telemetry/tap_overhead,{us:.0f},{best_t / best_p:.2f}")
+
+
+def _telemetry_rig(d_model: int, tenants: int = 1, window: int = 256):
+    pcfg = probes.ProbeConfig(rows=128, planes=4, batch=256)
+    gparams = lsh.init_srp(jax.random.PRNGKey(7), pcfg.rows, pcfg.planes,
+                           d_model + 3)
+    gw = StormGateway(gparams, tenants=tenants, ingest_slots=8192)
+    bridge = TelemetryBridge(gw, pcfg, window=window, auto_flush=False)
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    sink = bridge.register(TapConfig(model="bench", layers=(0,)), cfg)
+    return bridge, sink, cfg
+
+
+def _batch(cfg, n, seed, loc=0.0):
+    rng = np.random.default_rng(seed)
+    return TapBatch(
+        model="bench", step=seed,
+        feats=np.asarray(rng.normal(loc=loc, size=(1, n, cfg.d_model)),
+                         np.float32),
+        targets=np.asarray(rng.normal(size=(n,)), np.float32),
+        mask=np.ones(n, bool))
+
+
+def _bench_ingest(rows: List[str], smoke: bool) -> None:
+    n = 512 if smoke else 4096
+    bridge, sink, cfg = _telemetry_rig(cfg_d_model(), window=n)
+    sink(_batch(cfg, n, seed=0))
+    bridge.flush()  # warm: freezes moments + compiles the ingest path
+    iters = 5 if smoke else 20
+    best = float("inf")
+    for i in range(iters):
+        sink(_batch(cfg, n, seed=1 + i))
+        t0 = time.perf_counter()
+        bridge.flush()
+        best = min(best, time.perf_counter() - t0)
+    us = best * 1e6
+    rows.append(f"telemetry/ingest,{us:.0f},{n / (us / 1e3):.2f}")
+
+
+def cfg_d_model() -> int:
+    return registry.get_config("qwen2-7b", smoke=True).d_model
+
+
+def _bench_drift(rows: List[str], smoke: bool) -> None:
+    n = 256 if smoke else 1024
+    null_windows = 6 if smoke else 12
+
+    bridge, sink, cfg = _telemetry_rig(cfg_d_model(), window=n)
+    mon = DriftMonitor(bridge, reference_windows=1, calibration_windows=3)
+    t0 = time.perf_counter()
+    for w in range(null_windows):
+        sink(_batch(cfg, n, seed=100 + w))
+        bridge.flush()
+    null_s = time.perf_counter() - t0
+    flagged = len(mon.flagged())
+    us = null_s / null_windows * 1e6
+    rows.append(f"telemetry/drift_null,{us:.0f},{flagged}")
+
+    # Injected shift after calibration: how many windows until the flag?
+    bridge2, sink2, _ = _telemetry_rig(cfg_d_model(), window=n)
+    mon2 = DriftMonitor(bridge2, reference_windows=1, calibration_windows=3)
+    for w in range(5):  # 1 reference + 3 calibration + 1 scored null
+        sink2(_batch(cfg, n, seed=200 + w))
+        bridge2.flush()
+    latency = 0
+    t0 = time.perf_counter()
+    for w in range(8):
+        sink2(_batch(cfg, n, seed=300 + w, loc=1.0))
+        bridge2.flush()
+        latency = w + 1
+        if mon2.flagged():
+            break
+    per_window_us = (time.perf_counter() - t0) / latency * 1e6
+    detected = 1 if mon2.flagged() else 0
+    rows.append(f"telemetry/drift_latency,{per_window_us:.0f},"
+                f"{latency if detected else -1}")
+
+
+def run(print_fn=print, smoke: bool = False) -> List[str]:
+    rows: List[str] = []
+    _bench_tap_overhead(rows, smoke)
+    _bench_ingest(rows, smoke)
+    _bench_drift(rows, smoke)
+    for row in rows:
+        print_fn(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

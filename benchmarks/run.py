@@ -36,7 +36,8 @@ def _parse_row(row: str):
 def main() -> None:
     from benchmarks import (bench_classification, bench_distributed,
                             bench_kernels, bench_regression, bench_serve,
-                            bench_serve_load, bench_surrogate, bench_tiered)
+                            bench_serve_load, bench_surrogate,
+                            bench_telemetry, bench_tiered)
 
     suites = {
         "fig3": bench_surrogate.run,
@@ -48,6 +49,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "serve_load": bench_serve_load.run,
         "tiered": bench_tiered.run,
+        "telemetry": bench_telemetry.run,
     }
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="*",

@@ -22,7 +22,7 @@ Pallas kernels accelerate on TPU (`kernels/ops.build_sketch`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,25 +90,90 @@ def extract_features(
 _MOMENT_EPS = 1e-8  # std guard, shared with the merge's strip/re-apply
 
 
+class ProbeMoments(NamedTuple):
+    """The standardization a probe sketch was built under.
+
+    A sketch's counters are only meaningful relative to the moments that
+    standardized its rows, so anything that wants to ADD rows to an existing
+    sketch (the telemetry bridge's window stream) or un-standardize a fitted
+    head must carry these five arrays. ``scale`` is the unit-ball factor
+    from :func:`~repro.core.lsh.scale_to_unit_ball`.
+    """
+
+    x_mean: Array
+    x_scale: Array
+    y_mean: Array
+    y_scale: Array
+    scale: Array
+
+
+def probe_rows(
+    feats: Array,          # (N, d_model) pooled features
+    targets: Array,        # (N,) scalar regression targets
+    config: Optional[ProbeConfig] = None,
+    moments: Optional[ProbeMoments] = None,
+) -> Tuple[Array, ProbeMoments]:
+    """Standardize (features, target) pairs into sketch-space rows.
+
+    The single owner of the probe-row recipe: standardize by feature/target
+    moments, append the target column, scale into the unit ball. With
+    ``moments=None`` the moments (and the unit-ball scale) are computed from
+    this batch — the :func:`sketch_features` behavior. With ``moments``
+    given, the batch is standardized under the FROZEN reference moments
+    (outlier norms still clip onto the sphere) — the streaming contract:
+    rows produced window by window under one frozen ``ProbeMoments`` equal
+    the rows of one big batch under the same moments bit-for-bit, because
+    the map is elementwise per row. The telemetry bridge and the offline
+    ``sketch_features(..., moments=...)`` comparator both call this, so the
+    live and offline standardizations cannot drift apart.
+    """
+    config = config or ProbeConfig()
+    if moments is None:
+        xm, xs = feats.mean(0), feats.std(0) + _MOMENT_EPS
+        ym, ys = targets.mean(), targets.std() + _MOMENT_EPS
+        z = jnp.concatenate(
+            [(feats - xm) / xs, ((targets - ym) / ys)[:, None]], axis=-1
+        )
+        zs, c = lsh.scale_to_unit_ball(z, config.norm_slack)
+        return zs, ProbeMoments(x_mean=xm, x_scale=xs, y_mean=ym, y_scale=ys,
+                                scale=c)
+    z = jnp.concatenate(
+        [(feats - moments.x_mean) / moments.x_scale,
+         ((targets - moments.y_mean) / moments.y_scale)[:, None]], axis=-1
+    )
+    # Same tail as lsh.scale_to_unit_ball, with the scale pinned: divide by
+    # the frozen factor, then project outliers onto the unit sphere (drifted
+    # live data may exceed the reference ball — clip, never NaN).
+    zs = z / moments.scale
+    nrm = jnp.linalg.norm(zs, axis=-1, keepdims=True)
+    zs = zs / jnp.maximum(nrm, 1.0)
+    return zs, moments
+
+
 def sketch_features(
     key: Array,
     feats: Array,          # (N, d_model) pooled features
     targets: Array,        # (N,) scalar regression targets
     config: Optional[ProbeConfig] = None,
+    moments: Optional[ProbeMoments] = None,
 ) -> ProbeState:
-    """One-pass PRP sketch of (features, target) pairs; data discardable after."""
+    """One-pass PRP sketch of (features, target) pairs; data discardable after.
+
+    ``moments=None`` standardizes by this batch's own statistics (the
+    classic offline build). Passing a frozen :class:`ProbeMoments`
+    standardizes under REFERENCE statistics instead — the offline comparator
+    for a sketch accumulated stream-wise under those moments (DESIGN.md
+    §14): the resulting counters are bit-identical to any window-by-window
+    ingest of the same rows, because counters are order-free integer sums.
+    """
     config = config or ProbeConfig()
-    xm, xs = feats.mean(0), feats.std(0) + _MOMENT_EPS
-    ym, ys = targets.mean(), targets.std() + _MOMENT_EPS
-    z = jnp.concatenate(
-        [(feats - xm) / xs, ((targets - ym) / ys)[:, None]], axis=-1
-    )
-    zs, c = lsh.scale_to_unit_ball(z, config.norm_slack)
-    params = lsh.init_srp(key, config.rows, config.planes, z.shape[1] + 2)
+    zs, moments = probe_rows(feats, targets, config, moments=moments)
+    params = lsh.init_srp(key, config.rows, config.planes, zs.shape[1] + 2)
     sk = sketch_lib.sketch_dataset(params, zs, batch=config.batch, paired=True,
                                    engine=config.engine)
-    return ProbeState(sketch=sk, params=params, x_mean=xm, x_scale=xs,
-                      y_mean=ym, y_scale=ys, scale=c,
+    return ProbeState(sketch=sk, params=params, x_mean=moments.x_mean,
+                      x_scale=moments.x_scale, y_mean=moments.y_mean,
+                      y_scale=moments.y_scale, scale=moments.scale,
                       count=jnp.asarray(feats.shape[0], jnp.int32))
 
 

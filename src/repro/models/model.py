@@ -12,6 +12,9 @@ Public entry points:
   * ``init_decode_state(cfg, batch, cache_len)``
   * ``prefill(params, cfg, batch, cache_len)`` -> (state, logits_last)
   * ``decode_step(params, cfg, state, token_embeddings, pos)`` -> (logits, state)
+    (``tap_layers=(...)`` additionally returns per-cycle pooled tap features
+    without perturbing logits or state — the telemetry tap points)
+  * ``forward_taps(params, cfg, batch, tap_layers)`` -> (hidden, per-cycle taps)
 
 ``batch`` is a dict: ``tokens (B,S)`` or ``embeds (B,S,d)`` (stub frontends),
 optional ``cross_states (B,T,d)`` for VLM cross-attention, ``labels (B,S)``
@@ -373,17 +376,44 @@ def _apply_block_decode(
     return x, state
 
 
+def _check_tap_layers(tap_layers, cfg: ModelConfig) -> Tuple[int, ...]:
+    taps = tuple(int(t) for t in tap_layers)
+    if not taps:
+        raise ValueError("tap_layers must name at least one cycle")
+    bad = [t for t in taps if not 0 <= t < cfg.num_cycles]
+    if bad:
+        raise ValueError(
+            f"tap_layers {bad} out of range [0, {cfg.num_cycles}) for "
+            f"{cfg.name}"
+        )
+    return taps
+
+
 def decode_step(
-    params: Params, cfg: ModelConfig, state, inputs: Dict[str, Array], pos: Array
-) -> Tuple[Array, Any]:
+    params: Params, cfg: ModelConfig, state, inputs: Dict[str, Array],
+    pos: Array, tap_layers=None,
+):
     """One-token decode. ``inputs``: token (B,) or embeds (B,1,d). Returns
-    (logits (B, vocab), new state)."""
+    (logits (B, vocab), new state).
+
+    ``tap_layers`` (static tuple of cycle indices) switches to the
+    tap-emitting variant: the cycle scan additionally stacks the residual
+    stream after each cycle, and the return grows a third element ``taps
+    (num_taps, B, 1, d) float32`` — the pre-final-norm hidden state after
+    each named cycle (the telemetry tap points, DESIGN.md §14). The extra
+    scan output is a pure copy of values the untapped program already
+    computes, so logits and new state are bit-identical to ``tap_layers=
+    None`` (pinned in tests/test_telemetry.py).
+    """
     cdt = _dtype(cfg.compute_dtype)
     if "embeds" in inputs:
         x = inputs["embeds"].astype(cdt)
     else:
         x = layers.embed(params["embed"], inputs["tokens"][:, None], cdt)
     shared = params.get("shared")
+    tapped = tap_layers is not None
+    if tapped:
+        tap_layers = _check_tap_layers(tap_layers, cfg)
 
     def cycle_body(x, xs):
         cycle_params, cycle_state = xs
@@ -394,12 +424,56 @@ def decode_step(
                 x, pos, cfg,
             )
             new_states[f"pos{i}"] = ns
-        return x, new_states
+        return x, (new_states, x) if tapped else new_states
 
-    x, new_state = jax.lax.scan(cycle_body, x, (params["blocks"], state))
+    x, ys = jax.lax.scan(cycle_body, x, (params["blocks"], state))
+    new_state, resid = ys if tapped else (ys, None)
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = layers.unembed(unembed_table(params, cfg), x[:, 0, :], cdt)
-    return logits, new_state
+    if not tapped:
+        return logits, new_state
+    taps = resid[jnp.asarray(tap_layers, jnp.int32)].astype(jnp.float32)
+    return logits, new_state, taps
+
+
+def forward_taps(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Array], tap_layers
+) -> Tuple[Array, Array]:
+    """Sequence-mode tap extraction: per-cycle residual streams.
+
+    Returns ``(hidden (B, S, d), taps (num_taps, B, S, d) float32)`` where
+    ``taps[j]`` is the residual stream after cycle ``tap_layers[j]`` —
+    the full-sequence twin of the tapped :func:`decode_step` (offline
+    feature extraction over a captured token batch). Runs the plain
+    no-remat cycle scan: taps are a serving/analysis surface, not a
+    training path.
+    """
+    tap_layers = _check_tap_layers(tap_layers, cfg)
+    cdt = _dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cdt)
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+    x = hint(x, "residual")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cross = batch.get("cross_states")
+    if cross is not None:
+        cross = cross.astype(cdt)
+    shared = params.get("shared")
+
+    def cycle_body(x, cycle_params):
+        for i, kind in enumerate(cfg.cycle):
+            x, _ = _apply_block_seq(
+                kind, cycle_params[f"pos{i}"], shared, x, positions, cross,
+                cfg,
+            )
+        return x, x
+
+    x, resid = jax.lax.scan(cycle_body, x, params["blocks"])
+    hidden = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    taps = resid[jnp.asarray(tap_layers, jnp.int32)].astype(jnp.float32)
+    return hidden, taps
 
 
 # ---------------------------------------------------------------------------

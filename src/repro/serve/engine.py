@@ -7,7 +7,12 @@ Real-engine mechanics in miniature:
   * admission resets a lane's cache region and streams the prompt through the
     shared decode step one token per engine tick (piggy-backed prefill), so
     new requests join without stalling in-flight generations;
-  * finished requests free their lane immediately (continuous batching).
+  * finished requests free their lane immediately (continuous batching);
+  * optional activation taps: with a ``TapConfig`` the decode step also
+    emits per-layer pooled hidden states + a probe target per lane, handed
+    to a ``tap_sink`` (normally a ``TelemetryBridge``) each step. Sampled
+    tokens are bit-identical with taps on or off — the taps are pure copies
+    of values the untapped program already computes (DESIGN.md §14).
 
 Batched prompt ingestion for throughput-oriented serving is the separate
 ``prefill`` path (``launch/serve.py``); this engine optimizes latency under a
@@ -17,7 +22,7 @@ rolling request mix.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +30,7 @@ import numpy as np
 
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.telemetry.taps import TapBatch, TapConfig, tapped_decode_fn
 
 Array = jax.Array
 
@@ -58,7 +64,9 @@ class ServeEngine:
     """Fixed-slot continuous-batching engine (single host, jit-stable)."""
 
     def __init__(self, params: Any, cfg: ModelConfig, slots: int,
-                 cache_len: int, seed: int = 0):
+                 cache_len: int, seed: int = 0,
+                 taps: Optional[TapConfig] = None,
+                 tap_sink: Optional[Callable[[TapBatch], None]] = None):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -68,23 +76,50 @@ class ServeEngine:
         self.lanes = [_Lane() for _ in range(slots)]
         self.next_token = np.zeros(slots, np.int32)
         self.steps = 0
+        self.taps = taps
+        self.tap_sink = tap_sink
 
-        self._decode = jax.jit(
-            lambda state, toks, pos: model.decode_step(
-                params, cfg, state, {"tokens": toks}, pos
+        if taps is not None:
+            self._decode = tapped_decode_fn(params, cfg, taps)
+        else:
+            self._decode = jax.jit(
+                lambda state, toks, pos: model.decode_step(
+                    params, cfg, state, {"tokens": toks}, pos
+                )
             )
-        )
+
+        # ONE cached lane-reset program for all lanes: the lane index is a
+        # traced operand (jit specializes on shape/dtype, not value), so
+        # admission churn across any lane mix reuses a single trace instead
+        # of rebuilding the tree-map graph per admission. ``_reset_traces``
+        # counts trace events (the Python side effect runs only on cache
+        # miss) — pinned to 1 under churny traffic in tests.
+        self._reset_traces = 0
+
+        def _reset(state, i):
+            self._reset_traces += 1
+            return jax.tree.map(
+                lambda x: x.at[:, i].set(jnp.zeros((), x.dtype)), state
+            )
+
+        self._lane_reset = jax.jit(_reset)
 
     # -- lane management ----------------------------------------------------
 
     def _reset_lane(self, i: int) -> None:
         """Zero one lane's cache/state (leaves have layout (cycles, B, ...))."""
-        self.state = jax.tree.map(
-            lambda x: x.at[:, i].set(jnp.zeros_like(x[:, i])), self.state
-        )
+        self.state = self._lane_reset(self.state, np.int32(i))
         self.pos[i] = 0
 
     def _admit(self, req: Request) -> bool:
+        """Seat ``req`` in a free lane; False if all lanes are busy.
+
+        Admission is head-of-line: ``run`` admits strictly in queue order
+        and stops at the first request that doesn't fit, so a burst never
+        reorders around a waiting request. The seated lane is primed with
+        ``prompt[0]`` — requests are validated non-empty at submission
+        (``run``), so the priming read cannot fail here.
+        """
         for i, lane in enumerate(self.lanes):
             if lane.req is None:
                 self._reset_lane(i)
@@ -99,12 +134,35 @@ class ServeEngine:
         self.key, k = jax.random.split(self.key)
         return int(jax.random.categorical(k, logits / temperature))
 
+    def _emit_taps(self, feats: Array, targets: Array) -> None:
+        """Hand one step's taps to the sink with the CURRENT active-lane
+        mask — called before lane bookkeeping frees finished lanes, so the
+        mask matches the lanes whose features were just computed. Prefill
+        steps tap too: prompt tokens are served activations like any other
+        (the probe target is the model's next-token view of the prompt)."""
+        active = np.array([l.req is not None for l in self.lanes], bool)
+        if not active.any():
+            return
+        self.tap_sink(TapBatch(
+            model=self.taps.model, step=self.steps,
+            feats=np.asarray(feats), targets=np.asarray(targets),
+            mask=active,
+        ))
+
     # -- main loop ----------------------------------------------------------
 
     def run(self, requests: List[Request], max_steps: int = 100_000
             ) -> List[Completion]:
+        for req in requests:
+            if len(req.prompt) == 0:
+                raise ValueError(
+                    f"request {req.rid}: empty prompt — admission primes a "
+                    f"lane with prompt[0], so every request needs at least "
+                    f"one token"
+                )
         queue = list(requests)
         done: List[Completion] = []
+        tapped = self.taps is not None
         while (queue or any(l.req for l in self.lanes)) and \
                 self.steps < max_steps:
             while queue and self._admit(queue[0]):
@@ -112,10 +170,28 @@ class ServeEngine:
             if not any(l.req for l in self.lanes):
                 continue
 
-            logits, self.state = self._decode(
-                self.state, jnp.asarray(self.next_token), jnp.asarray(self.pos)
-            )
+            if tapped:
+                logits, self.state, feats, targets = self._decode(
+                    self.state, jnp.asarray(self.next_token),
+                    jnp.asarray(self.pos)
+                )
+            else:
+                logits, self.state = self._decode(
+                    self.state, jnp.asarray(self.next_token),
+                    jnp.asarray(self.pos)
+                )
+            # Complete the step before the host reads/mutates anything.
+            # Generation steps sync through the argmax scalar anyway, but
+            # prefill-only steps used to dispatch with NO host sync — and
+            # unbounded async depth trips a jaxlib-0.4.36 CPU thunk-runtime
+            # race that corrupts decode state under load (first-run token
+            # streams diverged from reruns; pinned deterministic in
+            # tests/test_serve_engine.py). One step of lookahead is this
+            # engine's whole pipeline, so the sync costs nothing real.
+            logits.block_until_ready()
             self.steps += 1
+            if tapped and self.tap_sink is not None:
+                self._emit_taps(feats, targets)
 
             for i, lane in enumerate(self.lanes):
                 if lane.req is None:

@@ -242,6 +242,10 @@ class TieredStormGateway:
         return self.gw.params
 
     @property
+    def paired(self) -> bool:
+        return self.gw.paired
+
+    @property
     def rows_ingested(self) -> int:
         return self.gw.rows_ingested
 

@@ -1,0 +1,28 @@
+"""Live LM telemetry: activation taps -> sketch gateway -> online probes.
+
+The monitoring subsystem (DESIGN.md §14): the serving engine's decode path
+emits per-layer pooled hidden states (:mod:`repro.telemetry.taps`), a
+:class:`~repro.telemetry.bridge.TelemetryBridge` standardizes them under
+frozen reference moments and feeds them to a STORM gateway as ordinary
+ingest traffic — one tenant slot per ``(model, layer)`` tap — and a
+:class:`~repro.telemetry.monitor.DriftMonitor` scores rolling counter
+windows against a reference sketch and refreshes probes from the served
+counters. The LM stack becomes the gateway's first non-synthetic producer,
+and drift detection + probe refresh run continuously in counter-sized
+memory.
+"""
+
+from repro.telemetry.bridge import TelemetryBridge
+from repro.telemetry.monitor import DriftMonitor, counter_distance, window_delta
+from repro.telemetry.taps import TapBatch, TapConfig, probe_target, tapped_decode_fn
+
+__all__ = [
+    "DriftMonitor",
+    "TapBatch",
+    "TapConfig",
+    "TelemetryBridge",
+    "counter_distance",
+    "probe_target",
+    "tapped_decode_fn",
+    "window_delta",
+]

@@ -1,0 +1,343 @@
+"""TelemetryBridge: tap batches -> gateway ingest, one slot per (model, layer).
+
+The bridge is the producer side of the monitoring loop (DESIGN.md §14). It
+buffers :class:`~repro.telemetry.taps.TapBatch` samples per model, and every
+``window`` samples it standardizes each tap layer's features under that
+slot's FROZEN reference moments (``probes.probe_rows``), submits the rows as
+ordinary :class:`~repro.serve.storm_gateway.IngestRequest` traffic, and
+drains the gateway between engine steps. Nothing gateway-side changes: no
+new request class, no new traced programs, trace budgets untouched (flat
+``<= 3``, tiered ``<= 4`` — pinned in ``tests/test_telemetry.py``).
+
+Freshness semantics: the FIRST flushed window of a slot is its calibration
+window — its moments (feature/target means, stds, unit-ball scale) freeze
+and every later window standardizes under them, so the slot's accumulated
+counters form ONE coherent sketch. Bit-identity contract: after any number
+of window flushes, a slot's counters equal the offline
+``probes.sketch_features(key, all_feats, all_targets, cfg, moments=frozen)``
+build on the captured activations bit-for-bit (elementwise standardization
++ order-free integer counters), and a probe fitted from the served counters
+equals the offline ``fit_probe_many`` on that state bit-for-bit.
+
+The bridge duck-types its gateway: anything with ``submit`` /
+``run_until_idle`` / ``sketch_of`` / ``params`` / ``tenants`` works —
+:class:`~repro.serve.storm_gateway.StormGateway` and
+:class:`~repro.serve.tiered_gateway.TieredStormGateway` both do.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probes, sketch as sketch_lib
+from repro.models.config import ModelConfig
+from repro.serve.storm_gateway import FitRequest, IngestRequest
+from repro.telemetry.taps import TapBatch, TapConfig
+
+# Telemetry rids live far above interactive traffic so an operator reading
+# gateway logs can tell the producers apart; the gateway itself is agnostic.
+_RID_BASE = 1 << 40
+
+
+class _ModelTaps:
+    """Per-model registration state: layer -> slot map + sample buffer."""
+
+    def __init__(self, tap: TapConfig, layers: Tuple[int, ...],
+                 slots: Tuple[int, ...], d_model: int):
+        self.tap = tap
+        self.layers = layers
+        self.slots = slots                  # slots[j] serves layers[j]
+        self.d_model = d_model
+        self.feats: List[np.ndarray] = []   # (num_taps, n_i, d) chunks
+        self.targets: List[np.ndarray] = []
+        self.buffered = 0
+
+    def append(self, batch: TapBatch) -> None:
+        feats, targets = batch.active()
+        if feats.shape[0] != len(self.layers):
+            raise ValueError(
+                f"tap batch for {self.tap.model!r} carries {feats.shape[0]} "
+                f"layers; registered {len(self.layers)}"
+            )
+        if targets.size == 0:
+            return
+        self.feats.append(np.asarray(feats, np.float32))
+        self.targets.append(np.asarray(targets, np.float32))
+        self.buffered += targets.size
+
+    def take(self) -> Tuple[np.ndarray, np.ndarray]:
+        feats = np.concatenate(self.feats, axis=1)
+        targets = np.concatenate(self.targets)
+        self.feats, self.targets, self.buffered = [], [], 0
+        return feats, targets
+
+
+class TelemetryBridge:
+    """Feed live activation taps into a STORM gateway's ingest path."""
+
+    def __init__(
+        self,
+        gateway,
+        probe_config: Optional[probes.ProbeConfig] = None,
+        *,
+        window: int = 256,
+        auto_flush: bool = True,
+    ):
+        """Args:
+          gateway: a paired (PRP) gateway whose hash family is sized for the
+            probe rows: ``params.dim == d_model + 3`` (features + target
+            column + the two PRP augmentation coordinates).
+          probe_config: sketch-build knobs shared by every slot (the
+            ``rows``/``planes`` must match the gateway params; ``batch`` /
+            ``norm_slack`` govern standalone comparators).
+          window: samples per model buffered before an automatic flush
+            (a threshold, not an exact size — the flush takes everything
+            buffered). The first flushed window is the calibration window
+            that freezes a slot's moments.
+          auto_flush: flush from inside the tap sink once the buffer
+            crosses ``window``; ``False`` leaves flushing to the caller
+            (manual control for tests and offline replay).
+        """
+        paired = getattr(gateway, "paired",
+                         getattr(getattr(gateway, "gw", None), "paired",
+                                 None))
+        if paired is not True:
+            raise ValueError(
+                "telemetry needs a paired (PRP) gateway — probe rows are "
+                "PRP regression inserts"
+            )
+        self.gateway = gateway
+        self.config = probe_config or probes.ProbeConfig()
+        if (self.config.rows != gateway.params.rows
+                or self.config.planes != gateway.params.planes):
+            raise ValueError(
+                f"probe_config rows/planes ({self.config.rows}, "
+                f"{self.config.planes}) disagree with the gateway hash "
+                f"family ({gateway.params.rows}, {gateway.params.planes})"
+            )
+        self.window = window
+        self.auto_flush = auto_flush
+        self.monitor = None                  # DriftMonitor attaches itself
+        self._models: Dict[str, _ModelTaps] = {}
+        self._slot_key: List[Tuple[str, int]] = []   # slot -> (model, layer)
+        self._moments: List[Optional[probes.ProbeMoments]] = []
+        self._rows_ingested: List[int] = []
+        self._windows: List[int] = []
+        self._last_flush_tick: List[Optional[int]] = []
+        self._rids = itertools.count(_RID_BASE)
+        self.flushes = 0
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, tap: TapConfig, cfg: ModelConfig) -> Callable:
+        """Claim one gateway tenant slot per tap layer; return the sink.
+
+        The returned callable is the engine's ``tap_sink``. Slots are
+        assigned in registration order, so a bridge over an S-tenant
+        gateway can host any mix of models totalling S tap layers.
+        """
+        if tap.model in self._models:
+            raise ValueError(f"model {tap.model!r} already registered")
+        layers = tap.resolve_layers(cfg)
+        want = cfg.d_model + 3
+        if self.gateway.params.dim != want:
+            raise ValueError(
+                f"gateway hash family has dim {self.gateway.params.dim}; "
+                f"taps of {tap.model!r} (d_model={cfg.d_model}) need "
+                f"{want} (= d_model + target column + PRP augmentation)"
+            )
+        base = len(self._slot_key)
+        if base + len(layers) > self.gateway.tenants:
+            raise ValueError(
+                f"not enough gateway tenants: {tap.model!r} needs "
+                f"{len(layers)} slots at offset {base} but the gateway "
+                f"has {self.gateway.tenants}"
+            )
+        slots = tuple(range(base, base + len(layers)))
+        for layer in layers:
+            self._slot_key.append((tap.model, layer))
+            self._moments.append(None)
+            self._rows_ingested.append(0)
+            self._windows.append(0)
+            self._last_flush_tick.append(None)
+        reg = _ModelTaps(tap, layers, slots, cfg.d_model)
+        self._models[tap.model] = reg
+        return self.on_taps
+
+    def slot_of(self, model: str, layer: int) -> int:
+        """Gateway tenant slot serving tap ``(model, layer)``."""
+        try:
+            return self._slot_key.index((model, layer))
+        except ValueError:
+            raise KeyError(f"no tap registered for ({model!r}, {layer})")
+
+    @property
+    def slots(self) -> List[Tuple[str, int]]:
+        """Slot -> ``(model, layer)`` in gateway-tenant order."""
+        return list(self._slot_key)
+
+    # -- the sink -----------------------------------------------------------
+
+    def on_taps(self, batch: TapBatch) -> None:
+        """Engine tap sink: buffer one step's active-lane samples.
+
+        Crossing ``window`` buffered samples triggers a flush (unless
+        ``auto_flush=False``) — "between engine steps" in the serving
+        loop: the engine called the sink after its decode step returned,
+        so the gateway tick here never interleaves with device work the
+        engine is waiting on.
+        """
+        reg = self._models.get(batch.model)
+        if reg is None:
+            raise KeyError(f"model {batch.model!r} is not registered")
+        reg.append(batch)
+        if self.auto_flush and reg.buffered >= self.window:
+            self.flush(batch.model)
+
+    def flush(self, model: Optional[str] = None, drain: bool = True) -> int:
+        """Standardize buffered samples and ingest them; returns rows sent.
+
+        Per tap layer: rows = ``probes.probe_rows(feats, targets, cfg,
+        moments=frozen)``; a slot's first flush computes and FREEZES its
+        moments (the calibration window). All rows submit as plain ingest
+        requests; ``drain=True`` then runs the gateway until idle so the
+        counters visible to the monitor/probes are post-ingest. A drained
+        flush ends by notifying an attached monitor (one observed window).
+        """
+        names = [model] if model is not None else list(self._models)
+        total = 0
+        for name in names:
+            reg = self._models[name]
+            if reg.buffered == 0:
+                continue
+            feats, targets = reg.take()
+            # Standardize in jnp: the offline sketch_features comparator
+            # reduces with XLA, and np/XLA means differ in the last ulp —
+            # the bit-identity pin needs the SAME ops, not just same math.
+            feats_j = jnp.asarray(feats)
+            targets_j = jnp.asarray(targets)
+            for j, slot in enumerate(reg.slots):
+                rows, moments = probes.probe_rows(
+                    feats_j[j], targets_j, self.config,
+                    moments=self._moments[slot],
+                )
+                if self._moments[slot] is None:
+                    self._moments[slot] = moments
+                self.gateway.submit(IngestRequest(
+                    rid=next(self._rids), tenant=slot,
+                    z=np.asarray(rows, np.float32),
+                ))
+                self._rows_ingested[slot] += rows.shape[0]
+                self._windows[slot] += 1
+                total += rows.shape[0]
+        if total == 0:
+            return 0
+        self.flushes += 1
+        if drain:
+            self.gateway.run_until_idle()
+            for name in names:
+                for slot in self._models[name].slots:
+                    self._last_flush_tick[slot] = self.gateway.ticks
+            if self.monitor is not None:
+                self.monitor.observe()
+        return total
+
+    # -- probe surface ------------------------------------------------------
+
+    def moments_of(self, model: str, layer: int) -> probes.ProbeMoments:
+        m = self._moments[self.slot_of(model, layer)]
+        if m is None:
+            raise ValueError(
+                f"tap ({model!r}, {layer}) has no frozen moments yet — "
+                f"no window has been flushed"
+            )
+        return m
+
+    def probe_state(self, model: str, layer: int) -> probes.ProbeState:
+        """A tap's live counters + frozen moments as a fit-ready state.
+
+        The counters come straight from the serving bank (widened to int32,
+        the training dtype — exact for the narrow tiered store) and the
+        moments are the slot's frozen calibration moments, so feeding this
+        to ``fit_probe`` / ``fit_probe_many`` trains on exactly what was
+        served.
+        """
+        slot = self.slot_of(model, layer)
+        m = self.moments_of(model, layer)
+        sk = self.gateway.sketch_of(slot)
+        sk = sketch_lib.Sketch(counts=sk.counts.astype(jnp.int32), n=sk.n)
+        return probes.ProbeState(
+            sketch=sk, params=self.gateway.params,
+            x_mean=m.x_mean, x_scale=m.x_scale,
+            y_mean=m.y_mean, y_scale=m.y_scale, scale=m.scale,
+            count=sk.n,
+        )
+
+    def probe_states(self) -> List[probes.ProbeState]:
+        """Every flushed tap's state, in slot order (``fit_probe_many``
+        input — all slots share the gateway's one hash family)."""
+        return [self.probe_state(m, l) for m, l in self._slot_key
+                if self._moments[self.slot_of(m, l)] is not None]
+
+    def fit_probes(self, key, **fit_kwargs) -> probes.FittedProbeMany:
+        """Refresh every tap's value-head from the SERVED counters.
+
+        One fused ``probes.fit_probe_many`` over all flushed slots —
+        bit-identical to the offline fit of ``sketch_features`` states
+        built from the captured activations under the same frozen moments
+        (the acceptance pin in ``tests/test_telemetry.py``).
+        """
+        states = self.probe_states()
+        if not states:
+            raise ValueError("no flushed taps to fit probes from")
+        d_model = states[0].x_mean.shape[0]
+        return probes.fit_probe_many(key, states, d_model, **fit_kwargs)
+
+    def fit_request(self, rid: int, **knobs) -> FitRequest:
+        """A gateway-side :class:`FitRequest` covering every flushed slot.
+
+        The in-loop alternative to :meth:`fit_probes`: the gateway trains
+        the tap cohort between ticks (``erm.fit_many`` on the live
+        sub-bank) and returns iterate-space thetas; un-standardize with
+        :meth:`moments_of` if raw-feature heads are needed.
+        """
+        tenants = [self.slot_of(m, l) for m, l in self._slot_key
+                   if self._moments[self.slot_of(m, l)] is not None]
+        if not tenants:
+            raise ValueError("no flushed taps to fit")
+        return FitRequest(rid=rid, tenants=tenants, **knobs)
+
+    # -- stats --------------------------------------------------------------
+
+    def telemetry_stats(self) -> dict:
+        """Host-side telemetry state for monitoring / the wire stats frame."""
+        stats = {
+            "slots": [
+                {
+                    "model": m,
+                    "layer": layer,
+                    "tenant": slot,
+                    "windows": self._windows[slot],
+                    "rows_ingested": self._rows_ingested[slot],
+                    "moments_frozen": self._moments[slot] is not None,
+                    "last_flush_tick": self._last_flush_tick[slot],
+                }
+                for slot, (m, layer) in enumerate(self._slot_key)
+            ],
+            "models": {
+                name: {"buffered": reg.buffered,
+                       "layers": list(reg.layers),
+                       "target": reg.tap.target,
+                       "pool": reg.tap.pool}
+                for name, reg in self._models.items()
+            },
+            "window": self.window,
+            "flushes": self.flushes,
+        }
+        if self.monitor is not None:
+            stats["drift"] = self.monitor.status()
+        return stats

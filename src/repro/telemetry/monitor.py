@@ -1,0 +1,232 @@
+"""Drift detection + continuous probe refresh over live gateway counters.
+
+The consumer side of the monitoring loop (DESIGN.md §14). STORM counters
+are linear: a tenant's cumulative counter table after window ``t`` minus
+its table after window ``t-1`` IS the sketch of window ``t``'s rows alone
+(integer sums commute), so the :class:`DriftMonitor` never stores
+activations — it snapshots counter tables at window boundaries and scores
+each window's delta against a frozen reference delta in counter space.
+
+Scoring: each sketch row is a histogram over ``2^planes`` buckets; with
+``n`` paired inserts the row sums to ``2n``, so ``counts / (2n)`` is a
+frequency distribution and the drift score is the mean-over-rows total
+variation distance between the window's distribution and the reference's.
+The score is 0 for identical streams, at most 1, and needs no labels, no
+model access, and no second pass — the same counters that train the
+probes flag the shift.
+
+Thresholding is self-calibrating: after the reference windows, the next
+``calibration_windows`` in-distribution windows establish the null score
+level and the alarm threshold is ``mean + margin * std`` (with a small
+floor so a zero-variance null doesn't hair-trigger). An explicit
+``threshold`` skips calibration.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_THRESHOLD_FLOOR = 1e-3
+
+
+def window_delta(prev_counts: jax.Array, cur_counts: jax.Array) -> jax.Array:
+    """The counter table of ONE window from two cumulative snapshots.
+
+    Counters are order-free integer sums, so ``cur - prev`` is bit-exactly
+    the sketch the window's rows would have built alone.
+    """
+    return cur_counts.astype(jnp.int64) - prev_counts.astype(jnp.int64)
+
+
+def counter_distance(
+    a_counts: jax.Array,
+    a_n,
+    b_counts: jax.Array,
+    b_n,
+    *,
+    paired: bool = True,
+) -> float:
+    """Mean-over-rows total variation distance between two counter tables.
+
+    Rows are bucket histograms; ``counts / (2n)`` (paired inserts touch two
+    buckets per row) normalizes each to a frequency distribution, and per
+    row ``0.5 * sum_b |p_a - p_b|`` is the TV distance. Empty tables score
+    0 against anything (no evidence is not drift).
+    """
+    a_n = float(a_n)
+    b_n = float(b_n)
+    if a_n <= 0 or b_n <= 0:
+        return 0.0
+    per = 2.0 if paired else 1.0
+    pa = np.asarray(a_counts, np.float64) / (per * a_n)
+    pb = np.asarray(b_counts, np.float64) / (per * b_n)
+    return float(np.mean(0.5 * np.sum(np.abs(pa - pb), axis=-1)))
+
+
+class _SlotTrack:
+    """Per-slot drift state: snapshot, reference delta, null calibration."""
+
+    def __init__(self):
+        self.prev_counts: Optional[np.ndarray] = None
+        self.prev_n: int = 0
+        self.ref_counts: Optional[np.ndarray] = None  # summed ref deltas
+        self.ref_n: int = 0
+        self.ref_seen: int = 0
+        self.null_scores: List[float] = []
+        self.threshold: Optional[float] = None
+        self.windows: int = 0
+        self.last_score: Optional[float] = None
+        self.flagged: bool = False
+        self.flagged_at: Optional[int] = None
+
+
+class DriftMonitor:
+    """Reference-vs-rolling-window drift detector over bridge slots.
+
+    Attaches to a :class:`~repro.telemetry.bridge.TelemetryBridge`; the
+    bridge calls :meth:`observe` after each drained flush, so "window"
+    here is exactly one bridge flush. Per slot, the first
+    ``reference_windows`` observed windows merge into the reference sketch
+    (linearity again: summing deltas = sketching their union), the next
+    ``calibration_windows`` set the null-score threshold, and every window
+    after that is scored and flagged if it exceeds it.
+
+    Optional continuous refresh: every ``refresh_every`` fully-scored
+    windows the monitor retrains ALL probes from the served counters via
+    ``bridge.fit_probes`` — the freshness loop of ISSUE 9, trained on
+    exactly the stream the engine served.
+    """
+
+    def __init__(
+        self,
+        bridge,
+        *,
+        reference_windows: int = 1,
+        calibration_windows: int = 3,
+        threshold: Optional[float] = None,
+        margin: float = 3.0,
+        refresh_every: Optional[int] = None,
+        seed: int = 0,
+    ):
+        if reference_windows < 1:
+            raise ValueError("need at least one reference window")
+        if threshold is None and calibration_windows < 1:
+            raise ValueError(
+                "auto-thresholding needs at least one calibration window "
+                "(or pass an explicit threshold)")
+        self.bridge = bridge
+        self.reference_windows = reference_windows
+        self.calibration_windows = 0 if threshold is not None \
+            else calibration_windows
+        self.fixed_threshold = threshold
+        self.margin = margin
+        self.refresh_every = refresh_every
+        self._tracks: Dict[int, _SlotTrack] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self.refreshes = 0
+        self.last_fit = None
+        self._scored_windows = 0
+        bridge.monitor = self
+
+    def _track(self, slot: int) -> _SlotTrack:
+        if slot not in self._tracks:
+            self._tracks[slot] = _SlotTrack()
+        return self._tracks[slot]
+
+    def observe(self) -> None:
+        """Score one window boundary (called by the bridge after a flush)."""
+        scored = False
+        for slot, (mdl, layer) in enumerate(self.bridge.slots):
+            sk = self.bridge.gateway.sketch_of(slot)
+            counts = np.asarray(sk.counts, np.int64)
+            n = int(sk.n)
+            tr = self._track(slot)
+            if tr.prev_counts is None:
+                # First sight of this slot: snapshot only if it has data.
+                if n > 0:
+                    tr.prev_counts, tr.prev_n = counts, n
+                continue
+            if n == tr.prev_n:
+                continue        # no traffic for this slot this flush
+            delta = counts - tr.prev_counts
+            delta_n = n - tr.prev_n
+            tr.prev_counts, tr.prev_n = counts, n
+            tr.windows += 1
+            if tr.ref_seen < self.reference_windows:
+                tr.ref_counts = delta if tr.ref_counts is None \
+                    else tr.ref_counts + delta
+                tr.ref_n += delta_n
+                tr.ref_seen += 1
+                continue
+            score = counter_distance(
+                tr.ref_counts, tr.ref_n, delta, delta_n,
+                paired=self.bridge.gateway.paired)
+            tr.last_score = score
+            if tr.threshold is None and self.fixed_threshold is None:
+                tr.null_scores.append(score)
+                if len(tr.null_scores) >= self.calibration_windows:
+                    mean = float(np.mean(tr.null_scores))
+                    std = float(np.std(tr.null_scores))
+                    tr.threshold = max(
+                        mean + self.margin * std,
+                        mean * (1.0 + 0.25 * self.margin),
+                        _THRESHOLD_FLOOR,
+                    )
+                continue
+            thr = self.fixed_threshold if self.fixed_threshold is not None \
+                else tr.threshold
+            scored = True
+            if score > thr and not tr.flagged:
+                tr.flagged = True
+                tr.flagged_at = tr.windows
+        if scored:
+            self._scored_windows += 1
+            if (self.refresh_every
+                    and self._scored_windows % self.refresh_every == 0):
+                self.refresh()
+
+    def refresh(self, key: Optional[jax.Array] = None, **fit_kwargs):
+        """Retrain every flushed probe from the live served counters."""
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        self.last_fit = self.bridge.fit_probes(key, **fit_kwargs)
+        self.refreshes += 1
+        return self.last_fit
+
+    def flagged(self) -> List[dict]:
+        """Slots currently flagged as drifted."""
+        out = []
+        for slot, (mdl, layer) in enumerate(self.bridge.slots):
+            tr = self._tracks.get(slot)
+            if tr is not None and tr.flagged:
+                out.append({"model": mdl, "layer": layer, "tenant": slot,
+                            "score": tr.last_score,
+                            "flagged_at_window": tr.flagged_at})
+        return out
+
+    def status(self) -> dict:
+        """Monitor state for ``telemetry_stats()`` / the wire stats frame."""
+        slots = []
+        for slot, (mdl, layer) in enumerate(self.bridge.slots):
+            tr = self._tracks.get(slot) or _SlotTrack()
+            thr = self.fixed_threshold if self.fixed_threshold is not None \
+                else tr.threshold
+            slots.append({
+                "model": mdl, "layer": layer, "tenant": slot,
+                "windows": tr.windows,
+                "reference_windows": tr.ref_seen,
+                "threshold": thr,
+                "score": tr.last_score,
+                "flagged": tr.flagged,
+                "flagged_at_window": tr.flagged_at,
+            })
+        return {
+            "slots": slots,
+            "any_flagged": any(s["flagged"] for s in slots),
+            "refreshes": self.refreshes,
+            "scored_windows": self._scored_windows,
+        }

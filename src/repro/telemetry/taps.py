@@ -1,0 +1,162 @@
+"""Activation taps: name tap points and build the tap-emitting decode step.
+
+A tap point is ``(model, cycle index)``: the residual stream after that
+cycle of the block scan, pooled over the token axis with
+``probes.pool_hidden``. :class:`TapConfig` names a model's tap points and
+:func:`tapped_decode_fn` compiles the one-pass decode variant that returns
+``(logits, state, pooled features, probe targets)`` — the extra outputs are
+pure copies of values the untapped program already computes, so sampled
+tokens are bit-identical to the untapped engine (DESIGN.md §14, pinned in
+``tests/test_serve_engine.py``).
+
+The probe *target* is the per-example scalar the online probes regress on,
+computed from the same step's logits (model self-signals: entropy, max
+log-probability, top-1/2 margin) — so one decode step yields a complete
+``(features, target)`` training pair per active lane and the raw activation
+is discardable immediately after the sketch insert (the single-pass ERM
+regime of Frostig et al.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probes
+from repro.models import model
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+_TARGETS = ("entropy", "max_logprob", "margin")
+_POOLS = ("mean", "last")
+
+
+@dataclasses.dataclass(frozen=True)
+class TapConfig:
+    """Tap points for one served model.
+
+    Attributes:
+      model: routing label (usually ``cfg.name``) — the bridge keys tenant
+        slots by ``(model, layer)``, so two engines serving different models
+        can share one gateway.
+      layers: cycle indices to tap (``()`` = every cycle, resolved against
+        the model config at registration time).
+      pool: token-axis pooling (``probes.pool_hidden`` semantics). A decode
+        step carries one token, where ``mean`` and ``last`` coincide; the
+        choice matters for sequence-mode extraction.
+      target: scalar probe target from the step's logits
+        (``entropy | max_logprob | margin``).
+    """
+
+    model: str
+    layers: Tuple[int, ...] = ()
+    pool: str = "last"
+    target: str = "entropy"
+
+    def __post_init__(self):
+        if self.pool not in _POOLS:
+            raise ValueError(f"unknown pool {self.pool!r}; use {_POOLS}")
+        if self.target not in _TARGETS:
+            raise ValueError(
+                f"unknown target {self.target!r}; use {_TARGETS}")
+
+    def resolve_layers(self, cfg: ModelConfig) -> Tuple[int, ...]:
+        """Concrete tap cycles for ``cfg`` (``()`` means all cycles)."""
+        if not self.layers:
+            return tuple(range(cfg.num_cycles))
+        return model._check_tap_layers(self.layers, cfg)
+
+
+@dataclasses.dataclass
+class TapBatch:
+    """One engine step's taps, host-side.
+
+    ``feats[j, i]`` is the pooled hidden state of lane ``i`` at tap layer
+    ``j``; ``mask[i]`` marks lanes that carried a real request this step
+    (idle lanes decode a dummy token — their rows are garbage and MUST be
+    dropped before any sketch insert). ``targets`` is the per-lane probe
+    scalar from the same step's logits.
+    """
+
+    model: str
+    step: int
+    feats: np.ndarray      # (num_taps, B, d) float32
+    targets: np.ndarray    # (B,) float32
+    mask: np.ndarray       # (B,) bool
+
+    @property
+    def num_taps(self) -> int:
+        return self.feats.shape[0]
+
+    def active(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(feats (num_taps, n_active, d), targets (n_active,))."""
+        return self.feats[:, self.mask, :], self.targets[self.mask]
+
+
+def probe_target(logits: Array, kind: str) -> Array:
+    """Per-example scalar probe target from decode logits ``(B, vocab)``.
+
+    Model self-signals a value-head can be trained to predict from hidden
+    states alone: ``entropy`` (predictive uncertainty), ``max_logprob``
+    (confidence), ``margin`` (top-1 minus top-2 logit — decisiveness of the
+    greedy choice). All float32.
+    """
+    logits = logits.astype(jnp.float32)
+    if kind == "entropy":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    if kind == "max_logprob":
+        return jnp.max(jax.nn.log_softmax(logits, axis=-1), axis=-1)
+    if kind == "margin":
+        top2 = jax.lax.top_k(logits, 2)[0]
+        return top2[..., 0] - top2[..., 1]
+    raise ValueError(f"unknown target {kind!r}; use {_TARGETS}")
+
+
+def tapped_decode_fn(params, cfg: ModelConfig, tap: TapConfig):
+    """Compile the tap-emitting decode step for a serving engine.
+
+    Returns a jitted ``step(state, tokens, pos) -> (logits, new_state,
+    feats (num_taps, B, d) float32, targets (B,) float32)``. Everything the
+    taps add — the per-cycle residual copies, the pooling, the target
+    scalar — consumes values the untapped program already computes, so the
+    logits/state halves are bit-identical to the engine's plain
+    ``_decode`` (the tap-overhead bench measures the copy cost, not a
+    second forward).
+    """
+    layers_idx = tap.resolve_layers(cfg)
+
+    def step(state, toks, pos):
+        logits, new_state, resid = model.decode_step(
+            params, cfg, state, {"tokens": toks}, pos, tap_layers=layers_idx
+        )
+        # resid: (num_taps, B, 1, d) -> pooled (num_taps, B, d).
+        feats = jax.vmap(lambda h: probes.pool_hidden(h, tap.pool))(resid)
+        return logits, new_state, feats, probe_target(logits, tap.target)
+
+    return jax.jit(step)
+
+
+def extract_tap_features(
+    params, cfg: ModelConfig, batch, tap: TapConfig,
+) -> Tuple[Array, Array]:
+    """Offline tap extraction over a full token batch.
+
+    Returns ``(feats (num_taps, B, d) float32, targets (B,) float32)`` —
+    the sequence-mode twin of :func:`tapped_decode_fn` for calibration /
+    backfill runs (targets come from the last position's logits, matching
+    the decode step's next-token view).
+    """
+    from repro.models import layers as model_layers
+
+    layers_idx = tap.resolve_layers(cfg)
+    hidden, resid = model.forward_taps(params, cfg, batch, layers_idx)
+    feats = jax.vmap(lambda h: probes.pool_hidden(h, tap.pool))(resid)
+    logits = model_layers.unembed(
+        model.unembed_table(params, cfg), hidden[:, -1, :], hidden.dtype)
+    return feats, probe_target(logits, tap.target)

@@ -1,0 +1,137 @@
+"""ServeEngine contracts: determinism, lane hygiene, bounds, tap neutrality.
+
+The pins: (1) greedy decode is deterministic across fresh engines over the
+same request mix; (2) ``_reset_lane`` leaves a reused lane bit-clean — a
+request decoded in a recycled lane produces exactly the tokens it would in
+a fresh engine — and admission churn compiles the lane-reset program ONCE
+(the lane index is a traced operand, so any lane mix reuses one trace);
+(3) ``max_steps`` bounds the loop; (4) empty prompts are rejected at
+submission with a clear error, not an ``IndexError`` at admission depth;
+(5) running with activation taps enabled changes NOTHING about the sampled
+token streams (taps are pure copies — DESIGN.md §14).
+
+All equality here is within-process, same jitted program — the reliable
+flavor of XLA-CPU determinism (cross-shape token equality is tie-fragile;
+see the warning in test_serve.py).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import registry
+from repro.models import model
+from repro.serve.engine import Request, ServeEngine
+from repro.telemetry.taps import TapConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n=5, seed=1, max_new=6, lens=(3, 4, 5)):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=lens[i % len(lens)]).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _tokens(completions):
+    return {c.rid: c.tokens for c in completions}
+
+
+class TestDeterminism:
+    def test_greedy_decode_deterministic_across_fresh_engines(self, setup):
+        cfg, params = setup
+        out_a = ServeEngine(params, cfg, slots=2, cache_len=32).run(
+            _requests(cfg))
+        out_b = ServeEngine(params, cfg, slots=2, cache_len=32).run(
+            _requests(cfg))
+        assert _tokens(out_a) == _tokens(out_b)
+        assert all(len(t) == 6 for t in _tokens(out_a).values())
+
+
+class TestLaneHygiene:
+    def test_reset_lane_zeroes_exactly_that_lane(self, setup):
+        cfg, params = setup
+        eng = ServeEngine(params, cfg, slots=2, cache_len=16)
+        eng.run(_requests(cfg, n=2, max_new=4))
+        # Dirty both lanes, then reset lane 0 only.
+        dirty = jax.tree.map(lambda x: np.asarray(x).copy(), eng.state)
+        eng._reset_lane(0)
+        for before, after in zip(jax.tree.leaves(dirty),
+                                 jax.tree.leaves(eng.state)):
+            after = np.asarray(after)
+            assert not after[:, 0].any()
+            np.testing.assert_array_equal(after[:, 1], before[:, 1])
+        assert eng.pos[0] == 0
+
+    def test_recycled_lane_matches_fresh_engine(self, setup):
+        """slots=1 forces B through A's lane; B's tokens must equal B run
+        on a never-used engine — the reused cache region is bit-clean."""
+        cfg, params = setup
+        req_a, req_b = _requests(cfg, n=2, max_new=5)
+        shared = ServeEngine(params, cfg, slots=1, cache_len=32)
+        out_shared = _tokens(shared.run([req_a, req_b]))
+        req_a2, req_b2 = _requests(cfg, n=2, max_new=5)
+        fresh = ServeEngine(params, cfg, slots=1, cache_len=32)
+        out_fresh = _tokens(fresh.run([req_b2]))
+        assert out_shared[req_b.rid] == out_fresh[req_b2.rid]
+        assert out_shared[req_a.rid] == _tokens(
+            ServeEngine(params, cfg, slots=1, cache_len=32).run([req_a2])
+        )[req_a2.rid]
+
+    def test_lane_reset_compiles_once_under_churn(self, setup):
+        """Churny admit/complete traffic across both lanes: every reset
+        reuses ONE cached program (the lane index is traced, not baked)."""
+        cfg, params = setup
+        eng = ServeEngine(params, cfg, slots=2, cache_len=16)
+        eng.run(_requests(cfg, n=7, max_new=2, lens=(2, 3)))
+        assert eng.steps > 0
+        assert eng._reset_traces == 1
+
+
+class TestBoundsAndValidation:
+    def test_max_steps_bounds_the_loop(self, setup):
+        cfg, params = setup
+        eng = ServeEngine(params, cfg, slots=1, cache_len=64)
+        done = eng.run(_requests(cfg, n=1, max_new=50), max_steps=3)
+        assert eng.steps == 3
+        assert done == []  # request still in flight when the budget hit
+
+    def test_empty_prompt_rejected_at_submit(self, setup):
+        cfg, params = setup
+        eng = ServeEngine(params, cfg, slots=1, cache_len=16)
+        bad = Request(rid=7, prompt=np.zeros((0,), np.int32))
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.run([bad])
+        # Nothing was admitted or stepped.
+        assert eng.steps == 0 and all(l.req is None for l in eng.lanes)
+
+
+class TestTapNeutrality:
+    def test_tapped_token_streams_match_untapped(self, setup):
+        cfg, params = setup
+        out_plain = ServeEngine(params, cfg, slots=2, cache_len=32).run(
+            _requests(cfg))
+        seen = []
+        tap = TapConfig(model="qwen2-7b", target="entropy")
+        eng = ServeEngine(params, cfg, slots=2, cache_len=32,
+                          taps=tap, tap_sink=seen.append)
+        out_tapped = eng.run(_requests(cfg))
+        assert _tokens(out_plain) == _tokens(out_tapped)
+        # The sink saw every step, shaped (num_cycles, slots, d_model).
+        assert len(seen) == eng.steps
+        assert seen[0].feats.shape == (cfg.num_cycles, 2, cfg.d_model)
+        assert seen[0].targets.shape == (2,)
+        assert np.isfinite(seen[0].feats).all()

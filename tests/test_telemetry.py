@@ -1,0 +1,418 @@
+"""Telemetry subsystem contracts (DESIGN.md §14).
+
+The pins, layer by layer:
+  * taps: the tap-emitting decode step's logits/state halves are
+    bit-identical to the untapped program; tap features are the pooled
+    residuals at the named cycles.
+  * bridge: a slot's live counters after any number of window flushes are
+    bit-identical to the offline ``sketch_features`` build on the captured
+    activations (single window: vanilla; multi window: under the slot's
+    FROZEN calibration moments), and a probe fitted from the served
+    counters equals the offline ``fit_probe_many`` bit-for-bit. The
+    gateway-side ``FitRequest`` path matches the offline ``erm.fit_many``
+    spine over the same counters.
+  * budgets: telemetry ingest adds NO traced programs — flat gateway
+    ``trace_count <= 3``, tiered ``<= 4``, engine lane-reset 1.
+  * monitor: quiet on an in-distribution stream, flags an injected shift.
+  * wire: the stats frame carries ``telemetry`` when a bridge is attached.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import dfo, erm, lsh, probes, sketch as sketch_lib
+from repro.models import model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.storm_gateway import StormGateway
+from repro.serve.tiered_gateway import TieredStormGateway
+from repro.serve.wire import StormWireClient, StormWireServer
+from repro.telemetry import (
+    DriftMonitor, TapBatch, TapConfig, TelemetryBridge, counter_distance,
+    probe_target, window_delta,
+)
+from repro.telemetry.taps import tapped_decode_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROWS, PLANES = 64, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_config("qwen2-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def pcfg():
+    return probes.ProbeConfig(rows=ROWS, planes=PLANES, batch=64)
+
+
+@pytest.fixture(scope="module")
+def gparams(setup, pcfg):
+    cfg, _ = setup
+    # The SAME key sketch_features uses, so offline comparators rebuild
+    # this exact family: dim = (d_model + 1 target) + 2 PRP coords.
+    return lsh.init_srp(jax.random.PRNGKey(7), pcfg.rows, pcfg.planes,
+                        cfg.d_model + 3)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_caches():
+    yield
+    jax.clear_caches()
+
+
+def _stream(cfg, n, seed=0, loc=0.0, taps=1):
+    rng = np.random.default_rng(seed)
+    feats = np.asarray(rng.normal(loc=loc, size=(taps, n, cfg.d_model)),
+                       np.float32)
+    targets = np.asarray(rng.normal(size=(n,)), np.float32)
+    return feats, targets
+
+
+def _push(sink, cfg, n, seed=0, loc=0.0, step=0, taps=1):
+    feats, targets = _stream(cfg, n, seed=seed, loc=loc, taps=taps)
+    sink(TapBatch(model="m", step=step, feats=feats, targets=targets,
+                  mask=np.ones(n, bool)))
+    return feats, targets
+
+
+class TestTaps:
+    def test_tapped_decode_step_is_bit_neutral(self, setup):
+        cfg, params = setup
+        state = model.init_decode_state(cfg, 2, 8)
+        toks = jnp.asarray([3, 5], jnp.int32)
+        pos = jnp.asarray([0, 0], jnp.int32)
+        inputs = {"tokens": toks}
+        logits0, state0 = model.decode_step(params, cfg, state, inputs, pos)
+        logits1, state1, taps = model.decode_step(
+            params, cfg, state, inputs, pos, tap_layers=(0, 1))
+        np.testing.assert_array_equal(np.asarray(logits0),
+                                      np.asarray(logits1))
+        for a, b in zip(jax.tree.leaves(state0), jax.tree.leaves(state1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert taps.shape == (2, 2, 1, cfg.d_model)
+        assert taps.dtype == jnp.float32
+
+    def test_tap_layer_validation(self, setup):
+        cfg, params = setup
+        state = model.init_decode_state(cfg, 1, 8)
+        with pytest.raises(ValueError, match="tap_layers"):
+            model.decode_step(params, cfg, state,
+                              {"tokens": jnp.asarray([0], jnp.int32)},
+                              jnp.asarray([0], jnp.int32),
+                              tap_layers=(cfg.num_cycles,))
+
+    def test_tap_config_validation(self):
+        with pytest.raises(ValueError, match="pool"):
+            TapConfig(model="m", pool="max")
+        with pytest.raises(ValueError, match="target"):
+            TapConfig(model="m", target="loss")
+
+    def test_probe_targets_are_sane(self):
+        logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16)),
+                             jnp.float32)
+        ent = probe_target(logits, "entropy")
+        mlp = probe_target(logits, "max_logprob")
+        mar = probe_target(logits, "margin")
+        assert ent.shape == mlp.shape == mar.shape == (4,)
+        assert (ent >= 0).all() and (mlp <= 0).all() and (mar >= 0).all()
+        with pytest.raises(ValueError, match="target"):
+            probe_target(logits, "perplexity")
+
+    def test_tapped_decode_fn_pools_the_residual(self, setup):
+        cfg, params = setup
+        step = tapped_decode_fn(params, cfg, TapConfig(model="m"))
+        state = model.init_decode_state(cfg, 2, 8)
+        logits, _, feats, targets = step(
+            state, jnp.asarray([1, 2], jnp.int32),
+            jnp.asarray([0, 0], jnp.int32))
+        assert feats.shape == (cfg.num_cycles, 2, cfg.d_model)
+        assert targets.shape == (2,)
+        np.testing.assert_array_equal(
+            np.asarray(targets),
+            np.asarray(probe_target(logits, "entropy")))
+
+
+class TestBridgeBitIdentity:
+    def test_single_window_matches_vanilla_sketch_features(
+            self, setup, pcfg, gparams):
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        feats, targets = _push(sink, cfg, 40, seed=3)
+        assert bridge.flush() == 40
+        live = bridge.probe_state("m", 0)
+        off = probes.sketch_features(jax.random.PRNGKey(7),
+                                     jnp.asarray(feats[0]),
+                                     jnp.asarray(targets), pcfg)
+        np.testing.assert_array_equal(np.asarray(live.sketch.counts),
+                                      np.asarray(off.sketch.counts))
+        assert int(live.sketch.n) == int(off.sketch.n) == 40
+        for f in ("x_mean", "x_scale", "y_mean", "y_scale", "scale"):
+            np.testing.assert_array_equal(np.asarray(getattr(live, f)),
+                                          np.asarray(getattr(off, f)))
+        assert gw.trace_count <= 3
+
+    def test_multi_window_matches_frozen_moment_build(
+            self, setup, pcfg, gparams):
+        """Three window flushes; the offline comparator is ONE
+        sketch_features over the concatenated activations under the FIRST
+        window's frozen moments. Order-free integer counters + an
+        elementwise row map make this exact."""
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        chunks = []
+        for w in range(3):
+            chunks.append(_push(sink, cfg, 20, seed=10 + w, loc=0.3 * w,
+                                step=w))
+            bridge.flush()  # the first flush freezes the slot's moments
+        frozen = bridge.moments_of("m", 0)
+        live = bridge.probe_state("m", 0)
+        all_feats = jnp.asarray(np.concatenate([f[0] for f, _ in chunks]))
+        all_tgts = jnp.asarray(np.concatenate([t for _, t in chunks]))
+        off = probes.sketch_features(jax.random.PRNGKey(7), all_feats,
+                                     all_tgts, pcfg, moments=frozen)
+        np.testing.assert_array_equal(np.asarray(live.sketch.counts),
+                                      np.asarray(off.sketch.counts))
+        assert int(live.sketch.n) == 60
+        # The frozen moments ARE the first window's self-moments.
+        first = probes.probe_rows(jnp.asarray(chunks[0][0][0]),
+                                  jnp.asarray(chunks[0][1]), pcfg)[1]
+        np.testing.assert_array_equal(np.asarray(frozen.x_mean),
+                                      np.asarray(first.x_mean))
+        assert gw.trace_count <= 3
+
+    def test_fit_probes_matches_offline_fit_bit_for_bit(
+            self, setup, pcfg, gparams):
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(1,)), cfg)
+        feats, targets = _push(sink, cfg, 48, seed=5)
+        bridge.flush()
+        live = bridge.fit_probes(jax.random.PRNGKey(3))
+        off_state = probes.sketch_features(jax.random.PRNGKey(7),
+                                           jnp.asarray(feats[0]),
+                                           jnp.asarray(targets), pcfg)
+        off = probes.fit_probe_many(jax.random.PRNGKey(3), [off_state],
+                                    cfg.d_model)
+        np.testing.assert_array_equal(np.asarray(live.theta),
+                                      np.asarray(off.theta))
+        np.testing.assert_array_equal(np.asarray(live.intercept),
+                                      np.asarray(off.intercept))
+
+    def test_fit_request_path_matches_offline_spine(
+            self, setup, pcfg, gparams):
+        """The in-loop refresh: the gateway trains the tap cohort from its
+        live counters; erm.fit_many over the same counters and seed is the
+        oracle (the test_serve_fit contract, through the bridge)."""
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=2, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0, 1)), cfg)
+        _push(sink, cfg, 32, seed=6, taps=2)
+        bridge.flush()
+        req = bridge.fit_request(rid=9, seed=4, steps=10)
+        assert req.tenants == [0, 1]
+        gw.submit(req)
+        rep = gw.tick()
+        fit = rep.fits[0]
+        bank = sketch_lib.SketchBank(
+            counts=jnp.stack([gw.bank.counts[t].astype(jnp.int32)
+                              for t in req.tenants]),
+            n=jnp.asarray([gw.bank.n[t] for t in req.tenants], jnp.int32))
+        cfg_d = dfo.DFOConfig(steps=req.steps, num_queries=req.num_queries,
+                              sigma=req.sigma,
+                              learning_rate=req.learning_rate,
+                              decay=req.decay)
+        want = erm.fit_many(req.surrogate, bank, gparams,
+                            jax.random.PRNGKey(req.seed), dfo_config=cfg_d,
+                            restarts=req.restarts, l2=req.l2,
+                            refine_steps=req.refine_steps)
+        np.testing.assert_array_equal(fit.theta, np.asarray(want.theta))
+        assert gw.trace_count <= 3
+
+    def test_bridge_over_tiered_gateway(self, setup, pcfg, gparams):
+        """Telemetry is ordinary ingest to the tiered store too: counters
+        match the flat-gateway build and the swap program stays within the
+        tiered budget (trace_count <= 4)."""
+        cfg, _ = setup
+        tiered = TieredStormGateway(gparams, 3, 2, ingest_slots=512)
+        bridge = TelemetryBridge(tiered, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0, 1)), cfg)
+        feats, targets = _push(sink, cfg, 30, seed=8, taps=2)
+        bridge.flush()
+        off = probes.sketch_features(jax.random.PRNGKey(7),
+                                     jnp.asarray(feats[0]),
+                                     jnp.asarray(targets), pcfg)
+        live = bridge.probe_state("m", 0)
+        np.testing.assert_array_equal(np.asarray(live.sketch.counts),
+                                      np.asarray(off.sketch.counts))
+        assert tiered.trace_count <= 4
+
+
+class TestBridgeValidation:
+    def test_rejects_unpaired_gateway(self, gparams, pcfg):
+        gw = StormGateway(gparams, tenants=1, paired=False)
+        with pytest.raises(ValueError, match="paired"):
+            TelemetryBridge(gw, pcfg)
+
+    def test_rejects_hash_family_mismatch(self, setup, pcfg):
+        cfg, _ = setup
+        wrong = lsh.init_srp(jax.random.PRNGKey(0), 32, 3, cfg.d_model + 3)
+        with pytest.raises(ValueError, match="rows/planes"):
+            TelemetryBridge(StormGateway(wrong, tenants=1), pcfg)
+
+    def test_rejects_wrong_dim_at_register(self, setup, pcfg):
+        cfg, _ = setup
+        wrong = lsh.init_srp(jax.random.PRNGKey(0), pcfg.rows, pcfg.planes,
+                             cfg.d_model + 1)
+        bridge = TelemetryBridge(StormGateway(wrong, tenants=4), pcfg)
+        with pytest.raises(ValueError, match="d_model"):
+            bridge.register(TapConfig(model="m"), cfg)
+
+    def test_rejects_slot_overflow_and_duplicates(self, setup, pcfg,
+                                                  gparams):
+        cfg, _ = setup
+        bridge = TelemetryBridge(StormGateway(gparams, tenants=1), pcfg)
+        bridge.register(TapConfig(model="a", layers=(0,)), cfg)
+        with pytest.raises(ValueError, match="already registered"):
+            bridge.register(TapConfig(model="a", layers=(1,)), cfg)
+        with pytest.raises(ValueError, match="tenants"):
+            bridge.register(TapConfig(model="b", layers=(0, 1)), cfg)
+
+    def test_unregistered_model_and_unflushed_state(self, setup, pcfg,
+                                                    gparams):
+        cfg, _ = setup
+        bridge = TelemetryBridge(StormGateway(gparams, tenants=2), pcfg)
+        bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        with pytest.raises(KeyError):
+            bridge.on_taps(TapBatch(model="ghost", step=0,
+                                    feats=np.zeros((1, 1, cfg.d_model),
+                                                   np.float32),
+                                    targets=np.zeros(1, np.float32),
+                                    mask=np.ones(1, bool)))
+        with pytest.raises(ValueError, match="no window"):
+            bridge.moments_of("m", 0)
+        with pytest.raises(ValueError, match="no flushed"):
+            bridge.fit_probes(jax.random.PRNGKey(0))
+
+
+class TestDriftMonitor:
+    def test_counter_distance_basics(self):
+        a = np.asarray([[4, 4, 0, 0], [2, 2, 2, 2]], np.int64)
+        assert counter_distance(a, 4, a, 4) == 0.0
+        assert counter_distance(a, 0, a, 4) == 0.0  # no evidence != drift
+        b = np.asarray([[0, 0, 4, 4], [2, 2, 2, 2]], np.int64)
+        assert counter_distance(a, 4, b, 4) == pytest.approx(0.5)
+
+    def test_window_delta_is_the_window_sketch(self):
+        prev = np.asarray([[3, 1]], np.int32)
+        cur = np.asarray([[5, 4]], np.int32)
+        np.testing.assert_array_equal(np.asarray(window_delta(
+            jnp.asarray(prev), jnp.asarray(cur))), [[2, 3]])
+
+    def test_quiet_on_null_flags_on_shift(self, setup, pcfg, gparams):
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=4096)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        mon = DriftMonitor(bridge, reference_windows=1,
+                           calibration_windows=3)
+        for w in range(7):
+            _push(sink, cfg, 200, seed=100 + w, step=w)
+            bridge.flush()
+        st = mon.status()
+        assert not st["any_flagged"]
+        assert st["slots"][0]["threshold"] is not None
+        assert mon.flagged() == []
+        _push(sink, cfg, 200, seed=999, loc=2.0, step=99)
+        bridge.flush()
+        st = mon.status()
+        assert st["any_flagged"]
+        flagged = mon.flagged()
+        assert flagged and flagged[0]["tenant"] == 0
+        # Score and flag land in the bridge's stats frame too.
+        assert bridge.telemetry_stats()["drift"]["any_flagged"]
+
+    def test_continuous_refresh_trains_from_served_counters(
+            self, setup, pcfg, gparams):
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=4096)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        mon = DriftMonitor(bridge, reference_windows=1,
+                           calibration_windows=1, refresh_every=2)
+        for w in range(6):
+            _push(sink, cfg, 64, seed=200 + w, step=w)
+            bridge.flush()
+        assert mon.refreshes >= 1
+        assert mon.last_fit is not None
+        assert np.asarray(mon.last_fit.theta).shape[-1] == cfg.d_model
+
+    def test_validation(self, setup, pcfg, gparams):
+        bridge = TelemetryBridge(StormGateway(gparams, tenants=1), pcfg)
+        with pytest.raises(ValueError, match="reference"):
+            DriftMonitor(bridge, reference_windows=0)
+        with pytest.raises(ValueError, match="calibration"):
+            DriftMonitor(bridge, calibration_windows=0)
+
+
+class TestEngineToGateway:
+    def test_served_tokens_unchanged_and_counters_flow(self, setup, pcfg,
+                                                       gparams):
+        """The full loop: engine decodes with taps, the bridge ingests
+        between steps, tokens match the untapped engine, and the gateway
+        holds real counters — within every trace budget."""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        mk = lambda: [Request(rid=i,
+                              prompt=rng.integers(
+                                  0, cfg.vocab_size, size=4).astype(np.int32),
+                              max_new_tokens=5) for i in range(4)]
+        reqs_a = mk()
+        rng = np.random.default_rng(1)
+        reqs_b = mk()
+        plain = ServeEngine(params, cfg, slots=2, cache_len=32).run(reqs_a)
+
+        gw = StormGateway(gparams, tenants=cfg.num_cycles, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, window=8)
+        tap = TapConfig(model="qwen2-7b")
+        sink = bridge.register(tap, cfg)
+        eng = ServeEngine(params, cfg, slots=2, cache_len=32,
+                          taps=tap, tap_sink=sink)
+        tapped = eng.run(reqs_b)
+        assert {c.rid: c.tokens for c in plain} == \
+               {c.rid: c.tokens for c in tapped}
+        bridge.flush()  # tail window
+        stats = bridge.telemetry_stats()
+        assert all(s["rows_ingested"] > 0 for s in stats["slots"])
+        assert int(gw.bank.n[0]) > 0
+        assert gw.trace_count <= 3 and eng._reset_traces == 1
+
+    def test_wire_stats_frame_carries_telemetry(self, setup, pcfg,
+                                                gparams):
+        cfg, _ = setup
+        gw = StormGateway(gparams, tenants=1, ingest_slots=512)
+        bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+        sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+        _push(sink, cfg, 16, seed=9)
+        bridge.flush()
+        server = StormWireServer(gw, port=0, telemetry=bridge).start()
+        try:
+            client = StormWireClient(*server.address)
+            stats = client.stats()
+            assert "telemetry" in stats
+            assert stats["telemetry"]["slots"][0]["rows_ingested"] == 16
+            client.close()
+        finally:
+            server.stop()
