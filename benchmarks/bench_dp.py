@@ -1,0 +1,212 @@
+"""DP serving benchmarks: what privatize-on-read costs in utility and time.
+
+Two measurements back the privacy layer (DESIGN.md §15), all as
+``name,us_per_call,derived`` rows:
+
+* **Utility vs eps** — cohort fits trained THROUGH the serving stack
+  (ingest -> private release -> ``FitRequest`` over the released
+  counters) at a ladder of per-release budgets, for the regression and
+  classification surrogates. ``derived`` is the cohort's mean fleet loss;
+  ``@eps=inf`` is the noiseless identity path and anchors the curve —
+  utility must degrade monotonically-ish as eps shrinks, and the eps=inf
+  row must match the privacy=None gateway (pinned by tests, reported here
+  as the ``dp/identity_gap`` row whose derived field is the |loss
+  difference|, exactly 0.0).
+* **Refuse-path overhead A/B** — a tick of queries served from open
+  release windows vs the same traffic refused by exhausted tenants
+  (terminal completion at plan time, before packing).
+  ``dp/refuse_overhead``'s derived field is refuse-tick/serve-tick time;
+  the refusal path must not cost more than serving (bar: <= 1.5 — it
+  skips the device estimate entirely, but still dispatches the tick).
+
+``run(smoke=True)`` shrinks shapes/iters for the CI bench-smoke job.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import lsh
+from repro.core.privacy import ReleasePolicy
+from repro.serve.storm_gateway import (
+    FitRequest, IngestRequest, QueryRequest, StormGateway,
+)
+
+D = 8          # sketch-space dim (params hash D + 2)
+TENANTS = 4
+EPS_LADDER = (0.25, 1.0, 4.0, 16.0, math.inf)
+EPS_LADDER_SMOKE = (1.0, 16.0, math.inf)
+
+
+def _streams(tenants: int, n: int, seed: int = 0):
+    """Clustered per-tenant streams: a loss landscape worth fitting."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for t in range(tenants):
+        center = rng.normal(size=D).astype(np.float32)
+        center *= 0.5 / np.linalg.norm(center)
+        z = center + 0.15 * rng.normal(size=(n, D)).astype(np.float32)
+        out.append(np.clip(z, -0.9, 0.9).astype(np.float32))
+    return out
+
+
+def _ingest_rows(z: np.ndarray, paired: bool) -> np.ndarray:
+    """Paired gateways PRP-insert raw unit-ball points; single-sided ones
+    (the margin surrogates) ingest pre-augmented rows."""
+    if paired:
+        return z
+    import jax.numpy as jnp
+
+    from repro.core import lsh as lsh_lib
+
+    scaled, _ = lsh_lib.scale_to_unit_ball(jnp.asarray(z))
+    return np.asarray(lsh_lib.augment_data(scaled), np.float32)
+
+
+def _policy(eps: float) -> Optional[ReleasePolicy]:
+    if math.isinf(eps):
+        return None  # the identity gateway: no private machinery at all
+    return ReleasePolicy(epsilon_total=1e9, epsilon_release=eps)
+
+
+def _served_fit(eps: float, surrogate: str, n_rows: int, steps: int,
+                seed: int = 0, paired: bool = True):
+    """Ingest -> (private) release -> cohort fit; returns (us, mean loss)."""
+    params = lsh.init_srp(jax.random.PRNGKey(seed), 128, 4, D + 2)
+    gw = StormGateway(params, TENANTS, query_slots=8, ingest_slots=512,
+                      paired=paired, privacy=_policy(eps),
+                      privacy_seed=seed)
+    rids = itertools.count()
+    for t, z in enumerate(_streams(TENANTS, n_rows, seed=seed + 1)):
+        gw.submit(IngestRequest(rid=next(rids), tenant=t,
+                                z=_ingest_rows(z, paired)))
+    gw.run_until_idle()
+    gw.submit(FitRequest(rid=next(rids), tenants=list(range(TENANTS)),
+                         surrogate=surrogate, seed=seed, steps=steps))
+    t0 = time.perf_counter()
+    fit = gw.tick().fits[0]
+    us = (time.perf_counter() - t0) * 1e6
+    assert fit.status == "ok"
+    return us, float(np.mean(np.asarray(fit.fleet_losses)))
+
+
+def _bench_utility_vs_eps(rows: List[str], print_fn, smoke: bool) -> None:
+    ladder = EPS_LADDER_SMOKE if smoke else EPS_LADDER
+    n_rows = 128 if smoke else 512
+    steps = 20 if smoke else 120
+    for surrogate, tag, paired in (
+            ("prp_regression", "regression", True),
+            ("margin_classification", "classification", False)):
+        losses = {}
+        for eps in ladder:
+            us, loss = _served_fit(eps, surrogate, n_rows, steps,
+                                   paired=paired)
+            losses[eps] = loss
+            eps_tag = "inf" if math.isinf(eps) else f"{eps:g}"
+            row = f"dp/{tag}@eps={eps_tag},{us:.0f},{loss:.5f}"
+            rows.append(row)
+            print_fn(row)
+        # eps=inf through the policy API vs privacy=None: the identity
+        # contract, measured (tests pin it bit-level; this row keeps the
+        # bench self-auditing).
+        _, loss_unl = _served_fit_unlimited_policy(surrogate, n_rows, steps,
+                                                   paired=paired)
+        gap = abs(loss_unl - losses[math.inf])
+        row = f"dp/identity_gap_{tag},0,{gap:.7f}"
+        rows.append(row)
+        print_fn(row)
+
+
+def _served_fit_unlimited_policy(surrogate: str, n_rows: int, steps: int,
+                                 paired: bool = True):
+    """Same as eps=inf but THROUGH ReleasePolicy.unlimited()."""
+    params = lsh.init_srp(jax.random.PRNGKey(0), 128, 4, D + 2)
+    gw = StormGateway(params, TENANTS, query_slots=8, ingest_slots=512,
+                      paired=paired, privacy=ReleasePolicy.unlimited(),
+                      privacy_seed=0)
+    rids = itertools.count()
+    for t, z in enumerate(_streams(TENANTS, n_rows, seed=1)):
+        gw.submit(IngestRequest(rid=next(rids), tenant=t,
+                                z=_ingest_rows(z, paired)))
+    gw.run_until_idle()
+    gw.submit(FitRequest(rid=next(rids), tenants=list(range(TENANTS)),
+                         surrogate=surrogate, seed=0, steps=steps))
+    t0 = time.perf_counter()
+    fit = gw.tick().fits[0]
+    us = (time.perf_counter() - t0) * 1e6
+    return us, float(np.mean(np.asarray(fit.fleet_losses)))
+
+
+def _bench_refuse_overhead(rows: List[str], print_fn, smoke: bool) -> None:
+    params = lsh.init_srp(jax.random.PRNGKey(3), 128, 4, D + 2)
+    streams = _streams(TENANTS, 64, seed=4)
+    rng = np.random.default_rng(5)
+    thetas = [rng.normal(size=(4, D)).astype(np.float32)
+              for _ in range(TENANTS)]
+
+    def build(epsilon_total):
+        gw = StormGateway(params, TENANTS, query_slots=16, ingest_slots=128,
+                          privacy=ReleasePolicy(epsilon_total=epsilon_total),
+                          privacy_seed=6)
+        rids = itertools.count()
+        for t, z in enumerate(streams):
+            gw.submit(IngestRequest(rid=next(rids), tenant=t, z=z))
+        gw.run_until_idle()
+        # One query round spends a release per tenant, then an ingest
+        # round closes every window.
+        for t in range(TENANTS):
+            gw.submit(QueryRequest(rid=next(rids), tenant=t,
+                                   thetas=thetas[t]))
+        gw.run_until_idle()
+        for t, z in enumerate(streams):
+            gw.submit(IngestRequest(rid=next(rids), tenant=t, z=z[:4]))
+        gw.run_until_idle()
+        return gw, rids
+
+    # A: everyone solvent -> every tick is a fresh release round.
+    serve_gw, serve_rids = build(epsilon_total=1e9)
+    # B: everyone exhausted (1 release funded) -> every tick refuses.
+    refuse_gw, refuse_rids = build(epsilon_total=1.0)
+
+    def round_of(gw, rids):
+        for t in range(TENANTS):
+            gw.submit(QueryRequest(rid=next(rids), tenant=t,
+                                   thetas=thetas[t]))
+        got = gw.run_until_idle()
+        assert len(got) == TENANTS
+
+    round_of(serve_gw, serve_rids)  # warm
+    round_of(refuse_gw, refuse_rids)
+    iters = 5 if smoke else 30
+    best_s = best_r = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        round_of(serve_gw, serve_rids)
+        best_s = min(best_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        round_of(refuse_gw, refuse_rids)
+        best_r = min(best_r, time.perf_counter() - t0)
+    assert refuse_gw.queries_refused >= TENANTS * iters
+    us_s, us_r = best_s * 1e6, best_r * 1e6
+    for row in (f"dp/serve_tick,{us_s:.0f},{TENANTS / max(us_s, 1e-9):.4f}",
+                f"dp/refuse_tick,{us_r:.0f},{TENANTS / max(us_r, 1e-9):.4f}",
+                f"dp/refuse_overhead,{us_r:.0f},{us_r / us_s:.2f}"):
+        rows.append(row)
+        print_fn(row)
+
+
+def run(print_fn=print, smoke: bool = False) -> List[str]:
+    rows: List[str] = []
+    _bench_utility_vs_eps(rows, print_fn, smoke)
+    _bench_refuse_overhead(rows, print_fn, smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -35,8 +35,8 @@ def _parse_row(row: str):
 
 def main() -> None:
     from benchmarks import (bench_classification, bench_distributed,
-                            bench_kernels, bench_regression, bench_serve,
-                            bench_serve_load, bench_surrogate,
+                            bench_dp, bench_kernels, bench_regression,
+                            bench_serve, bench_serve_load, bench_surrogate,
                             bench_telemetry, bench_tiered)
 
     suites = {
@@ -50,6 +50,7 @@ def main() -> None:
         "serve_load": bench_serve_load.run,
         "tiered": bench_tiered.run,
         "telemetry": bench_telemetry.run,
+        "dp": bench_dp.run,
     }
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("suite", nargs="*",

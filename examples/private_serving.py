@@ -1,0 +1,89 @@
+"""A tenant trains over the wire while its eps budget drains to exhaustion.
+
+The privacy layer end to end (DESIGN.md §15): the server runs a
+:class:`~repro.serve.storm_gateway.StormGateway` under a finite
+:class:`~repro.core.privacy.ReleasePolicy`, so every query/fit round is
+served from ONE noisy release of the tenant's counters per tick
+(privatize-on-read; re-reads of unchanged counters are free). The client
+ingests a private stream, trains a regression surrogate from the released
+counters round after round, and watches its remaining eps drop through the
+``budget`` wire frame — until the ledger refuses the release and the
+``*_sync`` helper surfaces the terminal ``budget_exceeded`` frame as
+:class:`~repro.serve.wire.BudgetExceeded` (not retryable: unlike
+backpressure, waiting cannot mint new budget).
+
+Run: PYTHONPATH=src python examples/private_serving.py
+"""
+
+import itertools
+
+import jax
+import numpy as np
+
+from repro.core import lsh
+from repro.core.privacy import ReleasePolicy
+from repro.serve.storm_gateway import StormGateway
+from repro.serve.wire import BudgetExceeded, StormWireClient, StormWireServer
+
+D = 8  # sketch-space dim
+
+
+def main() -> None:
+    # Each fit over the cohort of one costs one release (eps 1.0); the
+    # lifetime budget funds exactly four.
+    policy = ReleasePolicy(epsilon_total=4.0, epsilon_release=1.0,
+                           mechanism="laplace", on_exhaust="refuse")
+    params = lsh.init_srp(jax.random.PRNGKey(0), rows=256, planes=4,
+                          dim=D + 2)
+    gw = StormGateway(params, tenants=2, query_slots=16, ingest_slots=256,
+                      privacy=policy, privacy_seed=0)
+    server = StormWireServer(gw, port=0).start()
+    client = StormWireClient(*server.address)
+    rids = itertools.count()
+    print(f"server on {server.address[0]}:{server.address[1]} — "
+          f"eps_total={policy.epsilon_total}, "
+          f"eps/release={policy.epsilon_release}, "
+          f"on_exhaust={policy.on_exhaust}")
+
+    rng = np.random.default_rng(1)
+    center = rng.normal(size=D).astype(np.float32)
+    center *= 0.5 / np.linalg.norm(center)
+
+    try:
+        for round_idx in itertools.count(1):
+            # New private rows close the previous release window: the next
+            # read is a NEW release and costs eps_release.
+            z = center + 0.15 * rng.normal(size=(64, D)).astype(np.float32)
+            rid = next(rids)
+            client.ingest(rid, 0, np.clip(z, -0.9, 0.9))
+            header, _ = client.recv()
+            assert header["type"] == "ingest_ok"
+
+            try:
+                theta, fleet_losses = client.fit_sync(
+                    next(rids), [0], surrogate="prp_regression",
+                    seed=round_idx, steps=40)
+            except BudgetExceeded as exc:
+                print(f"round {round_idx}: TERMINAL — {exc} "
+                      f"(retryable={exc.header['retryable']})")
+                break
+
+            budget = client.budget()
+            loss = float(np.min(np.asarray(fleet_losses)[0]))
+            print(f"round {round_idx}: fit loss {loss:+.4f}  "
+                  f"spent {budget['spent'].get('0', 0.0):.1f}  "
+                  f"remaining {budget['remaining'].get('0')}")
+
+        budget = client.budget()
+        print(f"final ledger: spent={budget['spent']} "
+              f"exhausted={budget['exhausted']} "
+              f"({budget['releases']} releases served)")
+        # An on_exhaust="stale" policy would instead keep serving the last
+        # cached release (results tagged "stale": true on the wire).
+    finally:
+        client.close()
+        server.stop()
+
+
+if __name__ == "__main__":
+    main()

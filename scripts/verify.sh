@@ -18,5 +18,5 @@ if [ -n "$offenders" ]; then
 fi
 
 python -m pytest -q "$@"
-python -m benchmarks.run kernels serve tiered surrogate telemetry --json BENCH_kernels.json
+python -m benchmarks.run kernels serve tiered surrogate telemetry dp --json BENCH_kernels.json
 python -m benchmarks.bench_serve_load --smoke --json "$(mktemp)"

@@ -1,5 +1,24 @@
 """Differential privacy for STORM sketches (paper §2.2, refs [11, 21]).
 
+Since PR 10 this module is a LAYER, not a leaf (DESIGN.md §15): the
+mechanism math below is wrapped by three serving-facing types —
+
+* :class:`ReleasePolicy` — a declarative release contract (mechanism,
+  per-release ``eps`` cost, noise scale as pure host math) shared by every
+  tier of the stack. ``eps = inf`` is the identity policy: callers bypass
+  the private machinery entirely, so unlimited-budget serving is
+  bit-identical to the non-private gateways *by construction*.
+* :class:`EpsilonLedger` — per-tenant budget accounting under sequential
+  composition. Spend-on-release, append-only (monotone), exact sums via
+  ``math.fsum``; exhaustion is a typed :class:`BudgetState`, not an
+  exception lost inside a tick.
+* :class:`PrivateBankView` — privatize-on-read over a
+  :class:`~repro.core.sketch.SketchBank`: ONE noisy release per
+  (tenant, counter-version), covering every query coalesced into that
+  release window (micro-batching is a privacy amplifier — k queries in one
+  tick cost one release), with the noise cached so re-reads of unchanged
+  counters are free (post-processing of the same release).
+
 Two mechanisms, composable:
 
 * **Private counts** — add Laplace noise to every counter. One example
@@ -26,11 +45,13 @@ Two mechanisms, composable:
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
-from typing import Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import lsh, sketch as sketch_lib
 
@@ -54,13 +75,43 @@ class PrivateSketch:
         return self.counts.shape[1]
 
 
+def count_noise(key: Array, shape, epsilon: float, rows: int,
+                paired: bool = True, mechanism: str = "laplace",
+                delta: float = 1e-6) -> Array:
+    """Sample the f32 noise table of one count release.
+
+    One example touches ``rows`` counters (``2*rows`` for PRP), so the
+    count array's L1 sensitivity is ``rows`` (resp. ``2*rows``) and its L2
+    sensitivity ``sqrt(rows)`` (resp. ``sqrt(2*rows)``). ``laplace`` gives
+    pure ``epsilon``-DP; ``gaussian`` gives ``(epsilon, delta)``-DP at the
+    :func:`gaussian_sigma` scale.
+    """
+    touched = (2.0 if paired else 1.0) * rows
+    if mechanism == "laplace":
+        scale = touched / float(epsilon)
+        return jax.random.laplace(key, shape, dtype=jnp.float32) * scale
+    if mechanism == "gaussian":
+        sigma = gaussian_sigma(epsilon, delta, sensitivity=math.sqrt(touched))
+        return jax.random.normal(key, shape, dtype=jnp.float32) * sigma
+    raise ValueError(f"unknown mechanism {mechanism!r}; "
+                     f"choose 'laplace' or 'gaussian'")
+
+
 def privatize_counts(
-    key: Array, sk: sketch_lib.Sketch, epsilon: float, paired: bool = True
+    key: Array, sk: sketch_lib.Sketch, epsilon: float, paired: bool = True,
+    mechanism: str = "laplace", delta: float = 1e-6
 ) -> PrivateSketch:
-    """Release the sketch with example-level ``epsilon``-DP (Laplace mechanism)."""
-    sensitivity = (2.0 if paired else 1.0) * sk.rows
-    scale = sensitivity / epsilon
-    noise = jax.random.laplace(key, sk.counts.shape) * scale
+    """Release the sketch with example-level DP on the counters.
+
+    The counters are widened to f32 BEFORE the noise add. Order matters on
+    narrow banks (int16/int8, DESIGN.md §12): adding float noise into the
+    integer dtype would truncate/saturate the noise itself and break the
+    mechanism's calibration — the release must be ``f32(counts) + noise``,
+    never ``f32(counts + noise_cast_narrow)`` (pinned by a regression test
+    alongside the saturation tests).
+    """
+    noise = count_noise(key, sk.counts.shape, epsilon, sk.rows,
+                        paired=paired, mechanism=mechanism, delta=delta)
     return PrivateSketch(counts=sk.counts.astype(jnp.float32) + noise, n=sk.n)
 
 
@@ -84,6 +135,278 @@ def gaussian_sigma(epsilon: float, delta: float, sensitivity: float = 2.0) -> fl
     """
     return float(sensitivity) * math.sqrt(2.0 * math.log(1.25 / float(delta))) \
         / float(epsilon)
+
+
+# ---------------------------------------------------------------------------
+# The privacy layer: policy, ledger, privatize-on-read view (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+class BudgetState(enum.Enum):
+    """Typed budget status — serving routes on this, it never raises."""
+
+    OK = "ok"
+    EXHAUSTED = "exhausted"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReleasePolicy:
+    """Declarative release contract shared by bank, gateways, and wire.
+
+    Attributes:
+      epsilon_total: per-tenant lifetime budget. ``inf`` = unlimited.
+      epsilon_release: eps charged per count release. ``inf`` marks the
+        identity (noiseless) policy — callers MUST bypass the private
+        machinery entirely (``noiseless`` property), which is what makes
+        unlimited serving bit-identical to the non-private path by
+        construction rather than by floating-point luck.
+      delta: failure probability for the ``gaussian`` mechanism (unused by
+        ``laplace``).
+      mechanism: ``"laplace"`` (pure eps-DP) or ``"gaussian"``
+        ((eps, delta)-DP).
+      on_exhaust: what an exhausted tenant's reads get — ``"refuse"``
+        (typed refusal, the wire's terminal ``budget_exceeded`` frame) or
+        ``"stale"`` (the last cached release, free under post-processing).
+    """
+
+    epsilon_total: float = math.inf
+    epsilon_release: float = 1.0
+    delta: float = 1e-6
+    mechanism: str = "laplace"
+    on_exhaust: str = "refuse"
+
+    def __post_init__(self):
+        if self.mechanism not in ("laplace", "gaussian"):
+            raise ValueError(f"unknown mechanism {self.mechanism!r}")
+        if self.on_exhaust not in ("refuse", "stale"):
+            raise ValueError(f"unknown on_exhaust {self.on_exhaust!r}")
+        if not self.epsilon_release > 0:
+            raise ValueError("epsilon_release must be positive")
+        if not self.epsilon_total > 0:
+            raise ValueError("epsilon_total must be positive")
+        if math.isinf(self.epsilon_release) and \
+                not math.isinf(self.epsilon_total):
+            raise ValueError("a noiseless policy (epsilon_release=inf) "
+                             "cannot have a finite epsilon_total")
+        if self.mechanism == "gaussian" and not 0.0 < self.delta < 1.0:
+            raise ValueError(f"gaussian delta must be in (0, 1); "
+                             f"got {self.delta}")
+
+    @classmethod
+    def unlimited(cls) -> "ReleasePolicy":
+        """The identity policy: no noise, no accounting, bit-identical."""
+        return cls(epsilon_total=math.inf, epsilon_release=math.inf)
+
+    @property
+    def noiseless(self) -> bool:
+        return math.isinf(self.epsilon_release)
+
+    def noise_scale(self, rows: int, paired: bool = True) -> float:
+        """Per-cell noise scale of one release — pure host math (a Python
+        float; same rationale as :func:`gaussian_sigma`)."""
+        if self.noiseless:
+            return 0.0
+        touched = (2.0 if paired else 1.0) * rows
+        if self.mechanism == "laplace":
+            return touched / self.epsilon_release
+        return gaussian_sigma(self.epsilon_release, self.delta,
+                              sensitivity=math.sqrt(touched))
+
+    def sample_noise(self, key: Array, shape, paired: bool = True) -> Array:
+        """One release's f32 noise table for ``(R, B)``-shaped counters."""
+        if self.noiseless:
+            return jnp.zeros(shape, jnp.float32)
+        return count_noise(key, shape, self.epsilon_release, shape[-2],
+                           paired=paired, mechanism=self.mechanism,
+                           delta=self.delta)
+
+
+class EpsilonLedger:
+    """Per-tenant eps accounting under sequential composition.
+
+    Spend-on-release with an append-only per-tenant log: ``spent`` is
+    ``math.fsum`` over the log (exact against the closed-form sum — the
+    accumulation order cannot drift the budget), hence monotone
+    nondecreasing. A release is affordable iff the remaining budget covers
+    its FULL cost; exactly-zero remaining refuses. ``charge`` never raises:
+    exhaustion comes back as :class:`BudgetState` for the caller to route
+    (refuse-or-stale per policy).
+    """
+
+    def __init__(self, policy: ReleasePolicy):
+        self.policy = policy
+        self._log: Dict[int, List[float]] = {}
+
+    def keys(self):
+        return sorted(self._log)
+
+    def spend_log(self, tenant: int) -> List[float]:
+        return list(self._log.get(tenant, ()))
+
+    def spent(self, tenant: int) -> float:
+        return math.fsum(self._log.get(tenant, ()))
+
+    def remaining(self, tenant: int) -> float:
+        return self.policy.epsilon_total - self.spent(tenant)
+
+    def state(self, tenant: int) -> BudgetState:
+        if self.policy.noiseless:
+            return BudgetState.OK
+        if self.remaining(tenant) >= self.policy.epsilon_release:
+            return BudgetState.OK
+        return BudgetState.EXHAUSTED
+
+    def charge(self, tenant: int) -> BudgetState:
+        """Spend one release's eps if affordable; else EXHAUSTED, no spend."""
+        if self.policy.noiseless:
+            return BudgetState.OK
+        if self.state(tenant) is BudgetState.EXHAUSTED:
+            return BudgetState.EXHAUSTED
+        self._log.setdefault(tenant, []).append(self.policy.epsilon_release)
+        return BudgetState.OK
+
+
+@dataclasses.dataclass
+class _Window:
+    """One cached release: the counter version it covers and its noise."""
+
+    version: int
+    noise: np.ndarray  # (R, B) f32, host-side
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPlan:
+    """The host-side verdict for one tenant's read at one counter version.
+
+    ``status`` routes the serving layer:
+
+    * ``"fresh"`` — rebuild ``f32(counts) + noise`` (a new release if
+      ``spent``, a bit-identical free rebuild of the cached one if not).
+    * ``"stale"`` — serve the last release already resident on a device
+      lane (post-processing: free). ``n`` is the release-time count.
+    * ``"refuse"`` — exhausted with no stale release available (or policy
+      says refuse); the caller completes the request with a typed refusal.
+    """
+
+    status: str
+    noise: Optional[np.ndarray]
+    n: int
+    spent: bool
+
+
+class PrivateBankView:
+    """Privatize-on-read over banked counters with per-tenant windows.
+
+    The view owns the host-side release bookkeeping; the CALLER owns the
+    counters (device bank, host cold copy, or standalone sketch) and, for
+    gateways, the device-side lane buffer holding the last released tables.
+    A *release window* is one counter version (cumulative inserted rows —
+    the caller tracks it on the host, exactly, because it packs the rows):
+    the first read of a version samples noise and charges the ledger; every
+    further read of the SAME version reuses the cached noise — a
+    bit-identical rebuild of the same release, free under post-processing.
+    The version advancing (new ingest) closes the window; the next read is
+    a new release.
+
+    ``mark_resident`` / ``drop_resident`` track which tenants' last release
+    is live on a caller-side device lane — the only thing a ``"stale"``
+    plan may serve. A demoted tenant's lane is dropped (the lane slot gets
+    reused); its window cache survives, so re-promotion at an unchanged
+    version rebuilds the SAME release without spending.
+    """
+
+    def __init__(self, policy: ReleasePolicy, *,
+                 ledger: Optional[EpsilonLedger] = None, seed: int = 0):
+        self.policy = policy
+        self.ledger = ledger if ledger is not None else EpsilonLedger(policy)
+        self._seed = int(seed)
+        self._windows: Dict[int, _Window] = {}
+        self._lane_n: Dict[int, int] = {}  # tenant -> release n on its lane
+        self._seq = 0  # global release ordinal (PRNG stream position)
+        self.releases = 0  # fresh (charged) releases, for stats
+
+    def _sample(self, shape, paired: bool) -> np.ndarray:
+        """Host-side noise draw (Philox, keyed by (seed, release ordinal)).
+
+        Sampled with numpy ON THE HOST so tick packing never blocks on a
+        device readback; the gateway ships the noise in its fused tick
+        buffer like any other packed traffic.
+        """
+        rng = np.random.default_rng((self._seed, self._seq))
+        scale = self.policy.noise_scale(shape[-2], paired=paired)
+        if self.policy.mechanism == "laplace":
+            draw = rng.laplace(0.0, scale, size=shape)
+        else:
+            draw = rng.normal(0.0, scale, size=shape)
+        return draw.astype(np.float32)
+
+    def plan_read(self, tenant: int, version: int, shape,
+                  paired: bool = True) -> ReadPlan:
+        """Plan one read of ``tenant`` at counter ``version`` (= its n)."""
+        w = self._windows.get(tenant)
+        if w is not None and w.version == version:
+            # Open window: same counters, same noise — free re-read.
+            return ReadPlan("fresh", w.noise, version, spent=False)
+        if self.policy.noiseless:
+            return ReadPlan("fresh", np.zeros(shape, np.float32), version,
+                            spent=False)
+        if self.ledger.charge(tenant) is BudgetState.OK:
+            self._seq += 1
+            noise = self._sample(shape, paired)
+            self._windows[tenant] = _Window(version=version, noise=noise)
+            self.releases += 1
+            return ReadPlan("fresh", noise, version, spent=True)
+        if self.policy.on_exhaust == "stale" and tenant in self._lane_n:
+            return ReadPlan("stale", None, self._lane_n[tenant], spent=False)
+        return ReadPlan("refuse", None, 0, spent=False)
+
+    def mark_resident(self, tenant: int) -> None:
+        """The tenant's current window release now lives on a device lane."""
+        w = self._windows.get(tenant)
+        if w is not None:
+            self._lane_n[tenant] = w.version
+
+    def drop_resident(self, tenant: int) -> None:
+        """The tenant's lane was reused (demotion) — stale serving stops."""
+        self._lane_n.pop(tenant, None)
+
+    def read(self, tenant: int, sk: sketch_lib.Sketch,
+             version: Optional[int] = None, paired: bool = True
+             ) -> Tuple[ReadPlan, Optional[PrivateSketch]]:
+        """Standalone privatize-on-read of one sketch (fit paths, benches).
+
+        Returns the plan plus the released sketch for ``"fresh"`` plans;
+        ``"stale"`` hands back ``None`` (the release lives on the CALLER's
+        lane buffer), as does ``"refuse"``.
+        """
+        if version is None:
+            version = int(sk.n)  # host sync; gateways pass their tracker
+        plan = self.plan_read(tenant, version, sk.counts.shape,
+                              paired=paired)
+        if plan.status != "fresh":
+            return plan, None
+        released = sk.counts.astype(jnp.float32) + plan.noise
+        return plan, PrivateSketch(counts=released,
+                                   n=jnp.asarray(plan.n, jnp.int32))
+
+    def summary(self) -> dict:
+        """JSON-safe budget snapshot for the wire stats/budget frames."""
+        def _fin(x: float):
+            return None if math.isinf(x) else x
+        led = self.ledger
+        keys = led.keys()
+        return {
+            "mechanism": self.policy.mechanism,
+            "on_exhaust": self.policy.on_exhaust,
+            "epsilon_total": _fin(self.policy.epsilon_total),
+            "epsilon_release": _fin(self.policy.epsilon_release),
+            "delta": self.policy.delta,
+            "releases": self.releases,
+            "spent": {str(t): led.spent(t) for t in keys},
+            "remaining": {str(t): _fin(led.remaining(t)) for t in keys},
+            "exhausted": [t for t in keys
+                          if led.state(t) is BudgetState.EXHAUSTED],
+        }
 
 
 def private_srp_codes(

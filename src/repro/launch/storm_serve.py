@@ -120,6 +120,14 @@ def _drive_synthetic(gw: StormGateway, args: argparse.Namespace) -> None:
         print(f"cohort fits: {gw.fits_run} x {args.fit_surrogate} over "
               f"{min(args.fit_cohort, args.tenants)} tenants "
               f"({args.fit_steps} DFO steps each, drained between ticks)")
+    stats = gw.queue_stats()
+    if "privacy" in stats:
+        p = stats["privacy"]
+        print(f"privacy: {p['mechanism']} eps_total={p['epsilon_total']} "
+              f"eps/release={p['epsilon_release']} "
+              f"on_exhaust={p['on_exhaust']} -> {p['releases']} releases, "
+              f"{len(p['exhausted'])} tenants exhausted, "
+              f"{p['queries_refused']} queries refused")
     if hasattr(gw, "tiers"):
         tier = gw.queue_stats()["tier"]
         print(f"tiered bank: T={gw.tenants} hot={tier['hot_capacity']} "
@@ -147,9 +155,14 @@ def _drive_listen(gw: StormGateway, args: argparse.Namespace) -> None:
         while True:
             time.sleep(2.0)
             s = gw.queue_stats()
-            print(f"ticks={s['ticks']} pending={s['pending_requests']} "
-                  f"rows={s['rows_ingested']} points={s['points_served']} "
-                  f"traces={s['trace_count']}")
+            line = (f"ticks={s['ticks']} pending={s['pending_requests']} "
+                    f"rows={s['rows_ingested']} "
+                    f"points={s['points_served']} "
+                    f"traces={s['trace_count']}")
+            if "privacy" in s:
+                line += (f" releases={s['privacy']['releases']} "
+                         f"exhausted={len(s['privacy']['exhausted'])}")
+            print(line)
     except KeyboardInterrupt:
         server.stop()
 
@@ -200,7 +213,31 @@ def main() -> None:
                     default="int16",
                     help="tiered resident counter dtype (narrow shrinks "
                          "the device bank; --hot-capacity only)")
+    ap.add_argument("--epsilon-total", type=float, default=None,
+                    help="per-tenant lifetime eps budget (finite value "
+                         "enables privatize-on-read serving; omit for the "
+                         "bit-identical non-private gateway)")
+    ap.add_argument("--epsilon-release", type=float, default=1.0,
+                    help="eps charged per count release (one release per "
+                         "tenant per tick covers all its coalesced queries)")
+    ap.add_argument("--delta", type=float, default=1e-6,
+                    help="gaussian-mechanism delta (--mechanism gaussian)")
+    ap.add_argument("--mechanism", choices=("laplace", "gaussian"),
+                    default="laplace")
+    ap.add_argument("--on-exhaust", choices=("refuse", "stale"),
+                    default="refuse",
+                    help="exhausted tenants: terminal budget_exceeded "
+                         "refusal, or serve the last cached release")
     args = ap.parse_args()
+
+    policy = None
+    if args.epsilon_total is not None:
+        from repro.core.privacy import ReleasePolicy
+
+        policy = ReleasePolicy(epsilon_total=args.epsilon_total,
+                               epsilon_release=args.epsilon_release,
+                               delta=args.delta, mechanism=args.mechanism,
+                               on_exhaust=args.on_exhaust)
 
     params = lsh.init_srp(jax.random.PRNGKey(args.seed), args.rows,
                           args.planes, args.dim + 2)
@@ -212,13 +249,15 @@ def main() -> None:
                                 ingest_slots=args.ingest_slots,
                                 count_dtype=np.dtype(args.count_dtype),
                                 max_pending_rows=args.max_pending_rows,
-                                max_pending_points=args.max_pending_points)
+                                max_pending_points=args.max_pending_points,
+                                privacy=policy, privacy_seed=args.seed)
     else:
         gw = StormGateway(params, args.tenants,
                           query_slots=args.query_slots,
                           ingest_slots=args.ingest_slots,
                           max_pending_rows=args.max_pending_rows,
-                          max_pending_points=args.max_pending_points)
+                          max_pending_points=args.max_pending_points,
+                          privacy=policy, privacy_seed=args.seed)
     if args.listen is not None:
         _drive_listen(gw, args)
     else:

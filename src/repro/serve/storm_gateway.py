@@ -71,14 +71,15 @@ counters, and result ordering included.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, List, Optional, Sequence, Union
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dfo, erm, fleet, losses, lsh, sketch as sketch_lib
+from repro.core import (dfo, erm, fleet, losses, lsh,
+                        privacy as privacy_lib, sketch as sketch_lib)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -175,19 +176,33 @@ class FitRequest:
 
 @dataclasses.dataclass
 class FitResult:
-    """Iterate-space cohort fit: row ``i`` is ``tenants[i]``'s model."""
+    """Iterate-space cohort fit: row ``i`` is ``tenants[i]``'s model.
+
+    ``status`` is the privacy verdict under a finite
+    :class:`~repro.core.privacy.ReleasePolicy`: ``"ok"`` (fresh releases),
+    ``"stale"`` (at least one cohort member trained from its last cached
+    release), or ``"refused"`` (an exhausted member with no stale release —
+    ``theta``/``fleet_losses`` are zero placeholders).
+    """
 
     rid: int
     tenants: List[int]
     theta: np.ndarray         # (S, dim) float32
     fleet_losses: np.ndarray  # (S, F) final sketch-loss per restart member
+    status: str = "ok"
 
 
 @dataclasses.dataclass
 class QueryResult:
+    """``status``: ``"ok"``, ``"stale"`` (served from the tenant's last
+    cached release after budget exhaustion), or ``"refused"`` (exhausted,
+    ``losses`` are zeros — the wire relays a terminal ``budget_exceeded``
+    frame instead of a result)."""
+
     rid: int
     tenant: int
     losses: np.ndarray  # (q,) float32, row i for thetas[i]
+    status: str = "ok"
 
 
 @dataclasses.dataclass
@@ -223,6 +238,7 @@ class _PendingQuery:
     req: QueryRequest
     cursor: int = 0
     out: Optional[np.ndarray] = None
+    status: str = "ok"
 
 
 @dataclasses.dataclass
@@ -300,6 +316,10 @@ class StormGateway:
         axis: str = "bank",
         max_pending_rows: Optional[int] = None,
         max_pending_points: Optional[int] = None,
+        privacy: Optional[privacy_lib.ReleasePolicy] = None,
+        privacy_seed: int = 0,
+        private_view: Optional[privacy_lib.PrivateBankView] = None,
+        privacy_key_of: Optional[Callable[[int], int]] = None,
     ):
         """Args:
           params: the ONE hash family shared by every tenant's sketch.
@@ -324,6 +344,22 @@ class StormGateway:
             leaves the queue unbounded.
           max_pending_points: per-tenant cap on queued query points;
             ``None`` = unbounded.
+          privacy: optional :class:`~repro.core.privacy.ReleasePolicy`.
+            ``None`` or a noiseless policy (``epsilon_release = inf``)
+            leaves the gateway EXACTLY as before — the private machinery
+            (4th tick program, lane buffer, ledger) is not even built, so
+            eps=inf is bit-identical by construction. A finite policy makes
+            every query tick a privatize-on-read: ONE noisy release per
+            (tenant, tick) covers all coalesced queries, charged to the
+            per-tenant ledger; exhausted tenants refuse or serve their
+            last cached release per ``policy.on_exhaust``.
+          privacy_seed: PRNG seed of the release noise stream.
+          private_view: inject a shared
+            :class:`~repro.core.privacy.PrivateBankView` (the tiered
+            gateway shares ONE global view with its inner gateway).
+          privacy_key_of: maps a bank slot to its ledger key (identity by
+            default; the tiered gateway maps slot -> GLOBAL tenant so
+            budgets follow tenants across promote/demote).
         """
         if tenants < 1:
             raise ValueError(f"need at least one tenant; got {tenants}")
@@ -366,9 +402,48 @@ class StormGateway:
         self.rows_ingested = 0
         self.points_served = 0
         self.fits_run = 0
+        self.queries_refused = 0
+        self.fits_refused = 0
         self._trace_events = 0  # fallback trace counter (see trace_count)
+
+        # Privacy layer (DESIGN.md §15). eps=inf / no policy builds NOTHING:
+        # the non-private tick programs below are the whole gateway, so the
+        # unlimited-budget path is bit-identical to the pre-privacy gateway
+        # by construction (there is no zero-noise float path to diverge).
+        self.privacy = privacy
+        self._private = privacy is not None and not privacy.noiseless
+        self._privacy_key_of = privacy_key_of or (lambda slot: slot)
+        self.private_view: Optional[privacy_lib.PrivateBankView] = None
+        self._tick_query_private = None
+        if self._private:
+            if mesh is not None:
+                raise NotImplementedError(
+                    "finite-epsilon privacy is meshless-only for now; "
+                    "eps=inf (ReleasePolicy.unlimited() or privacy=None) "
+                    "runs on a mesh unchanged")
+            self.private_view = (private_view if private_view is not None
+                                 else privacy_lib.PrivateBankView(
+                                     privacy, seed=privacy_seed))
+            # Device-side stale lanes: slot i carries tenant i's last
+            # released table so an exhausted tenant can be served its
+            # cached release without any host round-trip.
+            self._release_buf = jnp.zeros(
+                (tenants, params.rows, params.buckets), jnp.float32)
+            # Host-tracked counter versions (cumulative packed rows == the
+            # device n, exactly — the host packs every row), keyed by the
+            # ledger key so versions follow tenants across slot reuse.
+            self._rows_of: Dict[int, int] = defaultdict(int)
+            init_n = np.asarray(bank.n)
+            if init_n.any():  # warm-start bank: seed the version tracker
+                for slot in range(tenants):
+                    if init_n[slot]:
+                        self._rows_of[self._privacy_key_of(slot)] += \
+                            int(init_n[slot])
+
         self._tick_full, self._tick_ingest, self._tick_query = \
             self._build_ticks()
+        if self._private:
+            self._tick_query_private = self._build_private_tick()
 
     # -- request plumbing ---------------------------------------------------
 
@@ -453,7 +528,7 @@ class StormGateway:
             depth[st.req.tenant] += 1
         for st in self._query_q:
             depth[st.req.tenant] += 1
-        return {
+        stats = {
             "tenants": self.tenants,
             "ticks": self.ticks,
             "pending_requests": self.pending,
@@ -466,6 +541,11 @@ class StormGateway:
             "fits_run": self.fits_run,
             "trace_count": self.trace_count,
         }
+        if self._private:
+            stats["privacy"] = dict(self.private_view.summary(),
+                                    queries_refused=self.queries_refused,
+                                    fits_refused=self.fits_refused)
+        return stats
 
     @property
     def bank(self) -> sketch_lib.SketchBank:
@@ -478,8 +558,10 @@ class StormGateway:
 
     @property
     def trace_count(self) -> int:
-        """Total traces across the three tick programs (jit-stability: this
-        must stay <= 3 for any request mix over the gateway's lifetime).
+        """Total traces across the fixed tick programs (jit-stability: this
+        must stay <= 3 for any request mix over the gateway's lifetime —
+        <= 4 with a finite privacy policy, which adds exactly ONE more
+        fixed program, the masked noise-add private query).
 
         Prefers the jit caches (``_cache_size``, private API) and falls back
         to the gateway's own trace-event counter — each tick program bumps
@@ -487,8 +569,10 @@ class StormGateway:
         so the invariant survives JAX versions that rename the private
         accessor instead of silently reporting zero.
         """
-        sizes = [_jit_cache_size(f) for f in
-                 (self._tick_full, self._tick_ingest, self._tick_query)]
+        progs = [self._tick_full, self._tick_ingest, self._tick_query]
+        if self._tick_query_private is not None:
+            progs.append(self._tick_query_private)
+        sizes = [_jit_cache_size(f) for f in progs]
         if any(s is None for s in sizes):
             return self._trace_events
         return sum(sizes)
@@ -610,6 +694,49 @@ class StormGateway:
         return (shard(tick_full, 6, 3), shard(tick_ingest, 4, 2),
                 shard(tick_query, 4, 1))
 
+    def _build_private_tick(self):
+        """The ONE extra fixed program of a finite privacy policy.
+
+        A masked noise-add on the packed query buffer: per slot, either
+        rebuild this tick's release (``f32(counts) + noise`` — fresh, or a
+        bit-identical free rebuild inside an open window) or carry the
+        slot's stale lane, then run the same fused banked query over the
+        released f32 tables with the RELEASE-TIME denominators. The lanes
+        are an output, so stale serving never needs a host round-trip. The
+        flat buffer is ``[qbuf | qmask | noise | fresh]`` (same fused-H2D
+        discipline as the other programs); ``n_used`` rides as a tiny int32
+        side input to keep release counts exact beyond f32's 2^24.
+
+        The banked query runs in ``mode="ref"`` — the released tables are
+        f32 and the reference gather is the path specified for float
+        counters (the int-tile Pallas kernels are not); the pure-jnp gather
+        fuses fine inside this jitted program.
+        """
+        w = self.w
+        paired = self.paired
+        s, dim, q_cap = self.tenants, self.dim, self.query_slots
+        r, b = self.params.rows, self.params.buckets
+
+        def tick_query_private(counts, stale, flat, n_used):
+            q_end = s * q_cap * dim
+            qm_end = q_end + s * q_cap
+            nz_end = qm_end + s * r * b
+            qbuf = flat[:q_end].reshape(s * q_cap, dim)
+            qmask = flat[q_end:qm_end]
+            noise = flat[qm_end:nz_end].reshape(s, r, b)
+            fresh = flat[nz_end:nz_end + s]
+            released = jnp.where(fresh[:, None, None] > 0,
+                                 counts.astype(jnp.float32) + noise, stale)
+            idx = fleet.member_point_idx(
+                jnp.arange(s, dtype=jnp.int32), qbuf.shape[0])
+            est = ops.query_theta_with_weights(
+                sketch_lib.SketchBank(counts=released, n=n_used),
+                w, qbuf, paired=paired, mode="ref", sketch_idx=idx,
+            )
+            return released, jnp.where(qmask > 0, est, 0.0)
+
+        return jax.jit(self._counting(tick_query_private))
+
     def _pack_ingest(self):
         s, i_cap, dim = self.tenants, self.ingest_slots, self.ingest_dim
         zbuf = np.zeros((s, i_cap, dim), np.float32)
@@ -671,6 +798,68 @@ class StormGateway:
         self._query_q = remaining
         return qbuf, qmask, placements, completes
 
+    # -- privatize-on-read planning (finite policy only) --------------------
+
+    def _plan_private_reads(self) -> Dict[int, privacy_lib.ReadPlan]:
+        """One ReadPlan per slot that will read counters this tick.
+
+        Exactly the slots with >= 1 queued query point: per-tenant slot
+        capacity guarantees each packs at least one point this tick, so
+        each needs (at most) one release — the coalescing argument. Slots
+        whose queue holds only zero-point requests read nothing and are
+        not planned (an empty read must not spend budget). Runs AFTER
+        ``_pack_ingest`` so plans see this tick's post-ingest versions
+        (the program order: ingest applies first, read-your-writes).
+        """
+        shape = (self.params.rows, self.params.buckets)
+        plans: Dict[int, privacy_lib.ReadPlan] = {}
+        for slot in range(self.tenants):
+            if self._pending_points[slot] <= 0:
+                continue
+            key = self._privacy_key_of(slot)
+            plans[slot] = self.private_view.plan_read(
+                key, self._rows_of[key], shape, paired=self.paired)
+        return plans
+
+    def _refuse_queries(self, refused_slots) -> List[_PendingQuery]:
+        """Complete every pending query of the refused slots, typed.
+
+        Refusal happens at plan time, BEFORE packing: refused requests
+        never occupy tick slots, so other tenants in the same tick are
+        untouched. Zero-point requests pass through (they read nothing —
+        an exhausted tenant's empty query still completes ``"ok"``).
+        """
+        if not refused_slots:
+            return []
+        refused: List[_PendingQuery] = []
+        remaining: Deque[_PendingQuery] = deque()
+        for st in self._query_q:
+            pts_left = st.req.thetas.shape[0] - st.cursor
+            if st.req.tenant in refused_slots and pts_left > 0:
+                st.status = "refused"
+                st.out[st.cursor:] = 0.0
+                self._pending_points[st.req.tenant] -= pts_left
+                refused.append(st)
+            else:
+                remaining.append(st)
+        self._query_q = remaining
+        self.queries_refused += len(refused)
+        return refused
+
+    def _private_query_buffers(self, plans):
+        """Per-slot (noise, fresh, n_used) arrays for the private program."""
+        s = self.tenants
+        noise = np.zeros((s, self.params.rows, self.params.buckets),
+                         np.float32)
+        fresh = np.zeros((s,), np.float32)
+        n_used = np.zeros((s,), np.int32)
+        for slot, plan in plans.items():
+            n_used[slot] = plan.n
+            if plan.status == "fresh":
+                noise[slot] = plan.noise
+                fresh[slot] = 1.0
+        return noise, fresh, n_used
+
     def tick_start(self) -> InflightTick:
         """Pack pending traffic and dispatch the fused tick WITHOUT blocking.
 
@@ -689,10 +878,43 @@ class StormGateway:
                                 completes=[], ingest_done=[], rows=0,
                                 points=0)
         zbuf, zmask, rows, ingest_done = self._pack_ingest()
+        plans: Dict[int, privacy_lib.ReadPlan] = {}
+        refused: List[_PendingQuery] = []
+        if self._private:
+            # Host version tracking: the packed rows ARE this tick's
+            # inserts, so versions advance exactly like the device n does.
+            if rows:
+                per_slot = zmask.sum(axis=1)
+                for slot in np.nonzero(per_slot)[0]:
+                    self._rows_of[self._privacy_key_of(int(slot))] += \
+                        int(per_slot[slot])
+            plans = self._plan_private_reads()
+            refused = self._refuse_queries(
+                {s for s, p in plans.items() if p.status == "refuse"})
         qbuf, qmask, placements, completes = self._pack_queries()
+        if refused:
+            completes = refused + completes
+        for st, _, t, _, _ in placements:
+            if t in plans and plans[t].status == "stale":
+                st.status = "stale"
         do_ingest, do_query = rows > 0, bool(placements)
         est = None
-        if self.mesh is None:
+        if self._private:
+            if do_ingest:
+                flat = np.concatenate([zbuf.ravel(), zmask.ravel()])
+                self._counts, self._n = self._tick_ingest(
+                    self._counts, self._n, flat)
+            if do_query:
+                noise, fresh, n_used = self._private_query_buffers(plans)
+                flat = np.concatenate([qbuf.ravel(), qmask.ravel(),
+                                       noise.ravel(), fresh])
+                self._release_buf, est = self._tick_query_private(
+                    self._counts, self._release_buf, flat, n_used)
+                for slot, plan in plans.items():
+                    if plan.status == "fresh":
+                        self.private_view.mark_resident(
+                            self._privacy_key_of(slot))
+        elif self.mesh is None:
             if do_ingest and do_query:
                 flat = np.concatenate([zbuf.ravel(), zmask.ravel(),
                                        qbuf.ravel(), qmask.ravel()])
@@ -738,14 +960,59 @@ class StormGateway:
         out: List[FitResult] = []
         while self._fit_q:
             req = self._fit_q.popleft()
-            idx = jnp.asarray(req.tenants, jnp.int32)
-            sub = sketch_lib.SketchBank(
-                counts=self._counts[idx].astype(jnp.int32),
-                n=self._n[idx],
-            )
-            out.append(run_fit_request(req, sub, self.params))
+            if self._private:
+                out.append(self._run_private_fit(req))
+            else:
+                idx = jnp.asarray(req.tenants, jnp.int32)
+                sub = sketch_lib.SketchBank(
+                    counts=self._counts[idx].astype(jnp.int32),
+                    n=self._n[idx],
+                )
+                out.append(run_fit_request(req, sub, self.params))
             self.fits_run += 1
         return out
+
+    def _refused_fit(self, req: FitRequest) -> FitResult:
+        s = len(req.tenants)
+        self.fits_refused += 1
+        return FitResult(rid=req.rid, tenants=list(req.tenants),
+                         theta=np.zeros((s, self.dim), np.float32),
+                         fleet_losses=np.zeros((s, req.restarts), np.float32),
+                         status="refused")
+
+    def _run_private_fit(self, req: FitRequest) -> FitResult:
+        """Cohort fit from RELEASED tables only (finite policy).
+
+        Each cohort member reads through the shared view: an open window
+        rebuilds its cached release for free, a closed one charges a new
+        release, an exhausted member serves its stale lane (or refuses the
+        whole request — deterministic, nothing trained on partial data).
+        The sub-bank is f32 released counters with release-time n, flowing
+        through the UNCHANGED ``erm.fit_many`` spine — the query gather
+        widens to f32 regardless, so privatized tables train as-is.
+        """
+        shape = (self.params.rows, self.params.buckets)
+        tables, ns = [], []
+        stale = False
+        for slot in req.tenants:
+            key = self._privacy_key_of(slot)
+            plan = self.private_view.plan_read(
+                key, self._rows_of[key], shape, paired=self.paired)
+            if plan.status == "refuse":
+                return self._refused_fit(req)
+            if plan.status == "fresh":
+                tables.append(self._counts[slot].astype(jnp.float32)
+                              + jnp.asarray(plan.noise))
+            else:
+                stale = True
+                tables.append(self._release_buf[slot])
+            ns.append(plan.n)
+        sub = sketch_lib.SketchBank(counts=jnp.stack(tables),
+                                    n=jnp.asarray(ns, jnp.int32))
+        res = run_fit_request(req, sub, self.params)
+        if stale:
+            res.status = "stale"
+        return res
 
     def tick_finish(self, inflight: InflightTick) -> TickReport:
         """Read back one dispatched tick's estimates and report completions.
@@ -766,7 +1033,8 @@ class StormGateway:
                 st.out[req_off:req_off + take] = \
                     losses[t, slot_off:slot_off + take]
         for st in inflight.completes:
-            results.append(QueryResult(st.req.rid, st.req.tenant, st.out))
+            results.append(QueryResult(st.req.rid, st.req.tenant, st.out,
+                                       status=st.status))
         self.rows_ingested += inflight.rows
         self.points_served += inflight.points
         fits = self._run_fits() if self._fit_q else []

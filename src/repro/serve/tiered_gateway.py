@@ -30,7 +30,12 @@ layer owns the tenant⇄slot indirection plus a
 
 Never-recompiles contract: the inner gateway's three tick programs plus the
 bank's one swap program — ``trace_count <= 4`` for the gateway's lifetime
-under any hot/cold request mix (pinned in tests/test_tiered_gateway.py).
+under any hot/cold request mix (pinned in tests/test_tiered_gateway.py);
+``<= 5`` with a finite :class:`~repro.core.privacy.ReleasePolicy`, whose
+single extra program (the inner gateway's privatize-on-read query) is the
+only addition. Privacy is GLOBAL-tenant-scoped here: one shared ledger/view
+keyed by global tenant id backs the inner gateway, so budgets, release
+windows, and refusals follow tenants across promote/demote (DESIGN.md §15).
 
 Bit-identity contract: with ``hot_capacity >= num_tenants`` the slot map is
 the identity and no swap ever runs — every tick is byte-for-byte the PR-6
@@ -52,7 +57,8 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import losses, lsh, sketch as sketch_lib
+from repro.core import (losses, lsh, privacy as privacy_lib,
+                        sketch as sketch_lib)
 from repro.core.tiered import TieredBank
 from repro.serve.storm_gateway import (
     Backpressure,
@@ -89,6 +95,8 @@ class TieredStormGateway:
         max_pending_points: Optional[int] = None,
         promote_per_tick: int = 2,
         score_fn=None,
+        privacy: Optional[privacy_lib.ReleasePolicy] = None,
+        privacy_seed: int = 0,
     ):
         """Args mirror :class:`StormGateway` plus the tier knobs:
 
@@ -103,6 +111,15 @@ class TieredStormGateway:
           score_fn: pluggable eviction priority (``tiered.TenantStats ->
             comparable``; lowest evicts first). ``None`` keeps the
             LRU-by-tick default.
+          privacy: optional :class:`~repro.core.privacy.ReleasePolicy`.
+            The budget is GLOBAL per tenant: one shared
+            :class:`~repro.core.privacy.PrivateBankView` backs the inner
+            gateway (keyed slot -> global tenant), so eps accounting and
+            release windows follow a tenant across promote/demote. A
+            demoted tenant's stale lane is dropped (the slot is reused) —
+            its cached window survives, so re-promotion at an unchanged
+            counter version rebuilds the SAME release free of charge.
+          privacy_seed: PRNG seed of the release noise stream.
         """
         if num_tenants < 1:
             raise ValueError(f"need at least one tenant; got {num_tenants}")
@@ -115,6 +132,10 @@ class TieredStormGateway:
             dtype=count_dtype,
             score_fn=score_fn,
         )
+        self.privacy = privacy
+        self._private = privacy is not None and not privacy.noiseless
+        self.private_view = (privacy_lib.PrivateBankView(
+            privacy, seed=privacy_seed) if self._private else None)
         counts, n = self.tiers.init_resident()
         self.gw = StormGateway(
             params,
@@ -130,6 +151,10 @@ class TieredStormGateway:
             # only ever hold traffic this layer already admitted.
             max_pending_rows=None,
             max_pending_points=None,
+            privacy=privacy,
+            privacy_seed=privacy_seed,
+            private_view=self.private_view,
+            privacy_key_of=self._slot_key,
         )
         self.max_pending_rows = max_pending_rows
         self.max_pending_points = max_pending_points
@@ -145,6 +170,17 @@ class TieredStormGateway:
         self.deferred_promotions = 0
 
     # -- tenant-space accounting --------------------------------------------
+
+    def _slot_key(self, slot: int) -> int:
+        """Ledger key of a resident slot: its GLOBAL tenant.
+
+        Budgets and release windows belong to tenants, not slots — keyed
+        this way, the shared view's accounting survives any promote/demote
+        history. Unoccupied slots (never carrying traffic) map to a
+        negative sentinel no real tenant uses.
+        """
+        tenant = self.tiers.slot_tenant[slot]
+        return tenant if tenant is not None else -1 - slot
 
     def _inner_pending(self, tenant: int) -> tuple:
         """(rows, points) queued-but-unpacked in the inner gateway."""
@@ -263,7 +299,9 @@ class TieredStormGateway:
 
     @property
     def trace_count(self) -> int:
-        """Tick programs + the swap program: must stay <= 4 for life."""
+        """Tick programs + the swap program: must stay <= 4 for life
+        (<= 5 with a finite privacy policy — the inner gateway's one
+        extra private-query program)."""
         return self.gw.trace_count + self.tiers.trace_count
 
     # -- promotion scheduling -----------------------------------------------
@@ -306,6 +344,11 @@ class TieredStormGateway:
             self.promotions += 1
             if victim is not None:
                 self.demotions += 1
+                if self._private:
+                    # The victim's lane is about to be reused — its stale
+                    # release is gone from the device. Its window cache
+                    # survives (free bit-identical rebuild on return).
+                    self.private_view.drop_resident(victim)
             promoted.add(tenant)
         if not promoted:
             return
@@ -351,16 +394,54 @@ class TieredStormGateway:
         out: List[FitResult] = []
         while self._fit_q:
             req = self._fit_q.popleft()
-            sketches = [self.sketch_of(t) for t in req.tenants]
-            sub = sketch_lib.SketchBank(
-                counts=jnp.stack([s.counts.astype(jnp.int32)
-                                  for s in sketches]),
-                n=jnp.stack([jnp.asarray(s.n, jnp.int32)
-                             for s in sketches]),
-            )
-            out.append(run_fit_request(req, sub, self.gw.params))
+            if self._private:
+                out.append(self._run_private_fit(req))
+            else:
+                sketches = [self.sketch_of(t) for t in req.tenants]
+                sub = sketch_lib.SketchBank(
+                    counts=jnp.stack([s.counts.astype(jnp.int32)
+                                      for s in sketches]),
+                    n=jnp.stack([jnp.asarray(s.n, jnp.int32)
+                                 for s in sketches]),
+                )
+                out.append(run_fit_request(req, sub, self.gw.params))
             self.fits_run += 1
         return out
+
+    def _run_private_fit(self, req: FitRequest) -> FitResult:
+        """Cohort fit from released tables, tier-aware (DESIGN.md §15).
+
+        Reads go through the GLOBAL shared view, so a cohort can mix
+        residencies: a fresh release reads the tenant's counters wherever
+        they live (hot slot or exact cold copy) and charges the global
+        ledger; an exhausted-but-resident tenant serves its stale device
+        lane; an exhausted cold tenant has no lane (dropped at demotion)
+        and refuses the request deterministically.
+        """
+        gw = self.gw
+        shape = (gw.params.rows, gw.params.buckets)
+        tables, ns = [], []
+        stale = False
+        for tenant in req.tenants:
+            plan = self.private_view.plan_read(
+                tenant, gw._rows_of[tenant], shape, paired=gw.paired)
+            if plan.status == "refuse":
+                return gw._refused_fit(req)
+            if plan.status == "fresh":
+                sk = self.sketch_of(tenant)
+                tables.append(jnp.asarray(sk.counts).astype(jnp.float32)
+                              + jnp.asarray(plan.noise))
+            else:
+                # A "stale" plan implies residency (lanes drop on demote).
+                stale = True
+                tables.append(gw._release_buf[self.tiers.slot_of[tenant]])
+            ns.append(plan.n)
+        sub = sketch_lib.SketchBank(counts=jnp.stack(tables),
+                                    n=jnp.asarray(ns, jnp.int32))
+        res = run_fit_request(req, sub, gw.params)
+        if stale:
+            res.status = "stale"
+        return res
 
     def tick_finish(self, inflight: InflightTick) -> TickReport:
         """Inner finish + rewrite reports to global ids + land evictions.
@@ -448,7 +529,7 @@ class TieredStormGateway:
         tier.update(promotions=self.promotions, demotions=self.demotions,
                     deferred_promotions=self.deferred_promotions,
                     cold_queued=len(self._cold_q))
-        return {
+        stats = {
             "tenants": t,
             "ticks": self.gw.ticks,
             "pending_requests": self.pending,
@@ -462,3 +543,8 @@ class TieredStormGateway:
             "trace_count": self.trace_count,
             "tier": tier,
         }
+        if self._private:
+            stats["privacy"] = dict(self.private_view.summary(),
+                                    queries_refused=self.gw.queries_refused,
+                                    fits_refused=self.gw.fits_refused)
+        return stats

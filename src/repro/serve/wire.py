@@ -19,13 +19,19 @@ interchangeably.
 
 Client -> server types: ``ingest`` / ``query`` (array-carrying), ``fit``
 (JSON-only: a tenant cohort plus erm knobs — the gateway trains the cohort
-from its served counters between ticks), ``stats``.
-Server -> client types: ``result`` (query losses, array-carrying),
-``fit_result`` (the cohort's ``(S, dim)`` thetas as the array payload,
-per-member ``fleet_losses`` inline in the header), ``ingest_ok`` (the
-request's last row reached the counters), ``error`` (validation or — with
-``"backpressure": true`` — admission rejection; the client should drain
-completions and retry), ``stats_reply``.
+from its served counters between ticks), ``stats``, ``budget`` (JSON-only:
+the per-tenant eps ledger snapshot, so a client can watch its budget drain).
+Server -> client types: ``result`` (query losses, array-carrying; under a
+finite privacy policy a result served from the tenant's last cached release
+carries ``"stale": true``), ``fit_result`` (the cohort's ``(S, dim)`` thetas
+as the array payload, per-member ``fleet_losses`` inline in the header;
+``"stale": true`` when a cohort member trained from its cached release),
+``ingest_ok`` (the request's last row reached the counters), ``error``
+(validation or — with ``"backpressure": true`` — admission rejection; the
+client should drain completions and retry), ``stats_reply``,
+``budget_reply``, and ``budget_exceeded`` — the TERMINAL refusal of an
+exhausted tenant's query or fit (``"retryable": false``: unlike
+backpressure, waiting cannot help; the eps budget is spent for good).
 
 :class:`StormWireServer` runs the double-buffered engine loop (§11.1) on a
 dedicated thread: connection handler threads deserialize and submit under
@@ -53,6 +59,21 @@ from repro.serve.storm_gateway import (
 
 _PREFIX = struct.Struct("!II")
 _MAX_FRAME = 1 << 30  # sanity bound on header+payload (1 GiB)
+
+
+class BudgetExceeded(RuntimeError):
+    """Client-side view of a terminal ``budget_exceeded`` frame.
+
+    Raised by the ``*_sync`` helpers. NOT retryable (unlike
+    :class:`~repro.serve.storm_gateway.Backpressure`): the tenant's eps
+    budget is spent; only a ``"stale"``-policy server would keep serving.
+    """
+
+    def __init__(self, header: dict):
+        who = header.get("tenant", header.get("tenants"))
+        super().__init__(f"epsilon budget exhausted for tenant(s) {who} "
+                         f"({header.get('scope', 'query')} refused)")
+        self.header = header
 
 
 # -- framing ----------------------------------------------------------------
@@ -168,17 +189,32 @@ class StormWireServer:
 
     def _route(self, report) -> None:
         for res in report.results:
-            self._reply(res.rid, {"type": "result", "rid": res.rid,
-                                  "tenant": res.tenant}, res.losses)
+            if res.status == "refused":
+                # Terminal, not retryable: the tenant's eps budget is spent.
+                self._reply(res.rid, {"type": "budget_exceeded",
+                                      "rid": res.rid, "tenant": res.tenant,
+                                      "scope": "query", "retryable": False})
+                continue
+            header = {"type": "result", "rid": res.rid, "tenant": res.tenant}
+            if res.status == "stale":
+                header["stale"] = True
+            self._reply(res.rid, header, res.losses)
         for ing in report.ingest_done:
             self._reply(ing.rid, {"type": "ingest_ok", "rid": ing.rid,
                                   "tenant": ing.tenant, "rows": ing.rows})
         for fit in report.fits:
-            self._reply(fit.rid,
-                        {"type": "fit_result", "rid": fit.rid,
-                         "tenants": fit.tenants,
-                         "fleet_losses": fit.fleet_losses.tolist()},
-                        fit.theta)
+            if fit.status == "refused":
+                self._reply(fit.rid, {"type": "budget_exceeded",
+                                      "rid": fit.rid,
+                                      "tenants": fit.tenants,
+                                      "scope": "fit", "retryable": False})
+                continue
+            header = {"type": "fit_result", "rid": fit.rid,
+                      "tenants": fit.tenants,
+                      "fleet_losses": fit.fleet_losses.tolist()}
+            if fit.status == "stale":
+                header["stale"] = True
+            self._reply(fit.rid, header, fit.theta)
 
     def _reply(self, rid: int, header: dict,
                arr: Optional[np.ndarray] = None) -> None:
@@ -222,6 +258,13 @@ class StormWireServer:
                 if self.telemetry is not None:
                     stats["telemetry"] = self.telemetry.telemetry_stats()
             conn.send({"type": "stats_reply", "rid": rid, "stats": stats})
+            return
+        if kind == "budget":
+            # JSON-only: the eps ledger snapshot (None when the gateway
+            # runs without a finite privacy policy).
+            with self._lock:
+                budget = self.gateway.queue_stats().get("privacy")
+            conn.send({"type": "budget_reply", "rid": rid, "budget": budget})
             return
         if kind == "fit":
             # JSON-only frame: cohort + erm knobs, no array payload.
@@ -349,6 +392,8 @@ class StormWireClient:
         header, arr = self.recv()
         if header["type"] == "error":
             raise RuntimeError(header["error"])
+        if header["type"] == "budget_exceeded":
+            raise BudgetExceeded(header)
         if header.get("rid") != rid or header["type"] != "fit_result":
             raise RuntimeError(f"out-of-order reply {header}")
         return arr, np.asarray(header["fleet_losses"], np.float32)
@@ -361,6 +406,8 @@ class StormWireClient:
         header, arr = self.recv()
         if header["type"] == "error":
             raise RuntimeError(header["error"])
+        if header["type"] == "budget_exceeded":
+            raise BudgetExceeded(header)
         if header.get("rid") != rid:
             raise RuntimeError(f"out-of-order reply {header}")
         return arr
@@ -371,6 +418,17 @@ class StormWireClient:
         while header["type"] != "stats_reply":
             header, _ = self.recv()
         return header["stats"]
+
+    def budget(self) -> Optional[dict]:
+        """The server's eps-ledger snapshot: per-tenant ``spent`` /
+        ``remaining`` (``None`` entries mean unlimited) plus the policy
+        echo. Returns ``None`` when the gateway has no finite privacy
+        policy. Single-threaded use, like :meth:`stats`."""
+        send_frame(self.sock, {"type": "budget", "rid": -2})
+        header, _ = self.recv()
+        while header["type"] != "budget_reply":
+            header, _ = self.recv()
+        return header["budget"]
 
     def close(self) -> None:
         try:

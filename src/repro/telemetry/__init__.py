@@ -13,7 +13,9 @@ memory.
 """
 
 from repro.telemetry.bridge import TelemetryBridge
-from repro.telemetry.monitor import DriftMonitor, counter_distance, window_delta
+from repro.telemetry.monitor import (
+    DriftMonitor, counter_distance, counter_kl, window_delta,
+)
 from repro.telemetry.taps import TapBatch, TapConfig, probe_target, tapped_decode_fn
 
 __all__ = [
@@ -22,6 +24,7 @@ __all__ = [
     "TapConfig",
     "TelemetryBridge",
     "counter_distance",
+    "counter_kl",
     "probe_target",
     "tapped_decode_fn",
     "window_delta",

@@ -9,11 +9,14 @@ each window's delta against a frozen reference delta in counter space.
 
 Scoring: each sketch row is a histogram over ``2^planes`` buckets; with
 ``n`` paired inserts the row sums to ``2n``, so ``counts / (2n)`` is a
-frequency distribution and the drift score is the mean-over-rows total
-variation distance between the window's distribution and the reference's.
-The score is 0 for identical streams, at most 1, and needs no labels, no
-model access, and no second pass — the same counters that train the
-probes flag the shift.
+frequency distribution and the drift score compares the window's
+distribution against the reference's per row, averaged over rows. Two
+scorers ship: ``"tv"`` (default, :func:`counter_distance` — mean
+total-variation, bounded in [0, 1]) and ``"kl"``
+(:func:`counter_kl` — smoothed symmetric KL divergence, unbounded but
+far more sensitive to mass moving into near-empty buckets). Both are 0
+for identical streams and need no labels, no model access, and no
+second pass — the same counters that train the probes flag the shift.
 
 Thresholding is self-calibrating: after the reference windows, the next
 ``calibration_windows`` in-distribution windows establish the null score
@@ -67,6 +70,45 @@ def counter_distance(
     return float(np.mean(0.5 * np.sum(np.abs(pa - pb), axis=-1)))
 
 
+def counter_kl(
+    a_counts: jax.Array,
+    a_n,
+    b_counts: jax.Array,
+    b_n,
+    *,
+    paired: bool = True,
+    smoothing: float = 0.5,
+) -> float:
+    """Mean-over-rows symmetric KL divergence between two counter tables.
+
+    Same normalization as :func:`counter_distance`, but the per-row score
+    is the symmetrized KL ``0.5 * (KL(p_a || p_b) + KL(p_b || p_a))``.
+    Empty buckets get Jeffreys smoothing (``smoothing`` pseudo-counts per
+    bucket, added before renormalizing) so the divergence stays finite;
+    a window whose mass lands in buckets the reference never touched
+    therefore scores sharply higher than under TV, which caps that
+    contribution at the moved mass. Empty tables score 0 (no evidence
+    is not drift). Unbounded above; only score comparisons against a
+    same-scorer calibrated threshold are meaningful.
+    """
+    a_n = float(a_n)
+    b_n = float(b_n)
+    if a_n <= 0 or b_n <= 0:
+        return 0.0
+    per = 2.0 if paired else 1.0
+    a = np.asarray(a_counts, np.float64) + smoothing
+    b = np.asarray(b_counts, np.float64) + smoothing
+    buckets = a.shape[-1]
+    pa = a / (per * a_n + smoothing * buckets)
+    pb = b / (per * b_n + smoothing * buckets)
+    log_ratio = np.log(pa) - np.log(pb)
+    sym = 0.5 * np.sum((pa - pb) * log_ratio, axis=-1)
+    return float(np.mean(sym))
+
+
+_SCORES = {"tv": counter_distance, "kl": counter_kl}
+
+
 class _SlotTrack:
     """Per-slot drift state: snapshot, reference delta, null calibration."""
 
@@ -111,9 +153,13 @@ class DriftMonitor:
         margin: float = 3.0,
         refresh_every: Optional[int] = None,
         seed: int = 0,
+        score: str = "tv",
     ):
         if reference_windows < 1:
             raise ValueError("need at least one reference window")
+        if score not in _SCORES:
+            raise ValueError(
+                f"unknown score {score!r}; choose from {sorted(_SCORES)}")
         if threshold is None and calibration_windows < 1:
             raise ValueError(
                 "auto-thresholding needs at least one calibration window "
@@ -124,6 +170,8 @@ class DriftMonitor:
             else calibration_windows
         self.fixed_threshold = threshold
         self.margin = margin
+        self.score_name = score
+        self._score_fn = _SCORES[score]
         self.refresh_every = refresh_every
         self._tracks: Dict[int, _SlotTrack] = {}
         self._key = jax.random.PRNGKey(seed)
@@ -162,7 +210,7 @@ class DriftMonitor:
                 tr.ref_n += delta_n
                 tr.ref_seen += 1
                 continue
-            score = counter_distance(
+            score = self._score_fn(
                 tr.ref_counts, tr.ref_n, delta, delta_n,
                 paired=self.bridge.gateway.paired)
             tr.last_score = score
@@ -229,4 +277,5 @@ class DriftMonitor:
             "any_flagged": any(s["flagged"] for s in slots),
             "refreshes": self.refreshes,
             "scored_windows": self._scored_windows,
+            "score": self.score_name,
         }

@@ -1,4 +1,11 @@
-"""Differentially-private sketch release tests (paper §2.2 refs [11, 21])."""
+"""Differentially-private sketch release tests (paper §2.2 refs [11, 21]).
+
+Since PR 10 this also pins the privacy LAYER (DESIGN.md §15): the
+ReleasePolicy contract, exact ledger composition, and the
+privatize-on-read release-window semantics of PrivateBankView.
+"""
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -6,6 +13,9 @@ import numpy as np
 import pytest
 
 from repro.core import lsh, privacy, sketch
+from repro.core.privacy import (
+    BudgetState, EpsilonLedger, PrivateBankView, ReleasePolicy,
+)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -47,6 +57,52 @@ class TestLaplaceCounts:
         mean_est = jnp.mean(jnp.stack(ests), axis=0)
         np.testing.assert_allclose(np.asarray(mean_est), np.asarray(exact),
                                    atol=0.02)
+
+
+class TestNarrowDtypeRelease:
+    """Regression: the release is f32(counts) + noise, never
+    f32(counts + noise_cast_narrow). On int16/int8 banks (DESIGN.md §12)
+    the buggy order truncates the noise onto the integer grid and can
+    saturate at the dtype bound — both break the mechanism's calibration."""
+
+    @pytest.mark.parametrize("dtype", [jnp.int16, jnp.int8])
+    def test_widen_before_noise(self, dtype):
+        params = lsh.init_srp(jax.random.PRNGKey(0), 32, 4, 5 + 2)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (60, 5))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        sk = sketch.sketch_dataset(params, zs, batch=30, paired=True,
+                                   engine="scan", dtype=dtype)
+        assert sk.counts.dtype == dtype
+        key = jax.random.PRNGKey(2)
+        ps = privacy.privatize_counts(key, sk, epsilon=1.0)
+        assert ps.counts.dtype == jnp.float32
+        want = sk.counts.astype(jnp.float32) + privacy.count_noise(
+            key, sk.counts.shape, 1.0, sk.rows, paired=True)
+        np.testing.assert_array_equal(np.asarray(ps.counts),
+                                      np.asarray(want))
+        # The noise survives with fractional parts intact — the buggy
+        # narrow-cast order would leave every cell on the integer grid.
+        frac = np.asarray(ps.counts) - np.round(np.asarray(ps.counts))
+        assert np.mean(np.abs(frac) > 1e-3) > 0.9
+        # And unclipped: at eps=1 over 32 rows the Laplace scale is 64,
+        # far beyond int8's range — saturation would cap the spread.
+        info = jnp.iinfo(dtype)
+        assert float(jnp.max(jnp.abs(ps.counts))) > float(info.max) \
+            or dtype != jnp.int8
+
+    def test_view_release_matches_int16(self):
+        """The PrivateBankView read path shares the widen-first contract."""
+        params = lsh.init_srp(jax.random.PRNGKey(3), 32, 4, 5 + 2)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(4), (40, 5))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        sk = sketch.sketch_dataset(params, zs, batch=20, paired=True,
+                                   engine="scan", dtype=jnp.int16)
+        view = PrivateBankView(ReleasePolicy(epsilon_total=10.0), seed=5)
+        plan, ps = view.read(7, sk)
+        assert plan.status == "fresh" and plan.spent
+        np.testing.assert_array_equal(
+            np.asarray(ps.counts),
+            np.asarray(sk.counts).astype(np.float32) + plan.noise)
 
 
 class TestGaussianProjections:
@@ -235,3 +291,199 @@ class TestQueryDenominatorCrossCheck:
         want = mean_count / denom
         got = privacy.query_private(ps, codes, paired=True)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestReleasePolicy:
+    def test_noise_scale_monotone_in_epsilon(self):
+        """More budget per release -> strictly less noise, both mechanisms."""
+        for mech in ("laplace", "gaussian"):
+            scales = [
+                ReleasePolicy(epsilon_release=e, mechanism=mech)
+                .noise_scale(64) for e in (0.1, 0.5, 1.0, 4.0, 32.0)
+            ]
+            assert all(a > b > 0 for a, b in zip(scales, scales[1:])), \
+                (mech, scales)
+
+    def test_noise_scale_is_host_float(self):
+        s = ReleasePolicy().noise_scale(64)
+        assert type(s) is float
+
+    def test_sensitivity_paired_vs_single(self):
+        pol = ReleasePolicy(epsilon_release=1.0)
+        assert pol.noise_scale(64, paired=True) == \
+            pytest.approx(2 * pol.noise_scale(64, paired=False))
+
+    def test_unlimited_is_noiseless_identity(self):
+        pol = ReleasePolicy.unlimited()
+        assert pol.noiseless and pol.noise_scale(64) == 0.0
+        noise = pol.sample_noise(jax.random.PRNGKey(0), (4, 8))
+        assert not np.asarray(noise).any()
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="mechanism"):
+            ReleasePolicy(mechanism="exponential")
+        with pytest.raises(ValueError, match="on_exhaust"):
+            ReleasePolicy(on_exhaust="retry")
+        with pytest.raises(ValueError, match="positive"):
+            ReleasePolicy(epsilon_release=0.0)
+        with pytest.raises(ValueError, match="positive"):
+            ReleasePolicy(epsilon_total=-1.0)
+        with pytest.raises(ValueError, match="noiseless"):
+            ReleasePolicy(epsilon_total=4.0,
+                          epsilon_release=math.inf)
+        with pytest.raises(ValueError, match="delta"):
+            ReleasePolicy(mechanism="gaussian", delta=0.0)
+
+
+class TestEpsilonLedger:
+    def test_spend_sequence_exact_vs_closed_form(self):
+        """k releases at eps each spend EXACTLY k * eps (fsum, not a
+        drifting float accumulation): pick an eps whose repeated binary
+        addition drifts, and require bit-exact equality with the
+        closed-form product."""
+        eps = 0.1  # 0.1 + 0.1 + ... drifts under naive accumulation
+        k = 1000
+        led = EpsilonLedger(ReleasePolicy(epsilon_total=1e9,
+                                          epsilon_release=eps))
+        for _ in range(k):
+            assert led.charge(3) is BudgetState.OK
+        assert led.spent(3) == math.fsum([eps] * k)
+        assert led.spent(3) == pytest.approx(k * eps, abs=0.0, rel=1e-15)
+        assert len(led.spend_log(3)) == k
+
+    def test_spent_monotone_nondecreasing(self):
+        led = EpsilonLedger(ReleasePolicy(epsilon_total=5.0,
+                                          epsilon_release=1.0))
+        prev = 0.0
+        for _ in range(8):  # keeps charging past exhaustion
+            led.charge(0)
+            cur = led.spent(0)
+            assert cur >= prev
+            prev = cur
+        assert led.spent(0) == 5.0  # refused charges spend nothing
+
+    def test_exactly_zero_remaining_refuses(self):
+        """Budget divides evenly: after total/release charges remaining is
+        EXACTLY 0.0 and the next release is refused — no off-by-one
+        release funded by float slack."""
+        led = EpsilonLedger(ReleasePolicy(epsilon_total=3.0,
+                                          epsilon_release=1.0))
+        for _ in range(3):
+            assert led.charge(1) is BudgetState.OK
+        assert led.remaining(1) == 0.0
+        assert led.state(1) is BudgetState.EXHAUSTED
+        assert led.charge(1) is BudgetState.EXHAUSTED
+        assert led.spent(1) == 3.0  # the refused charge spent nothing
+
+    def test_partial_remainder_refuses_full_cost_releases(self):
+        """Affordability covers the FULL release cost: 2.5 total at 1.0
+        per release funds two releases, and the 0.5 remainder buys none."""
+        led = EpsilonLedger(ReleasePolicy(epsilon_total=2.5,
+                                          epsilon_release=1.0))
+        assert [led.charge(0) for _ in range(3)] == \
+            [BudgetState.OK, BudgetState.OK, BudgetState.EXHAUSTED]
+        assert led.remaining(0) == 0.5
+
+    def test_tenants_isolated(self):
+        led = EpsilonLedger(ReleasePolicy(epsilon_total=1.0,
+                                          epsilon_release=1.0))
+        assert led.charge(0) is BudgetState.OK
+        assert led.charge(0) is BudgetState.EXHAUSTED
+        assert led.charge(1) is BudgetState.OK  # unaffected
+        assert led.keys() == [0, 1]
+
+    def test_noiseless_never_exhausts(self):
+        led = EpsilonLedger(ReleasePolicy.unlimited())
+        for _ in range(10):
+            assert led.charge(0) is BudgetState.OK
+        assert led.spent(0) == 0.0
+
+
+class TestPrivateBankView:
+    def _sk(self, seed=0, n=50, dtype=jnp.int32):
+        params = lsh.init_srp(jax.random.PRNGKey(seed), 32, 4, 5 + 2)
+        z = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 5))
+        zs, _ = lsh.scale_to_unit_ball(z)
+        return sketch.sketch_dataset(params, zs, batch=25, paired=True,
+                                     engine="scan", dtype=dtype)
+
+    def test_open_window_reread_is_free_and_bit_identical(self):
+        sk = self._sk()
+        view = PrivateBankView(ReleasePolicy(epsilon_total=10.0), seed=1)
+        plan1, ps1 = view.read(0, sk)
+        plan2, ps2 = view.read(0, sk)
+        assert plan1.spent and not plan2.spent
+        assert view.releases == 1 and view.ledger.spent(0) == 1.0
+        np.testing.assert_array_equal(np.asarray(ps1.counts),
+                                      np.asarray(ps2.counts))
+        np.testing.assert_array_equal(plan1.noise, plan2.noise)
+
+    def test_version_advance_closes_the_window(self):
+        sk = self._sk()
+        view = PrivateBankView(ReleasePolicy(epsilon_total=10.0), seed=2)
+        plan1, _ = view.read(0, sk, version=50)
+        plan2, _ = view.read(0, sk, version=61)  # ingest happened
+        assert plan1.spent and plan2.spent
+        assert view.releases == 2
+        assert not np.array_equal(plan1.noise, plan2.noise)
+
+    def test_exhausted_refuses_by_default(self):
+        sk = self._sk()
+        view = PrivateBankView(ReleasePolicy(epsilon_total=1.0), seed=3)
+        assert view.read(0, sk, version=1)[0].status == "fresh"
+        plan, ps = view.read(0, sk, version=2)
+        assert plan.status == "refuse" and ps is None and not plan.spent
+
+    def test_exhausted_stale_needs_a_resident_lane(self):
+        sk = self._sk()
+        pol = ReleasePolicy(epsilon_total=1.0, on_exhaust="stale")
+        view = PrivateBankView(pol, seed=4)
+        view.read(0, sk, version=5)
+        # Exhausted, lane never marked: stale is impossible -> refuse.
+        assert view.read(0, sk, version=9)[0].status == "refuse"
+        view.mark_resident(0)
+        plan, ps = view.read(0, sk, version=9)
+        assert plan.status == "stale" and ps is None
+        assert plan.n == 5  # the release-time count, not the current one
+        view.drop_resident(0)  # demotion reuses the lane
+        assert view.read(0, sk, version=9)[0].status == "refuse"
+
+    def test_window_survives_lane_drop(self):
+        """Demotion drops the lane, not the window: re-promotion at an
+        unchanged version rebuilds the SAME release for free."""
+        sk = self._sk()
+        view = PrivateBankView(ReleasePolicy(epsilon_total=1.0), seed=5)
+        plan1, ps1 = view.read(0, sk, version=7)
+        view.mark_resident(0)
+        view.drop_resident(0)
+        plan2, ps2 = view.read(0, sk, version=7)
+        assert plan1.spent and not plan2.spent
+        np.testing.assert_array_equal(np.asarray(ps1.counts),
+                                      np.asarray(ps2.counts))
+
+    def test_deterministic_across_rebuilds(self):
+        """Same seed -> the same release sequence, run to run."""
+        sk = self._sk()
+        a = PrivateBankView(ReleasePolicy(epsilon_total=10.0), seed=6)
+        b = PrivateBankView(ReleasePolicy(epsilon_total=10.0), seed=6)
+        pa, _ = a.read(0, sk, version=3)
+        pb, _ = b.read(0, sk, version=3)
+        np.testing.assert_array_equal(pa.noise, pb.noise)
+
+    def test_summary_is_json_safe(self):
+        import json
+
+        sk = self._sk()
+        view = PrivateBankView(ReleasePolicy(epsilon_total=2.0), seed=7)
+        view.read(0, sk, version=1)
+        view.read(0, sk, version=2)
+        view.read(1, sk, version=1)
+        s = view.summary()
+        json.dumps(s)  # no inf/nan leaks
+        assert s["releases"] == 3
+        assert s["spent"] == {"0": 2.0, "1": 1.0}
+        assert s["remaining"] == {"0": 0.0, "1": 1.0}
+        assert s["exhausted"] == [0]
+        unlimited = PrivateBankView(ReleasePolicy.unlimited()).summary()
+        json.dumps(unlimited)
+        assert unlimited["epsilon_total"] is None

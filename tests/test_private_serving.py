@@ -1,0 +1,462 @@
+"""Private serving tests (DESIGN.md §15): the eps-ledger threaded through
+bank -> gateway -> wire.
+
+The contracts, layer by layer:
+
+* **eps = inf is the identity BY CONSTRUCTION** — a gateway built with
+  ``ReleasePolicy.unlimited()`` (or ``privacy=None``) traces the same
+  programs and produces bit-identical results/banks under a soaked random
+  mix, meshless and on a simulated device mesh, flat and tiered.
+* **Release windows** — ONE charged release per (tenant, counter-version)
+  covers every query coalesced into that tick; re-reads of unchanged
+  counters are free (post-processing); ingest closes the window.
+* **Exhaustion is deterministic and isolated** — the exact release that
+  overdraws the budget is refused (or served stale per policy) while
+  same-tick traffic of solvent tenants is unaffected; refused fits refuse
+  the whole cohort result, typed.
+* **Never-recompile survives** — a finite policy adds exactly ONE fixed
+  program: flat ``trace_count <= 4``, tiered ``<= 5``, for the gateway's
+  life under mixed private traffic.
+* **Wire** — ``budget_exceeded`` is terminal (``retryable: false``),
+  stale results carry ``"stale": true``, and the ``budget`` frame exposes
+  the ledger snapshot.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import itertools  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.core import lsh  # noqa: E402
+from repro.core.privacy import ReleasePolicy  # noqa: E402
+from repro.serve.storm_gateway import (  # noqa: E402
+    FitRequest, IngestRequest, QueryRequest, StormGateway,
+)
+from repro.serve.tiered_gateway import TieredStormGateway  # noqa: E402
+from repro.serve.wire import (  # noqa: E402
+    BudgetExceeded, StormWireClient, StormWireServer,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+D = 5  # sketch-space dim (params hash D + 2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lsh.init_srp(jax.random.PRNGKey(0), 64, 3, D + 2)
+
+
+def _streams(tenants, n_base=23, step=7, seed=10):
+    return [
+        np.asarray(0.3 * jax.random.normal(jax.random.PRNGKey(seed + t),
+                                           (n_base + step * t, D)),
+                   np.float32)
+        for t in range(tenants)
+    ]
+
+
+def _soak_script(tenants, seed=0, chunk=9, queries=3):
+    """A deterministic shuffled mix of ingest chunks and queries."""
+    rng = np.random.default_rng(seed)
+    rids = itertools.count()
+    reqs = []
+    for t, z in enumerate(_streams(tenants)):
+        for off in range(0, len(z), chunk):
+            reqs.append(IngestRequest(rid=next(rids), tenant=t,
+                                      z=z[off:off + chunk]))
+        for _ in range(queries):
+            th = rng.normal(size=(4, D)).astype(np.float32)
+            reqs.append(QueryRequest(rid=next(rids), tenant=t, thetas=th))
+    rng.shuffle(reqs)
+    return reqs
+
+
+def _result_key(res):
+    return (res.rid, res.tenant, np.asarray(res.losses).tobytes())
+
+
+def _theta(seed, n=3):
+    return np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+
+
+class TestUnlimitedIsIdentity:
+    """eps = inf builds NO private machinery, so the soaked gateway must be
+    byte-for-byte the privacy=None gateway — results, banks, programs."""
+
+    def test_flat_soak_bit_identical(self, params):
+        t = 4
+        plain = StormGateway(params, t, query_slots=8, ingest_slots=16)
+        unlim = StormGateway(params, t, query_slots=8, ingest_slots=16,
+                             privacy=ReleasePolicy.unlimited())
+        script = _soak_script(t, seed=1)
+        for off in range(0, len(script), 5):
+            batch = script[off:off + 5]
+            plain.submit_many(batch)
+            unlim.submit_many(batch)
+            rep_p, rep_u = plain.tick(), unlim.tick()
+            assert ([_result_key(r) for r in rep_p.results]
+                    == [_result_key(r) for r in rep_u.results])
+        res_p = plain.run_until_idle()
+        res_u = unlim.run_until_idle()
+        assert ([_result_key(r) for r in res_p]
+                == [_result_key(r) for r in res_u])
+        np.testing.assert_array_equal(np.asarray(plain.bank.counts),
+                                      np.asarray(unlim.bank.counts))
+        # Same programs: the unlimited gateway never builds the private one.
+        assert unlim.trace_count <= 3
+        assert unlim._tick_query_private is None
+        # And the FIT path is identical too.
+        for gw in (plain, unlim):
+            gw.submit(FitRequest(rid=999, tenants=[0, 1], seed=3, steps=8))
+        fit_p = plain.tick().fits[0]
+        fit_u = unlim.tick().fits[0]
+        assert fit_u.status == "ok"
+        np.testing.assert_array_equal(np.asarray(fit_p.theta),
+                                      np.asarray(fit_u.theta))
+
+    def test_tiered_soak_bit_identical(self, params):
+        t, h = 5, 2
+        plain = TieredStormGateway(params, t, h, query_slots=8,
+                                   ingest_slots=16, promote_per_tick=2)
+        unlim = TieredStormGateway(params, t, h, query_slots=8,
+                                   ingest_slots=16, promote_per_tick=2,
+                                   privacy=ReleasePolicy.unlimited())
+        script = _soak_script(t, seed=2)
+        plain.submit_many(script)
+        unlim.submit_many(script)
+        res_p = plain.run_until_idle(max_ticks=500)
+        res_u = unlim.run_until_idle(max_ticks=500)
+        assert ([_result_key(r) for r in res_p]
+                == [_result_key(r) for r in res_u])
+        for tenant in range(t):
+            np.testing.assert_array_equal(
+                np.asarray(plain.sketch_of(tenant).counts),
+                np.asarray(unlim.sketch_of(tenant).counts))
+        assert unlim.trace_count <= 4
+        assert unlim.promotions > 0  # pressure was real
+
+    def test_sim_mesh_matches_meshless(self, params):
+        """eps = inf composes with the bank mesh exactly like privacy=None
+        (finite eps on a mesh is an explicit NotImplementedError)."""
+        devs = jax.devices()
+        if len(devs) < 2:
+            pytest.skip("needs >= 2 (simulated) devices")
+        t = len(devs)
+        mesh = Mesh(np.asarray(devs), ("bank",))
+        meshless = TieredStormGateway(params, t, t, query_slots=8,
+                                      ingest_slots=16,
+                                      privacy=ReleasePolicy.unlimited())
+        sharded = TieredStormGateway(params, t, t, query_slots=8,
+                                     ingest_slots=16, mesh=mesh,
+                                     privacy=ReleasePolicy.unlimited())
+        script = _soak_script(t, seed=3)
+        meshless.submit_many(script)
+        sharded.submit_many(script)
+        res_a = meshless.run_until_idle()
+        res_b = sharded.run_until_idle()
+        assert ([_result_key(r) for r in res_a]
+                == [_result_key(r) for r in res_b])
+        np.testing.assert_array_equal(
+            np.asarray(meshless.resident_bank.counts),
+            np.asarray(sharded.resident_bank.counts))
+
+    def test_finite_epsilon_on_mesh_rejected(self, params):
+        devs = jax.devices()
+        if len(devs) < 2:
+            pytest.skip("needs >= 2 (simulated) devices")
+        mesh = Mesh(np.asarray(devs), ("bank",))
+        with pytest.raises(NotImplementedError, match="mesh"):
+            TieredStormGateway(params, len(devs), len(devs), mesh=mesh,
+                               privacy=ReleasePolicy(epsilon_total=4.0))
+
+
+class TestReleaseWindows:
+    """One charged release per (tenant, counter-version)."""
+
+    def _gw(self, params, **pol):
+        pol.setdefault("epsilon_total", 1e6)
+        return StormGateway(params, 3, query_slots=8, ingest_slots=16,
+                            privacy=ReleasePolicy(**pol), privacy_seed=0)
+
+    def test_one_release_covers_the_ticks_coalesced_queries(self, params):
+        gw = self._gw(params)
+        z = _streams(3)
+        rids = itertools.count()
+        ticks = 4
+        for k in range(ticks):
+            for t in range(3):
+                gw.submit(IngestRequest(rid=next(rids), tenant=t,
+                                        z=z[t][:5]))
+                # THREE queries per tenant per tick -> still one release.
+                for _ in range(3):
+                    gw.submit(QueryRequest(rid=next(rids), tenant=t,
+                                           thetas=_theta(k)))
+            gw.tick()
+        gw.run_until_idle()
+        view = gw.private_view
+        assert view.releases == 3 * ticks
+        for t in range(3):
+            assert view.ledger.spent(t) == float(ticks)
+
+    def test_reread_of_unchanged_counters_is_free(self, params):
+        gw = self._gw(params)
+        rids = itertools.count()
+        gw.submit(IngestRequest(rid=next(rids), tenant=0,
+                                z=_streams(1)[0][:8]))
+        gw.tick()
+        th = _theta(7)
+        gw.submit(QueryRequest(rid=next(rids), tenant=0, thetas=th))
+        first = gw.run_until_idle()[0]
+        assert gw.private_view.releases == 1
+        # No ingest since: the window is open, the re-read is free AND
+        # bit-identical (same noise, same counters).
+        gw.submit(QueryRequest(rid=next(rids), tenant=0, thetas=th))
+        second = gw.run_until_idle()[0]
+        assert gw.private_view.releases == 1
+        assert gw.private_view.ledger.spent(0) == 1.0
+        np.testing.assert_array_equal(np.asarray(first.losses),
+                                      np.asarray(second.losses))
+
+    def test_empty_reads_never_charge(self, params):
+        gw = self._gw(params)
+        gw.submit(IngestRequest(rid=0, tenant=1, z=_streams(2)[1][:6]))
+        gw.tick()
+        gw.tick()
+        assert gw.private_view.releases == 0
+        assert gw.private_view.ledger.spent(1) == 0.0
+
+    def test_noise_actually_perturbs(self, params):
+        """Finite eps vs eps=inf on the same stream: losses must differ
+        (the mechanism is live, not a silent no-op)."""
+        res = {}
+        for name, pol in (("noisy", ReleasePolicy(epsilon_total=1e6,
+                                                  epsilon_release=0.5)),
+                          ("clean", None)):
+            gw = StormGateway(params, 1, query_slots=8, ingest_slots=16,
+                              privacy=pol, privacy_seed=0)
+            gw.submit(IngestRequest(rid=0, tenant=0,
+                                    z=_streams(1)[0][:20]))
+            gw.submit(QueryRequest(rid=1, tenant=0, thetas=_theta(11)))
+            res[name] = np.asarray(gw.run_until_idle()[0].losses)
+        assert not np.array_equal(res["noisy"], res["clean"])
+
+
+class TestExhaustion:
+    def test_refusal_is_deterministic_and_isolated(self, params):
+        """Tenant 0 forces a new release every tick (ingest each tick);
+        tenant 1 ingests once, so its open window serves free re-reads.
+        After the budget's two releases tenant 0 is refused EVERY
+        subsequent tick while tenant 1 keeps getting "ok" results in the
+        same ticks."""
+        gw = StormGateway(params, 2, query_slots=8, ingest_slots=16,
+                          privacy=ReleasePolicy(epsilon_total=2.0),
+                          privacy_seed=1)
+        z = _streams(2)
+        rids = itertools.count()
+        status_by_tick = []
+        for k in range(5):
+            gw.submit(IngestRequest(rid=next(rids), tenant=0, z=z[0][:4]))
+            if k == 0:
+                gw.submit(IngestRequest(rid=next(rids), tenant=1,
+                                        z=z[1][:6]))
+            q0 = next(rids)
+            gw.submit(QueryRequest(rid=q0, tenant=0, thetas=_theta(k)))
+            q1 = next(rids)
+            gw.submit(QueryRequest(rid=q1, tenant=1, thetas=_theta(k)))
+            done = {r.rid: r for r in gw.tick().results}
+            done.update({r.rid: r for r in gw.run_until_idle()})
+            status_by_tick.append((done[q0].status, done[q1].status,
+                                   np.asarray(done[q0].losses)))
+        statuses_0 = [s for s, _, _ in status_by_tick]
+        assert statuses_0 == ["ok", "ok", "refused", "refused", "refused"]
+        assert all(s == "ok" for _, s, _ in status_by_tick)
+        for _, _, losses in status_by_tick[2:]:
+            assert not losses.any()  # refusals carry zeros, typed
+        assert gw.queries_refused == 3
+        assert gw.private_view.ledger.remaining(0) == 0.0
+        assert gw.private_view.ledger.spent(1) == 1.0
+        stats = gw.queue_stats()["privacy"]
+        assert stats["exhausted"] == [0] and stats["queries_refused"] == 3
+
+    def test_stale_policy_freezes_the_last_release(self, params):
+        """on_exhaust="stale": the exhausted tenant keeps being served from
+        its LAST charged release — same thetas give bit-identical losses
+        tick after tick, even though ingest keeps advancing the live
+        counters underneath."""
+        gw = StormGateway(params, 1, query_slots=8, ingest_slots=16,
+                          privacy=ReleasePolicy(epsilon_total=1.0,
+                                                on_exhaust="stale"),
+                          privacy_seed=2)
+        z = _streams(1)[0]
+        th = _theta(21)
+        rids = itertools.count()
+
+        def one_round(k):
+            gw.submit(IngestRequest(rid=next(rids), tenant=0,
+                                    z=z[4 * k:4 * k + 4]))
+            q = next(rids)
+            gw.submit(QueryRequest(rid=q, tenant=0, thetas=th))
+            done = {r.rid: r for r in gw.run_until_idle()}
+            return done[q]
+
+        fresh = one_round(0)
+        assert fresh.status == "ok"
+        stale = [one_round(k) for k in range(1, 4)]
+        assert [r.status for r in stale] == ["stale"] * 3
+        for r in stale:
+            np.testing.assert_array_equal(np.asarray(r.losses),
+                                          np.asarray(fresh.losses))
+        assert gw.private_view.releases == 1
+        assert gw.queries_refused == 0
+
+    def test_refused_fit_refuses_the_whole_cohort(self, params):
+        gw = StormGateway(params, 2, query_slots=8, ingest_slots=16,
+                          privacy=ReleasePolicy(epsilon_total=1.0),
+                          privacy_seed=3)
+        z = _streams(2)
+        gw.submit(IngestRequest(rid=0, tenant=0, z=z[0][:8]))
+        gw.submit(IngestRequest(rid=1, tenant=1, z=z[1][:8]))
+        gw.submit(QueryRequest(rid=2, tenant=0, thetas=_theta(1)))
+        gw.run_until_idle()  # tenant 0 spends its single release
+        gw.submit(IngestRequest(rid=3, tenant=0, z=z[0][8:12]))
+        gw.tick()  # closes tenant 0's window
+        gw.submit(FitRequest(rid=4, tenants=[0, 1], seed=0, steps=5))
+        rep = gw.tick()
+        fit = rep.fits[0]
+        assert fit.status == "refused"
+        assert not np.asarray(fit.theta).any()
+        assert gw.fits_refused == 1
+        # Tenant 1 alone still fits fine (its window spend is affordable).
+        gw.submit(FitRequest(rid=5, tenants=[1], seed=0, steps=5))
+        assert gw.tick().fits[0].status == "ok"
+
+    def test_private_fit_trains_from_released_counters(self, params):
+        """A private fit must consume the RELEASED (noisy) counters: with a
+        wide-open budget its theta differs from the clean fit's, and the
+        spend is one release per cohort member."""
+        clean = StormGateway(params, 2, query_slots=8, ingest_slots=16)
+        noisy = StormGateway(params, 2, query_slots=8, ingest_slots=16,
+                             privacy=ReleasePolicy(epsilon_total=1e6,
+                                                   epsilon_release=0.5),
+                             privacy_seed=4)
+        z = _streams(2)
+        for gw in (clean, noisy):
+            gw.submit(IngestRequest(rid=0, tenant=0, z=z[0]))
+            gw.submit(IngestRequest(rid=1, tenant=1, z=z[1]))
+            gw.run_until_idle()
+            gw.submit(FitRequest(rid=2, tenants=[0, 1], seed=0, steps=8))
+        fit_c = clean.tick().fits[0]
+        fit_n = noisy.tick().fits[0]
+        assert fit_n.status == "ok"
+        assert fit_n.theta.shape == fit_c.theta.shape
+        assert not np.array_equal(np.asarray(fit_n.theta),
+                                  np.asarray(fit_c.theta))
+        assert noisy.private_view.ledger.spent(0) == 0.5
+        assert noisy.private_view.ledger.spent(1) == 0.5
+
+
+class TestTraceBudgets:
+    def test_flat_private_traffic_traces_at_most_four(self, params):
+        gw = StormGateway(params, 3, query_slots=8, ingest_slots=16,
+                          privacy=ReleasePolicy(epsilon_total=8.0,
+                                                on_exhaust="stale"),
+                          privacy_seed=5)
+        gw.submit_many(_soak_script(3, seed=4))
+        gw.submit(FitRequest(rid=10_000, tenants=[0, 1], seed=0, steps=5))
+        gw.run_until_idle(max_ticks=200)
+        assert gw.trace_count <= 4, (
+            f"private flat gateway recompiled: {gw.trace_count} traces")
+        assert gw.private_view.releases > 0  # the private program ran
+
+    def test_tiered_private_churn_traces_at_most_five(self, params):
+        gw = TieredStormGateway(params, 5, 2, query_slots=8,
+                                ingest_slots=16, promote_per_tick=2,
+                                privacy=ReleasePolicy(epsilon_total=8.0,
+                                                      on_exhaust="stale"),
+                                privacy_seed=6)
+        script = _soak_script(5, seed=5)
+        gw.submit_many(script)
+        results = gw.run_until_idle(max_ticks=500)
+        want_rids = {r.rid for r in script if isinstance(r, QueryRequest)}
+        assert {r.rid for r in results} == want_rids  # each exactly once
+        assert gw.trace_count <= 5, (
+            f"private tiered gateway recompiled: {gw.trace_count} traces")
+        assert gw.promotions > 0 and gw.demotions > 0
+        # Budgets are GLOBAL: ledger keys are tenant ids, never slots
+        # (5 tenants on 2 slots would alias immediately in slot space).
+        assert set(gw.private_view.ledger.keys()) <= set(range(5))
+        assert len(gw.private_view.ledger.keys()) == 5
+
+
+class TestWireBudgetFrames:
+    def _server(self, params, **pol):
+        gw = StormGateway(params, 2, query_slots=4, ingest_slots=16,
+                          privacy=ReleasePolicy(**pol), privacy_seed=7)
+        return StormWireServer(gw, port=0).start(), gw
+
+    def test_budget_exceeded_is_terminal_and_budget_frame_reports(
+            self, params):
+        server, gw = self._server(params, epsilon_total=1.0)
+        client = StormWireClient(*server.address)
+        try:
+            z = _streams(1)[0]
+            client.ingest(0, 0, z[:8])
+            assert client.recv()[0]["type"] == "ingest_ok"
+            client.query_sync(1, 0, _theta(1))  # spends the only release
+            client.ingest(2, 0, z[8:12])  # closes the window
+            assert client.recv()[0]["type"] == "ingest_ok"
+            with pytest.raises(BudgetExceeded) as exc:
+                client.query_sync(3, 0, _theta(2))
+            assert exc.value.header["retryable"] is False
+            assert exc.value.header["scope"] == "query"
+            assert exc.value.header["tenant"] == 0
+            budget = client.budget()
+            assert budget["spent"] == {"0": 1.0}
+            assert budget["remaining"] == {"0": 0.0}
+            assert budget["exhausted"] == [0]
+            # Refused fits carry the cohort and scope "fit".
+            with pytest.raises(BudgetExceeded) as exc:
+                client.fit_sync(4, [0, 1], steps=5)
+            assert exc.value.header["scope"] == "fit"
+            assert exc.value.header["tenants"] == [0, 1]
+        finally:
+            client.close()
+            server.stop()
+
+    def test_stale_results_are_flagged_on_the_wire(self, params):
+        server, gw = self._server(params, epsilon_total=1.0,
+                                  on_exhaust="stale")
+        client = StormWireClient(*server.address)
+        try:
+            z = _streams(1)[0]
+            client.ingest(0, 0, z[:8])
+            assert client.recv()[0]["type"] == "ingest_ok"
+            client.query_sync(1, 0, _theta(1))
+            client.ingest(2, 0, z[8:12])
+            assert client.recv()[0]["type"] == "ingest_ok"
+            client.query(3, 0, _theta(2))
+            header, losses = client.recv()
+            assert header["type"] == "result"
+            assert header["stale"] is True
+            assert losses is not None
+        finally:
+            client.close()
+            server.stop()
+
+    def test_budget_frame_none_without_policy(self, params):
+        gw = StormGateway(params, 2, query_slots=4, ingest_slots=16)
+        server = StormWireServer(gw, port=0).start()
+        client = StormWireClient(*server.address)
+        try:
+            assert client.budget() is None
+        finally:
+            client.close()
+            server.stop()

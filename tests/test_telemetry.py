@@ -31,7 +31,7 @@ from repro.serve.tiered_gateway import TieredStormGateway
 from repro.serve.wire import StormWireClient, StormWireServer
 from repro.telemetry import (
     DriftMonitor, TapBatch, TapConfig, TelemetryBridge, counter_distance,
-    probe_target, window_delta,
+    counter_kl, probe_target, window_delta,
 )
 from repro.telemetry.taps import tapped_decode_fn
 
@@ -314,6 +314,61 @@ class TestDriftMonitor:
         assert counter_distance(a, 0, a, 4) == 0.0  # no evidence != drift
         b = np.asarray([[0, 0, 4, 4], [2, 2, 2, 2]], np.int64)
         assert counter_distance(a, 4, b, 4) == pytest.approx(0.5)
+
+    def test_counter_kl_basics(self):
+        a = np.asarray([[4, 4, 0, 0], [2, 2, 2, 2]], np.int64)
+        assert counter_kl(a, 4, a, 4) == 0.0
+        assert counter_kl(a, 0, a, 4) == 0.0  # no evidence != drift
+        b = np.asarray([[0, 0, 4, 4], [2, 2, 2, 2]], np.int64)
+        kl_ab = counter_kl(a, 4, b, 4)
+        assert np.isfinite(kl_ab) and kl_ab > 0.0
+        # Symmetric by construction.
+        assert counter_kl(b, 4, a, 4) == pytest.approx(kl_ab)
+        # Mass into untouched buckets scores sharper than a mild shuffle:
+        # the smoothed log-ratio blows up where the reference had nothing.
+        c = np.asarray([[3, 5, 0, 0], [2, 2, 2, 2]], np.int64)
+        assert kl_ab > counter_kl(a, 4, c, 4)
+
+    def test_kl_score_flags_shift_tv_default_bit_exact(
+            self, setup, pcfg, gparams):
+        """score="kl" is a drop-in: quiet on the null, flags the shift;
+        score="tv" (the default) is bit-exactly counter_distance over the
+        tracked reference and window deltas."""
+        cfg, _ = setup
+
+        def drive(score):
+            gw = StormGateway(gparams, tenants=1, ingest_slots=4096)
+            bridge = TelemetryBridge(gw, pcfg, auto_flush=False)
+            sink = bridge.register(TapConfig(model="m", layers=(0,)), cfg)
+            mon = DriftMonitor(bridge, reference_windows=1,
+                               calibration_windows=3, score=score)
+            snaps = []
+            for w in range(7):
+                _push(sink, cfg, 200, seed=100 + w, step=w)
+                bridge.flush()
+                snaps.append(np.asarray(gw.sketch_of(0).counts, np.int64))
+            assert not mon.status()["any_flagged"]
+            _push(sink, cfg, 200, seed=999, loc=2.0, step=99)
+            bridge.flush()
+            snaps.append(np.asarray(gw.sketch_of(0).counts, np.int64))
+            return mon, snaps
+
+        mon_kl, _ = drive("kl")
+        assert mon_kl.status()["any_flagged"]
+        assert mon_kl.status()["score"] == "kl"
+        mon_tv, snaps = drive("tv")
+        assert mon_tv.status()["any_flagged"]
+        assert mon_tv.status()["score"] == "tv"
+        # Replay the last window's delta by hand: the first flush is the
+        # snapshot, the second is the single reference window, every
+        # window adds exactly 200 rows, and last_score must match
+        # bit-for-bit.
+        tr = mon_tv._tracks[0]
+        want = counter_distance(snaps[1] - snaps[0], 200,
+                                snaps[-1] - snaps[-2], 200, paired=True)
+        assert tr.last_score == want
+        with pytest.raises(ValueError, match="unknown score"):
+            DriftMonitor(mon_tv.bridge, score="js")
 
     def test_window_delta_is_the_window_sketch(self):
         prev = np.asarray([[3, 1]], np.int32)
